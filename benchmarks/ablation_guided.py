@@ -1,0 +1,27 @@
+"""Ablation: the paper's 'intertwined evolving process' (Alg. 3 line 7 calls
+GK-means, not just a random tree).  guided=False drops the graph-guided BKM
+pass, leaving pure randomized equal-size partitions (EFANNA-style)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import brute_force_knn, build_knn_graph, recall_top1
+from repro.data import gmm_blobs
+
+
+def run(quick: bool = True):
+    n, d = (16384, 64) if quick else (100_000, 128)
+    X = gmm_blobs(jax.random.PRNGKey(0), n, d, 256)
+    gt = brute_force_knn(X, 16, chunk=2048)
+    rows = []
+    for tau in (2, 4):
+        for guided in (False, True):
+            t0 = time.time()
+            g = build_knn_graph(X, 16, xi=64, tau=tau,
+                                key=jax.random.PRNGKey(1), guided=guided)
+            rec = float(recall_top1(g.ids, gt))
+            rows.append((f"ablation/tau={tau}/guided={guided}",
+                         (time.time() - t0) * 1e6, f"recall@1={rec:.3f}"))
+    return rows

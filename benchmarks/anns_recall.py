@@ -1,0 +1,39 @@
+"""Paper §4.3: ANN search on the Alg.-3 graph — recall vs query latency."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_knn_graph, graph_search, nn_descent
+from repro.data import gmm_blobs
+
+
+def run(quick: bool = True):
+    n, d = (32768, 64) if quick else (1_000_000, 128)
+    X = gmm_blobs(jax.random.PRNGKey(0), n, d, 512)
+    nq = 256
+    q = X[:nq] + 0.05 * jax.random.normal(jax.random.PRNGKey(9), (nq, d))
+    dd = jnp.sum((q[:, None, :] - X[None]) ** 2, -1)
+    true1 = jnp.argmin(dd, 1)
+
+    rows = []
+    for name, g in (
+        ("alg3", build_knn_graph(X, 16, xi=64, tau=5,
+                                 key=jax.random.PRNGKey(1))),
+        ("nn-descent", nn_descent(X, 16, iters=8,
+                                  key=jax.random.PRNGKey(2))),
+    ):
+        for ef, iters in ((16, 12), (32, 24), (64, 48)):
+            f = jax.jit(lambda qq: graph_search(X, g.ids, qq, topk=1,
+                                                ef=ef, iters=iters))
+            ids, _ = f(q)
+            t0 = time.perf_counter()
+            ids, _ = f(q)
+            jax.block_until_ready(ids)
+            us_per_q = (time.perf_counter() - t0) * 1e6 / nq
+            rec = float(jnp.mean((ids[:, 0] == true1).astype(jnp.float32)))
+            rows.append((f"anns/{name}/ef={ef}", us_per_q,
+                         f"recall@1={rec:.3f}"))
+    return rows

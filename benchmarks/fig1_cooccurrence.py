@@ -1,0 +1,38 @@
+"""Paper Fig. 1: co-occurrence rate of a sample and its j-th NN in one
+cluster, for k-means clusters and 2M-tree clusters (cluster size ~= 50)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import (brute_force_knn, cooccurrence_rate, lloyd,
+                        two_means_tree)
+from repro.data import gmm_blobs
+
+
+def run(quick: bool = True):
+    n, d = (32768, 64) if quick else (100_000, 128)
+    xi = 64                      # cluster size (paper: 50)
+    k = n // xi
+    X = gmm_blobs(jax.random.PRNGKey(0), n, d, 256)
+    gt = brute_force_knn(X, 10, chunk=2048)
+
+    rows = []
+    t0 = time.perf_counter()
+    a2m = two_means_tree(X, k, jax.random.PRNGKey(1))
+    t_2m = (time.perf_counter() - t0) * 1e6
+    r = cooccurrence_rate(a2m, gt)
+    rows.append(("fig1/2mtree", t_2m,
+                 "rates@1..10=" + "|".join(f"{float(x):.3f}" for x in r)))
+
+    t0 = time.perf_counter()
+    al, _, _ = lloyd(X, k, iters=10, key=jax.random.PRNGKey(2),
+                     init="random")
+    t_l = (time.perf_counter() - t0) * 1e6
+    r = cooccurrence_rate(al, gt)
+    rows.append(("fig1/kmeans", t_l,
+                 "rates@1..10=" + "|".join(f"{float(x):.3f}" for x in r)))
+    chance = xi / n
+    rows.append(("fig1/chance", 0.0, f"random_collision={chance:.5f}"))
+    return rows

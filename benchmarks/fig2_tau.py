@@ -1,0 +1,29 @@
+"""Paper Fig. 2: KNN-graph recall and clustering distortion vs tau — the
+intertwined evolving process of Alg. 3."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import (brute_force_knn, build_knn_graph, distortion,
+                        gk_means, recall_top1)
+from repro.data import gmm_blobs
+
+
+def run(quick: bool = True):
+    n, d, k = (16384, 64, 256) if quick else (100_000, 128, 2000)
+    X = gmm_blobs(jax.random.PRNGKey(0), n, d, 256)
+    gt = brute_force_knn(X, 16, chunk=2048)
+
+    rows = []
+    for tau in (1, 2, 3, 5, 8):
+        t0 = time.perf_counter()
+        g = build_knn_graph(X, 16, xi=64, tau=tau, key=jax.random.PRNGKey(1))
+        t_us = (time.perf_counter() - t0) * 1e6
+        rec = float(recall_top1(g.ids, gt))
+        res = gk_means(X, k, kappa=16, iters=8, key=jax.random.PRNGKey(2),
+                       graph=g)
+        rows.append((f"fig2/tau={tau}", t_us,
+                     f"recall@1={rec:.3f};distortion={res.distortion:.4f}"))
+    return rows

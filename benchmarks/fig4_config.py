@@ -1,0 +1,43 @@
+"""Paper Fig. 4 configuration test: Alg. 2 under three configurations —
+standard GK-means (BKM core + Alg.3 graph), GK-means* (traditional-k-means
+core), KGraph+GK-means (NN-Descent graph)."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import (brute_force_knn, gk_means, nn_descent, recall_top1)
+from repro.data import gmm_blobs
+
+
+def run(quick: bool = True):
+    n, d, k = (16384, 64, 256) if quick else (1_000_000, 128, 10_000)
+    X = gmm_blobs(jax.random.PRNGKey(0), n, d, 256)
+    gt = brute_force_knn(X, 16, chunk=2048)
+    ks = dict(kappa=16, xi=64, tau=5, iters=10)
+
+    rows = []
+    t0 = time.perf_counter()
+    std = gk_means(X, k, **ks, key=jax.random.PRNGKey(1), mode="bkm")
+    t_std = (time.perf_counter() - t0) * 1e6
+    rec = float(recall_top1(std.graph.ids, gt))
+    rows.append(("fig4/GK-means", t_std,
+                 f"distortion={std.distortion:.4f};graph_recall={rec:.3f}"))
+
+    t0 = time.perf_counter()
+    llo = gk_means(X, k, **ks, key=jax.random.PRNGKey(1), mode="lloyd",
+                   graph=std.graph)
+    t_l = (time.perf_counter() - t0) * 1e6
+    rows.append(("fig4/GK-means*(lloyd-core)", t_l,
+                 f"distortion={llo.distortion:.4f}"))
+
+    t0 = time.perf_counter()
+    g = nn_descent(X, 16, iters=8, key=jax.random.PRNGKey(2))
+    kg = gk_means(X, k, kappa=16, iters=10, key=jax.random.PRNGKey(1),
+                  graph=g)
+    t_kg = (time.perf_counter() - t0) * 1e6
+    rec = float(recall_top1(g.ids, gt))
+    rows.append(("fig4/KGraph+GK-means", t_kg,
+                 f"distortion={kg.distortion:.4f};graph_recall={rec:.3f}"))
+    return rows

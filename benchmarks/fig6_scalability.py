@@ -1,0 +1,69 @@
+"""Paper Fig. 6/7: scalability (a) in n at fixed k, (b) in k at fixed n.
+The paper's headline: GK-means epoch cost is ~independent of k while
+k-means/BKM scale linearly in k."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import (bkm, build_knn_graph, distortion, graph_candidates,
+                        init_state, lloyd, minibatch_kmeans, two_means_tree)
+from repro.data import gmm_blobs
+import jax.numpy as jnp
+
+
+def _gk_total(X, k, kappa, key, iters=8):
+    t0 = time.perf_counter()
+    g = build_knn_graph(X, kappa, xi=64, tau=4, key=key)
+    a0 = two_means_tree(X, k, key)
+    st = init_state(X, a0, k)
+    cand = graph_candidates(jnp.maximum(g.ids, 0))
+    for t in range(iters):
+        st = bkm.bkm_epoch(X, st, cand, 1024, jax.random.fold_in(key, t))
+    jax.block_until_ready(st.assign)
+    return time.perf_counter() - t0, float(distortion(X, st.assign, k))
+
+
+def run(quick: bool = True):
+    d = 64
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    # (a) vary n, fixed k=1024 (paper: 10K..10M, k=1024)
+    for n in ((8192, 32768, 131072) if quick else (65536, 262144, 1048576)):
+        X = gmm_blobs(key, n, d, 256)
+        t_gk, d_gk = _gk_total(X, 1024, 16, key)
+        t0 = time.perf_counter()
+        _, _, hl = lloyd(X, 1024, iters=8, key=key, init="random")
+        t_l = time.perf_counter() - t0
+        rows.append((f"fig6a/n={n}", t_gk * 1e6,
+                     f"gk_s={t_gk:.1f};gk_dist={d_gk:.4f};"
+                     f"lloyd_s={t_l:.1f};lloyd_dist={hl[-1]:.4f}"))
+
+    # (b) vary k, fixed n (paper: k=1024..8192, n=1M)
+    n = 32768 if quick else 1048576
+    X = gmm_blobs(key, n, d, 256)
+    g = build_knn_graph(X, 16, xi=64, tau=4, key=key)
+    cand = graph_candidates(jnp.maximum(g.ids, 0))
+    for k in (1024, 2048, 4096, 8192):
+        a0 = two_means_tree(X, k, key)
+        st = init_state(X, a0, k)
+        st = bkm.bkm_epoch(X, st, cand, 1024, key)  # compile
+        t0 = time.perf_counter()
+        for t in range(3):
+            st = bkm.bkm_epoch(X, st, cand, 1024, jax.random.fold_in(key, t))
+        jax.block_until_ready(st.assign)
+        t_ep = (time.perf_counter() - t0) / 3
+        # full-BKM epoch for contrast (linear in k)
+        stf = init_state(X, a0, k)
+        stf = bkm.bkm_full_epoch(X, stf, 1024, key)
+        t0 = time.perf_counter()
+        stf = bkm.bkm_full_epoch(X, stf, 1024, key)
+        jax.block_until_ready(stf.assign)
+        t_full = time.perf_counter() - t0
+        rows.append((f"fig6b/k={k}", t_ep * 1e6,
+                     f"gk_epoch_s={t_ep:.2f};full_bkm_epoch_s={t_full:.2f};"
+                     f"speedup={t_full / t_ep:.1f}x;"
+                     f"dist={float(distortion(X, st.assign, k)):.4f}"))
+    return rows

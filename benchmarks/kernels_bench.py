@@ -1,0 +1,32 @@
+"""Kernel micro-benchmarks: hot-spot ops vs their jnp references (CPU runs
+the reference path; on TPU the same harness times the Pallas kernels)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.data import gmm_blobs
+from repro.kernels import ops, ref
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    B, m, d = (256, 64, 128) if quick else (2048, 64, 512)
+    Xb = gmm_blobs(key, B * m, d, 8).reshape(B, m, d)
+    f = jax.jit(lambda x: ops.pairwise_sq(x))
+    us = timed(f, Xb)
+    flops = 2.0 * B * m * m * d
+    rows.append((f"kernel/pairwise_sq(B={B},m={m},d={d})", us,
+                 f"gflops={flops / us / 1e3:.1f}"))
+
+    n, k = (65536, 4096) if quick else (1_000_000, 10_000)
+    X = gmm_blobs(key, n, d, 8)
+    C = gmm_blobs(jax.random.fold_in(key, 1), k, d, 8)
+    f = jax.jit(lambda x, c: ops.assign_centroids(x, c)[0])
+    us = timed(f, X, C)
+    flops = 2.0 * n * k * d
+    rows.append((f"kernel/assign_centroids(n={n},k={k},d={d})", us,
+                 f"gflops={flops / us / 1e3:.1f}"))
+    return rows

@@ -1,0 +1,55 @@
+"""Beyond-paper: clustered-KV decode attention (paper's insight -> serving).
+
+Compares full decode attention over an S-long KV cache against attending to
+the top-c clusters only (keys touched drops from S to c*cap)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timed
+from repro.core.kv_cluster import (build_kv_clusters, candidate_recall,
+                                   clustered_decode_attention)
+from repro.models.attention import decode_attention
+
+
+def run(quick: bool = True):
+    key = jax.random.PRNGKey(0)
+    B, S, Hkv, G, hd = (4, 8192, 4, 4, 64) if quick else (16, 32768, 8, 8,
+                                                          128)
+    kc, top_c = S // 64, 8  # cap = 2*64 -> c*cap = 1024 keys/head
+    centers = jax.random.normal(key, (B, 64, Hkv, hd)) * 2.0
+    which = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, 64)
+    k_cache = (centers[jnp.arange(B)[:, None], which]
+               + 0.3 * jax.random.normal(jax.random.fold_in(key, 2),
+                                         (B, S, Hkv, hd))).astype(jnp.bfloat16)
+    v_cache = jax.random.normal(jax.random.fold_in(key, 3),
+                                (B, S, Hkv, hd), jnp.bfloat16)
+    tgt = jax.random.randint(jax.random.fold_in(key, 6), (B, Hkv * G), 0, S)
+    picked = k_cache[jnp.arange(B)[:, None], tgt,
+                     jnp.arange(Hkv * G)[None] // G].astype(jnp.float32)
+    q = (2.0 * picked)[:, None].astype(jnp.bfloat16)
+
+    ln = jnp.asarray(S)
+    full = jax.jit(lambda q: decode_attention(q, k_cache, v_cache, ln))
+    us_full = timed(full, q)
+
+    clusters = build_kv_clusters(k_cache, kc=kc, key=jax.random.fold_in(
+        key, 5))
+    clustered = jax.jit(lambda q: clustered_decode_attention(
+        q, k_cache, v_cache, clusters, ln, top_c=top_c))
+    us_c = timed(clustered, q)
+    rec = float(candidate_recall(q, k_cache, clusters, ln, top_c))
+    touched = top_c * clusters.table.shape[-1]
+    # roofline-relevant: HBM bytes for the cache read per decode step
+    bytes_full = Hkv * S * hd * 2 * 2
+    bytes_clus = Hkv * G * touched * hd * 2 * 2
+    return [
+        (f"kvcluster/full(S={S})", us_full,
+         f"keys_touched={S};cache_bytes={bytes_full}"),
+        (f"kvcluster/top{top_c}of{kc}", us_c,
+         f"keys_touched={touched};cache_bytes={bytes_clus};"
+         f"hbm_reduction={bytes_full/bytes_clus:.1f}x;"
+         f"top1_recall={rec:.3f};"
+         "cpu_us_is_gather-bound—see_EXPERIMENTS"),
+    ]

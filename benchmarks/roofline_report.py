@@ -1,0 +1,35 @@
+"""Roofline report: reads results/dryrun.json (the 512-device dry-run output)
+and emits one row per (arch x shape x mesh) cell with the three terms."""
+from __future__ import annotations
+
+import json
+import os
+
+
+def run(quick: bool = True, path: str = "results/dryrun.json"):
+    rows = []
+    if not os.path.exists(path):
+        rows.append(("roofline/missing", 0.0,
+                     f"run `python -m repro.launch.dryrun --out {path}`"))
+        return rows
+    with open(path) as f:
+        results = json.load(f)
+    for r in sorted(results, key=lambda r: (r["arch"], r["shape"],
+                                            r["mesh"])):
+        name = f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+        if r["status"] == "skipped":
+            rows.append((name, 0.0, "skipped(full-attention@500k)"))
+            continue
+        if r["status"] != "ok":
+            rows.append((name, 0.0, f"ERROR:{r.get('error', '?')[:80]}"))
+            continue
+        t = r["roofline"]
+        dom = t["bottleneck"]
+        us = max(t["compute_s"], t["memory_s"], t["collective_s"]) * 1e6
+        rows.append((name, us,
+                     f"compute_s={t['compute_s']:.3e};"
+                     f"memory_s={t['memory_s']:.3e};"
+                     f"collective_s={t['collective_s']:.3e};"
+                     f"bottleneck={dom};"
+                     f"useful_ratio={t.get('useful_ratio') or 0:.3f}"))
+    return rows

@@ -1,0 +1,64 @@
+"""Approximate nearest-neighbour search over the constructed KNN graph
+(paper §4.3: "satisfactory performance ... on ANNS tasks").
+
+Greedy best-first search with a fixed-size pool (static shapes, vmapped over
+queries): repeatedly expand the best unvisited pool entry's neighbours.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnums=(3, 4, 5))
+def graph_search(X: jax.Array, ids: jax.Array, queries: jax.Array,
+                 topk: int = 10, ef: int = 32, iters: int = 24):
+    """Returns (ids (q, topk), d2 (q, topk)).
+
+    ef: pool width; iters: expansion rounds (each expands one pool entry).
+    """
+    n, kappa = ids.shape
+    Xf = X.astype(jnp.float32)
+    ids = jnp.maximum(ids, 0)
+
+    def one(q, seed_key):
+        # navigability: a pure KNN graph has no long-range links, so seed the
+        # pool with the best `ef` of a larger random sample (cheap beacons).
+        cand0 = jax.random.randint(seed_key, (8 * ef,), 0, n, dtype=jnp.int32)
+
+        def dist(rows):
+            diff = Xf[rows] - q[None, :]
+            return jnp.sum(diff * diff, axis=-1)
+
+        d0 = dist(cand0)
+        order0 = jnp.argsort(d0)[:ef]
+        pool_id = cand0[order0]
+        pool_d = d0[order0]
+        pool_vis = jnp.zeros((ef,), bool)
+
+        def body(_, carry):
+            pool_id, pool_d, pool_vis = carry
+            # best unvisited
+            masked = jnp.where(pool_vis, jnp.inf, pool_d)
+            b = jnp.argmin(masked)
+            pool_vis = pool_vis.at[b].set(True)
+            nbrs = ids[pool_id[b]]                       # (kappa,)
+            nd = dist(nbrs)
+            # drop neighbours already in pool
+            dup = (nbrs[:, None] == pool_id[None, :]).any(-1)
+            nd = jnp.where(dup, jnp.inf, nd)
+            all_id = jnp.concatenate([pool_id, nbrs])
+            all_d = jnp.concatenate([pool_d, nd])
+            all_vis = jnp.concatenate([pool_vis, jnp.zeros((kappa,), bool)])
+            order = jnp.argsort(all_d)[:ef]
+            return all_id[order], all_d[order], all_vis[order]
+
+        pool_id, pool_d, _ = jax.lax.fori_loop(
+            0, iters, body, (pool_id, pool_d, pool_vis))
+        order = jnp.argsort(pool_d)[:topk]
+        return pool_id[order], pool_d[order]
+
+    keys = jax.random.split(jax.random.PRNGKey(0), queries.shape[0])
+    return jax.vmap(one)(queries.astype(jnp.float32), keys)

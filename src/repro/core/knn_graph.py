@@ -1,0 +1,228 @@
+"""KNN-graph construction by iteratively calling fast k-means (paper Alg. 3).
+
+Per round (x tau): partition the data into equal-capacity clusters of size ~xi
+with a randomized 2M tree, optionally improve the partition with one
+graph-guided BKM pass (the "intertwined evolving" step), then brute-force
+pairwise distances *within* each cluster and merge the results into every
+member's top-kappa list.
+
+TPU adaptations (DESIGN.md §2):
+  * clusters live in a fixed-capacity (k0, cap) member table (cap = 2*xi by
+    default); the BKM pass can drift sizes, members beyond cap are simply not
+    refined this round (rare, counted);
+  * the KNN-list update is a sort-based dedupe merge with static shapes;
+  * n is padded to k0 * xi with phantom copies of random rows; phantoms proxy
+    for their source row (`pad_src`) and are dropped from the result.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bkm
+from repro.core.two_means import two_means_tree
+from repro.kernels import ops as kops
+
+INF = jnp.float32(jnp.inf)
+
+
+class KnnGraph(NamedTuple):
+    ids: jax.Array   # (n, kappa) int32 neighbour ids, sorted by distance
+    dist: jax.Array  # (n, kappa) float32 squared L2
+
+
+# ---------------------------------------------------------------------------
+# utilities
+# ---------------------------------------------------------------------------
+
+def random_graph(key: jax.Array, n: int, kappa: int) -> jax.Array:
+    """Random neighbour ids, guaranteed != self."""
+    r = jax.random.randint(key, (n, kappa), 0, n - 1, dtype=jnp.int32)
+    own = jnp.arange(n, dtype=jnp.int32)[:, None]
+    return jnp.where(r >= own, r + 1, r)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def graph_distances(X: jax.Array, ids: jax.Array, chunk: int = 4096
+                    ) -> jax.Array:
+    """Exact squared distances along graph edges, chunked over rows."""
+    n, kappa = ids.shape
+
+    def body(args):
+        xb, idb = args
+        nb = X[idb].astype(jnp.float32)            # (c, kappa, d)
+        diff = nb - xb.astype(jnp.float32)[:, None, :]
+        return jnp.sum(diff * diff, axis=-1)
+
+    if n % chunk == 0 and n > chunk:
+        out = jax.lax.map(body, (X.reshape(n // chunk, chunk, -1),
+                                 ids.reshape(n // chunk, chunk, kappa)))
+        return out.reshape(n, kappa)
+    return body((X, ids))
+
+
+def merge_topk(g_ids: jax.Array, g_d: jax.Array, c_ids: jax.Array,
+               c_d: jax.Array, kappa: int) -> Tuple[jax.Array, jax.Array]:
+    """Merge candidate lists into top-kappa lists with id-dedupe.
+
+    All args (..., L*) — returns (..., kappa) sorted by distance.  Duplicate
+    ids keep their best distance; invalid entries are marked id=-1/dist=inf.
+    """
+    ids = jnp.concatenate([g_ids, c_ids], axis=-1)
+    d = jnp.concatenate([g_d, c_d], axis=-1)
+    d = jnp.where(ids < 0, INF, d)
+
+    # sort by distance first, then stable-sort by id: equal ids end up adjacent
+    # and distance-ascending; mark all but the first as duplicates.
+    o1 = jnp.argsort(d, axis=-1)
+    ids1 = jnp.take_along_axis(ids, o1, axis=-1)
+    d1 = jnp.take_along_axis(d, o1, axis=-1)
+    o2 = jnp.argsort(ids1, axis=-1, stable=True)
+    ids2 = jnp.take_along_axis(ids1, o2, axis=-1)
+    d2 = jnp.take_along_axis(d1, o2, axis=-1)
+    dup = jnp.concatenate(
+        [jnp.zeros_like(ids2[..., :1], dtype=bool),
+         ids2[..., 1:] == ids2[..., :-1]], axis=-1)
+    d2 = jnp.where(dup | (ids2 < 0), INF, d2)
+
+    o3 = jnp.argsort(d2, axis=-1)
+    ids3 = jnp.take_along_axis(ids2, o3, axis=-1)[..., :kappa]
+    d3 = jnp.take_along_axis(d2, o3, axis=-1)[..., :kappa]
+    ids3 = jnp.where(jnp.isinf(d3), -1, ids3)
+    return ids3.astype(jnp.int32), d3
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def members_table(assign: jax.Array, k: int, cap: int
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Ragged clusters -> fixed-capacity table.
+
+    Returns (table (k, cap) int32 with -1 padding, overflow count ()).
+    Members beyond `cap` in a cluster are dropped (counted in overflow).
+    """
+    n = assign.shape[0]
+    order = jnp.argsort(assign, stable=True).astype(jnp.int32)
+    a_sorted = assign[order]
+    cnt = jax.ops.segment_sum(jnp.ones((n,), jnp.int32), assign,
+                              num_segments=k)
+    start = jnp.cumsum(cnt) - cnt
+    rank = jnp.arange(n, dtype=jnp.int32) - start[a_sorted]
+    valid = rank < cap
+    pos = jnp.where(valid, a_sorted * cap + rank, k * cap)
+    flat = jnp.full((k * cap + 1,), -1, jnp.int32).at[pos].set(order)
+    overflow = jnp.sum(~valid)
+    return flat[: k * cap].reshape(k, cap), overflow
+
+
+# ---------------------------------------------------------------------------
+# refinement: within-cluster exhaustive comparison -> graph update
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(4, 5))
+def refine_graph(X: jax.Array, table: jax.Array, real_id: jax.Array,
+                 graph: KnnGraph, kappa: int, chunk: int) -> KnnGraph:
+    """Paper Alg. 3 lines 8-14 on a fixed-capacity member table.
+
+    X: (n_pad, d) padded data; table: (k0, cap) row indices into X (-1 pad);
+    real_id: (n_pad,) maps padded rows to original sample ids.
+    graph rows are stored for REAL ids only: ids/dist are (n_real+1, .) with a
+    trash row at index n_real for invalid scatters.
+    """
+    k0, cap = table.shape
+    n_real = graph.ids.shape[0] - 1
+    assert k0 % chunk == 0, (k0, chunk)
+
+    def body(g, tchunk):
+        g_ids, g_d = g
+        valid = tchunk >= 0                                  # (c, cap)
+        rows = jnp.maximum(tchunk, 0)
+        Xm = X[rows]                                         # (c, cap, d)
+        d2 = kops.pairwise_sq(Xm)                            # (c, cap, cap)
+        rid = jnp.where(valid, real_id[rows], -1)            # (c, cap)
+        # mask: invalid columns, and same-real-id pairs (self + phantom dupes)
+        same = rid[:, :, None] == rid[:, None, :]
+        d2 = jnp.where(same | ~valid[:, None, :] | ~valid[:, :, None],
+                       INF, d2)
+        cand_ids = jnp.broadcast_to(rid[:, None, :], d2.shape)
+
+        # merge into each member's list
+        dest = jnp.where(valid, rid, n_real)                 # (c, cap)
+        old_ids = g_ids[dest]                                # (c, cap, kappa)
+        old_d = g_d[dest]
+        new_ids, new_d = merge_topk(old_ids, old_d, cand_ids, d2, kappa)
+        # duplicate real ids in one chunk (phantoms) write the same content;
+        # scatter order is irrelevant because inputs coincide.
+        g_ids = g_ids.at[dest.reshape(-1)].set(
+            new_ids.reshape(-1, kappa), mode="drop")
+        g_d = g_d.at[dest.reshape(-1)].set(
+            new_d.reshape(-1, kappa), mode="drop")
+        return (g_ids, g_d), 0
+
+    (g_ids, g_d), _ = jax.lax.scan(
+        body, (graph.ids, graph.dist),
+        table.reshape(k0 // chunk, chunk, cap))
+    return KnnGraph(g_ids, g_d)
+
+
+# ---------------------------------------------------------------------------
+# Alg. 3 top level
+# ---------------------------------------------------------------------------
+
+def _next_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+def build_knn_graph(X: jax.Array, kappa: int, *, xi: int = 64, tau: int = 8,
+                    key: jax.Array, bkm_batch: int = 1024,
+                    cap_factor: int = 2, refine_chunk: int = 64,
+                    guided: bool = True) -> KnnGraph:
+    """Construct an approximate KNN graph by iterated fast k-means (Alg. 3).
+
+    Returns KnnGraph with (n, kappa) ids/dists, ids sorted by distance.
+    """
+    n, d = X.shape
+    assert xi & (xi - 1) == 0, "xi must be a power of two"
+    k0 = _next_pow2(max((n + xi - 1) // xi, 1))
+    n_pad = k0 * xi
+    cap = cap_factor * xi
+
+    kpad, kinit, kloop = jax.random.split(key, 3)
+    if n_pad > n:
+        extra = jax.random.randint(kpad, (n_pad - n,), 0, n, dtype=jnp.int32)
+        real_id = jnp.concatenate([jnp.arange(n, dtype=jnp.int32), extra])
+    else:
+        real_id = jnp.arange(n, dtype=jnp.int32)
+    Xp = X[real_id]
+
+    g_ids0 = random_graph(kinit, n, kappa)
+    g_d0 = graph_distances(X, g_ids0)
+    g_ids0, g_d0 = merge_topk(g_ids0, g_d0, g_ids0[:, :0], g_d0[:, :0], kappa)
+    # trash row at index n for dropped scatters
+    graph = KnnGraph(
+        jnp.concatenate([g_ids0, jnp.full((1, kappa), -1, jnp.int32)]),
+        jnp.concatenate([g_d0, jnp.full((1, kappa), INF)]))
+
+    for t in range(tau):
+        kt = jax.random.fold_in(kloop, t)
+        k1, k2 = jax.random.split(kt)
+        assign = two_means_tree(Xp, k0, k1)
+        if guided and t > 0:
+            # one graph-guided BKM pass: the intertwined evolving step.
+            # neighbours are real ids (< n), which are also valid padded rows.
+            state = bkm.init_state(Xp, assign, k0)
+            ids_pad = jnp.maximum(graph.ids[:n], 0)  # -1 -> 0 (harmless cand)
+            cand_fn = bkm.graph_candidates(ids_pad[real_id])
+            state = bkm.bkm_epoch(Xp, state, cand_fn,
+                                  min(bkm_batch, n_pad), k2)
+            assign = state.assign
+        table, _overflow = members_table(assign, k0, cap)
+        graph = refine_graph(Xp, table, real_id, graph, kappa,
+                             min(refine_chunk, k0))
+
+    return KnnGraph(graph.ids[:n], graph.dist[:n])

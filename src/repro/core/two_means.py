@@ -1,0 +1,98 @@
+"""Two-means (2M) tree — equal-size recursive bisection (paper Alg. 1).
+
+TPU adaptation (DESIGN.md §2): instead of popping the largest cluster, the tree
+is built *level-synchronously*: every level bisects all current clusters in
+parallel.  Clusters are contiguous blocks of a permutation array, so each level
+is one gather + a vmapped 2-means + one sort — all static shapes.  The paper's
+"adjust to equal size" step is realised exactly by the median split on the
+two-means discriminant ``||x - c1||^2 - ||x - c2||^2``.
+
+Requires k to be a power of two and n divisible by k (see ``pad_plan``).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_pow2(v: int) -> bool:
+    return v > 0 and (v & (v - 1)) == 0
+
+
+def pad_plan(n: int, k: int) -> Tuple[int, int]:
+    """Return (n_padded, k_rounded): k rounded up to a power of two, n padded
+    up to a multiple of k_rounded.  Callers pad X by repeating rows and drop
+    phantom rows from the result (see knn_graph.py / gkmeans.py)."""
+    k2 = 1
+    while k2 < k:
+        k2 *= 2
+    n2 = ((n + k2 - 1) // k2) * k2
+    return n2, k2
+
+
+def _bisect_discriminant(Xc: jax.Array, key: jax.Array,
+                         refine_iters: int) -> jax.Array:
+    """Equal-size 2-means on one cluster; returns the split discriminant.
+
+    Xc: (m, d).  Runs `refine_iters` rounds of {median-split, recompute means}
+    (a boost-2-means with the paper's equal-size adjustment applied every
+    round), then returns the final discriminant; the caller median-splits it.
+    """
+    m = Xc.shape[0]
+    Xf = Xc.astype(jnp.float32)
+    k1, k2 = jax.random.split(key)
+    i1 = jax.random.randint(k1, (), 0, m)
+    i2 = (i1 + 1 + jax.random.randint(k2, (), 0, m - 1)) % m
+    c1, c2 = Xf[i1], Xf[i2]
+
+    def delta(c1, c2):
+        # ||x-c1||^2 - ||x-c2||^2 = 2 x.(c2-c1) + ||c1||^2 - ||c2||^2
+        return (2.0 * (Xf @ (c2 - c1))
+                + jnp.sum(c1 * c1) - jnp.sum(c2 * c2))
+
+    def body(_, carry):
+        c1, c2 = carry
+        dlt = delta(c1, c2)
+        # left = the m/2 samples with smallest delta (closest to c1)
+        order = jnp.argsort(dlt)
+        left = jnp.zeros((m,), jnp.float32).at[order[: m // 2]].set(1.0)
+        tot1 = jnp.maximum(jnp.sum(left), 1.0)
+        tot2 = jnp.maximum(m - jnp.sum(left), 1.0)
+        c1n = (left[:, None] * Xf).sum(0) / tot1
+        c2n = ((1.0 - left)[:, None] * Xf).sum(0) / tot2
+        return c1n, c2n
+
+    c1, c2 = jax.lax.fori_loop(0, refine_iters, body, (c1, c2))
+    return delta(c1, c2)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 3))
+def two_means_tree(X: jax.Array, k: int, key: jax.Array,
+                   refine_iters: int = 4) -> jax.Array:
+    """Partition X (n, d) into k equal-size clusters; returns assign (n,).
+
+    k must be a power of two and divide n (use ``pad_plan`` otherwise).
+    """
+    n, d = X.shape
+    assert _is_pow2(k), f"k={k} must be a power of two (see pad_plan)"
+    assert n % k == 0, f"n={n} must be divisible by k={k} (see pad_plan)"
+    levels = k.bit_length() - 1
+
+    perm = jnp.arange(n, dtype=jnp.int32)
+    for lvl in range(levels):
+        c = 1 << lvl
+        m = n // c
+        keys = jax.random.split(jax.random.fold_in(key, lvl), c)
+        Xp = X[perm].reshape(c, m, d)
+        dlt = jax.vmap(_bisect_discriminant, in_axes=(0, 0, None))(
+            Xp, keys, refine_iters)                       # (c, m)
+        order = jnp.argsort(dlt, axis=1).astype(jnp.int32)  # (c, m)
+        perm = jnp.take_along_axis(perm.reshape(c, m), order, axis=1).reshape(n)
+
+    block = n // k
+    assign = jnp.zeros((n,), jnp.int32).at[perm].set(
+        (jnp.arange(n, dtype=jnp.int32) // block))
+    return assign

@@ -1,0 +1,3 @@
+from repro.data.synthetic import gmm_blobs, sift_like, token_batch
+
+__all__ = ["gmm_blobs", "sift_like", "token_batch"]

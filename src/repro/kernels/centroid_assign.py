@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused nearest-centroid assignment (flash-argmin).
+
+The Lloyd / 2-means assignment step computes argmin_r ||x - C_r||^2 over all k
+centroids.  Materialising the (n, k) distance matrix in HBM costs n*k*4 bytes
+of traffic; this kernel streams centroid tiles through VMEM and carries a
+running (min, argmin) per sample tile, so HBM traffic is O(n*d + k*d + n).
+
+Grid: (n / bn, k / bk), centroid axis innermost; the output block depends only
+on the sample tile index, so it acts as the accumulator across centroid tiles
+(standard Pallas revisiting pattern).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, c_ref, amin_ref, dmin_ref, *, bk: int):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)        # (bn, d)
+    c = c_ref[...].astype(jnp.float32)        # (bk, d)
+
+    dots = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)   # (bn, bk)
+    csq = jnp.sum(c * c, axis=-1)             # (bk,)
+    part = csq[None, :] - 2.0 * dots          # (bn, bk): d2 minus ||x||^2
+
+    loc_min = jnp.min(part, axis=-1)                               # (bn,)
+    loc_arg = (jnp.argmin(part, axis=-1) + j * bk).astype(jnp.int32)
+
+    @pl.when(j == 0)
+    def _init():
+        dmin_ref[...] = loc_min
+        amin_ref[...] = loc_arg
+
+    @pl.when(j > 0)
+    def _update():
+        better = loc_min < dmin_ref[...]
+        dmin_ref[...] = jnp.where(better, loc_min, dmin_ref[...])
+        amin_ref[...] = jnp.where(better, loc_arg, amin_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def assign_centroids(X: jax.Array, C: jax.Array, *, bn: int = 1024,
+                     bk: int = 512, interpret: bool = False):
+    """X: (n, d), C: (k, d) -> (assign (n,) int32, d2 (n,) float32).
+
+    n must be a multiple of bn and k a multiple of bk (wrappers pad).
+    """
+    n, d = X.shape
+    k = C.shape[0]
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert n % bn == 0 and k % bk == 0, (n, bn, k, bk)
+    amin, dmin = pl.pallas_call(
+        functools.partial(_kernel, bk=bk),
+        grid=(n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, C)
+    xsq = jnp.sum(X.astype(jnp.float32) ** 2, axis=-1)
+    return amin, jnp.maximum(dmin + xsq, 0.0)

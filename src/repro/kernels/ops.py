@@ -1,0 +1,46 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On TPU the Pallas kernels run compiled; on CPU (this container) the hot path
+dispatches to the pure-jnp reference (XLA:CPU), while tests exercise the Pallas
+bodies via ``interpret=True`` to validate them against the same references.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import centroid_assign as _ca
+from repro.kernels import pairwise_topk as _pt
+from repro.kernels import ref as _ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pairwise_sq(Xb: jax.Array, *, force: str | None = None) -> jax.Array:
+    """Batched (B, m, d) -> (B, m, m) squared L2. force: None|'pallas'|'ref'|'interpret'."""
+    if force == "pallas" or (force is None and _on_tpu()):
+        return _pt.pairwise_sq(Xb)
+    if force == "interpret":
+        return _pt.pairwise_sq(Xb, interpret=True)
+    return _ref.pairwise_sq(Xb)
+
+
+def assign_centroids(X: jax.Array, C: jax.Array, *, force: str | None = None,
+                     bn: int = 1024, bk: int = 512):
+    """(n, d) x (k, d) -> nearest-centroid (assign, d2); pads to tile shapes."""
+    n, d = X.shape
+    k = C.shape[0]
+    if force == "ref" or (force is None and not _on_tpu()):
+        return _ref.assign_centroids(X, C)
+    bn_ = min(bn, n)
+    bk_ = min(bk, k)
+    n_pad = (-n) % bn_
+    k_pad = (-k) % bk_
+    Xp = jnp.pad(X, ((0, n_pad), (0, 0))) if n_pad else X
+    # pad centroids with +inf-distance sentinels (huge coordinates)
+    Cp = jnp.pad(C, ((0, k_pad), (0, 0)), constant_values=3e18) if k_pad else C
+    a, d2 = _ca.assign_centroids(Xp, Cp, bn=bn_, bk=bk_,
+                                 interpret=(force == "interpret"))
+    return a[:n], d2[:n]

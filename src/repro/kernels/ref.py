@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness reference)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pairwise_sq(Xb: jax.Array) -> jax.Array:
+    """Batched squared-L2 distance matrix.
+
+    Xb: (B, m, d)  ->  (B, m, m) float32, D[b,i,j] = ||x_i - x_j||^2.
+    """
+    Xf = Xb.astype(jnp.float32)
+    sq = jnp.sum(Xf * Xf, axis=-1)                         # (B, m)
+    dots = jnp.einsum("bid,bjd->bij", Xf, Xf)              # (B, m, m)
+    d2 = sq[:, :, None] + sq[:, None, :] - 2.0 * dots
+    return jnp.maximum(d2, 0.0)
+
+
+def assign_centroids(X: jax.Array, C: jax.Array):
+    """Nearest-centroid assignment.
+
+    X: (n, d), C: (k, d) -> (assign (n,) int32, d2 (n,) float32 with the
+    ||x||^2 term included).
+    """
+    Xf = X.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    csq = jnp.sum(Cf * Cf, axis=-1)
+    part = csq[None, :] - 2.0 * (Xf @ Cf.T)                # (n, k)
+    a = jnp.argmin(part, axis=-1).astype(jnp.int32)
+    d2 = jnp.min(part, axis=-1) + jnp.sum(Xf * Xf, axis=-1)
+    return a, jnp.maximum(d2, 0.0)

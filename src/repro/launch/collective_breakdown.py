@@ -1,0 +1,77 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Per-op collective breakdown of one dry-run cell (hillclimb microscope).
+
+  PYTHONPATH=src python -m repro.launch.collective_breakdown \
+      --arch qwen1.5-4b --shape train_4k [--override k=v ...] [--top 15]
+"""
+import argparse  # noqa: E402
+import re  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.dryrun import lower_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+
+def breakdown(txt: str, top: int = 15):
+    mult, comps = rl._multiplicities(txt)
+    rows = []
+    for name, lines in comps.items():
+        for ln in lines:
+            s = ln.strip()
+            m = re.search(r"=\s*(\([^)]*\)|\S+)\s+([\w-]+)\(", s)
+            if not m:
+                continue
+            op = m.group(2)
+            if not any(op == c or op.startswith(c + "-") or
+                       (op.startswith(c) and op[len(c):len(c) + 1] == ".")
+                       for c in rl._COLLECTIVES):
+                continue
+            if op.endswith("-done"):
+                continue
+            shapes = rl._SHAPE_RE.findall(m.group(1))
+            b = sum(rl._nbytes(d, sh) for d, sh in shapes)
+            g = rl._group_size(s)
+            meta = re.search(r'op_name="([^"]+)"', s)
+            rows.append((b * mult.get(name, 1.0), b, mult.get(name, 1.0),
+                         g, op, meta.group(1)[-90:] if meta else name[:60]))
+    rows.sort(reverse=True)
+    return rows[:top]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--top", type=int, default=15)
+    ap.add_argument("--override", action="append", default=[])
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        try:
+            v = eval(v)  # noqa: S307
+        except Exception:
+            pass
+        overrides[k] = v
+
+    cfg = get_config(args.arch)
+    if overrides:
+        cfg = cfg.scaled(**overrides)
+    mesh = make_production_mesh(multi_pod=(args.mesh == "multi"))
+    lowered = lower_cell(cfg, SHAPES[args.shape], mesh)
+    txt = lowered.compile().as_text()
+    total = rl.collective_bytes_corrected(txt)["total_wire_bytes"]
+    print(f"total corrected wire bytes: {total/1e9:.1f} GB")
+    for tot, unit, m, g, op, where in breakdown(txt, args.top):
+        print(f"  {tot/1e9:9.2f}GB = {unit/1e6:9.1f}MB x{m:<6.0f} g={g:<3d} "
+              f"{op:22s} {where}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Production mesh construction (multi-pod dry-run target)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 (=256 chips/pod) single-pod mesh, or 2x16x16 two-pod mesh.
+
+    A FUNCTION (not a module constant) so importing this module never touches
+    jax device state.
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes_of(mesh) -> tuple:
+    """All non-'model' axes act as data/FSDP axes."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def make_host_mesh(n: int | None = None, name: str = "data"):
+    """Mesh over however many (CPU) devices exist — tests/examples."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), (name,))

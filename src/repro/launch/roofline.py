@@ -1,0 +1,441 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute   = FLOPs_per_chip / peak_FLOPs
+  memory    = HBM_bytes_per_chip / HBM_bw
+  collective= collective_bytes_per_chip / link_bw
+
+cost_analysis() of an SPMD-partitioned executable reports the PER-PARTITION
+program, so its flops/bytes are already per-chip (verified empirically in
+tests/test_roofline.py).  Collective bytes are not in cost_analysis — we parse
+the optimized HLO and sum operand sizes of every collective op.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+# TPU v5e-class hardware constants (assignment-specified)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # bytes/s per chip
+ICI_BW = 50e9            # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*?)\[([\d,]*)\]")
+
+
+def _nbytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+# ---------------------------------------------------------------------------
+# while-aware HLO traversal
+#
+# XLA's cost_analysis() and a naive text scan both count a while (scan) body
+# ONCE, not multiplied by its trip count (verified in tests/test_roofline.py).
+# Every layer loop / kv-chunk loop / loss-chunk loop in this codebase is a
+# scan, so loop-resident collectives must be scaled by the loop nest's trip
+# counts.  We parse computations, read each while condition's bound constant,
+# and propagate multiplicities down the while-nest.
+# ---------------------------------------------------------------------------
+
+_COMP_START = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(")
+_WHILE_RE = re.compile(
+    r"while\(.*?\), condition=(%?[\w\.\-]+), body=(%?[\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _computations(hlo_text: str):
+    """name -> list of body lines; also returns the entry computation name.
+
+    Headers may contain nested parens and wrap across lines; a computation
+    body runs from its opening '{' to a line that is exactly '}'.
+    """
+    comps, entry = {}, None
+    cur = None
+    pending_name, pending_entry = None, False
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if cur is None:
+            if pending_name is None:
+                m = _COMP_START.match(s)
+                if m:
+                    pending_name = m.group(1)
+                    pending_entry = s.startswith("ENTRY")
+            if pending_name is not None and s.endswith("{"):
+                cur = pending_name
+                comps[cur] = []
+                if pending_entry:
+                    entry = cur
+                pending_name, pending_entry = None, False
+            continue
+        if s == "}":
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps, entry
+
+
+def _multiplicities(hlo_text: str):
+    """comp name -> times executed (product of enclosing while trip counts)."""
+    comps, entry = _computations(hlo_text)
+    whiles = {}  # comp -> list[(cond, body)]
+    for name, lines in comps.items():
+        lst = []
+        for ln in lines:
+            m = _WHILE_RE.search(ln)
+            if m:
+                lst.append((m.group(1), m.group(2)))
+        whiles[name] = lst
+
+    def trip(cond_name: str) -> int:
+        ints = [int(x) for x in _CONST_RE.findall(
+            "\n".join(comps.get(cond_name, [])))]
+        return max(ints) if ints else 1
+
+    mult = {name: 1.0 for name in comps}
+    if entry:
+        # BFS from entry, accumulating multiplicity into while bodies/conds
+        from collections import deque
+        seen_depth = {entry: 1.0}
+        q = deque([entry])
+        while q:
+            c = q.popleft()
+            m = seen_depth[c]
+            mult[c] = m
+            for cond, body in whiles.get(c, []):
+                t = trip(cond)
+                for sub in (body, cond):
+                    nm = m * t if sub == body else m
+                    if seen_depth.get(sub, 0) < nm:
+                        seen_depth[sub] = nm
+                        q.append(sub)
+    return mult, comps
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_V1_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_V1_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def collective_bytes_corrected(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Like collective_bytes, but multiplies each collective by the trip-count
+    product of its enclosing while (scan) nest — the physically-executed
+    traffic."""
+    mult, comps = _multiplicities(hlo_text)
+    out: Dict[str, Dict[str, float]] = {
+        c: {"bytes": 0.0, "wire_bytes": 0.0, "count": 0}
+        for c in _COLLECTIVES}
+    for name, lines in comps.items():
+        m_comp = mult.get(name, 1.0)
+        for ln in lines:
+            _accumulate_collective(ln.strip(), out, m_comp)
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["total_wire_bytes"] = sum(v["wire_bytes"] for v in out.values()
+                                  if isinstance(v, dict))
+    return out
+
+
+def _accumulate_collective(stripped: str, out, weight: float) -> None:
+    m = re.search(r"=\s*(\([^)]*\)|\S+)\s+([\w-]+)\(", stripped)
+    if not m:
+        return
+    op = m.group(2)
+    kind = None
+    for c in _COLLECTIVES:
+        if op == c or op.startswith(c + "-") or \
+                (op.startswith(c) and op[len(c):len(c) + 1] == "."):
+            kind = c
+            break
+    if kind is None or op.endswith("-done"):
+        return
+    shapes = _SHAPE_RE.findall(m.group(1))
+    result = sum(_nbytes(d, s) for d, s in shapes)
+    g = _group_size(stripped)
+    if kind == "all-gather":
+        operand, wire = result / g, result * (g - 1) / g
+    elif kind == "reduce-scatter":
+        operand, wire = result * g, result * (g - 1)
+    elif kind == "all-reduce":
+        operand, wire = result, 2.0 * result * (g - 1) / g
+    elif kind == "all-to-all":
+        operand, wire = result, result * (g - 1) / g
+    else:
+        operand, wire = result, result
+    out[kind]["bytes"] += operand * weight
+    out[kind]["wire_bytes"] += wire * weight
+    out[kind]["count"] += weight
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Per-collective-type byte totals from optimized HLO text.
+
+    HLO prints operands as plain %refs, so sizes are derived from the RESULT
+    shape + replica group size g:
+      operand bytes : all-gather = result/g; reduce-scatter = result*g;
+                      all-reduce / all-to-all / permute = result.
+      wire bytes    : bytes physically moved per device (ring algorithms):
+                      all-gather / reduce-scatter / all-to-all =
+                      full_buffer*(g-1)/g; all-reduce = 2*buffer*(g-1)/g;
+                      collective-permute = result.
+    The collective roofline term uses wire bytes.
+    """
+    out: Dict[str, Dict[str, float]] = {
+        c: {"bytes": 0.0, "wire_bytes": 0.0, "count": 0}
+        for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        m = re.search(r"=\s*(\([^)]*\)|\S+)\s+([\w-]+)\(", stripped)
+        if not m:
+            continue
+        op = m.group(2)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-") or \
+                    (op.startswith(c) and op[len(c):len(c) + 1] == "."):
+                kind = c
+                break
+        if kind is None or op.endswith("-done"):
+            continue
+        shapes = _SHAPE_RE.findall(m.group(1))
+        result = sum(_nbytes(d, s) for d, s in shapes)
+        g = _group_size(stripped)
+        if kind == "all-gather":
+            operand = result / g
+            wire = result * (g - 1) / g
+        elif kind == "reduce-scatter":
+            operand = result * g
+            wire = result * (g - 1)
+        elif kind == "all-reduce":
+            operand = result
+            wire = 2.0 * result * (g - 1) / g
+        elif kind == "all-to-all":
+            operand = result
+            wire = result * (g - 1) / g
+        else:  # collective-permute
+            operand = result
+            wire = result
+        out[kind]["bytes"] += operand
+        out[kind]["wire_bytes"] += wire
+        out[kind]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for v in out.values()
+                             if isinstance(v, dict))
+    out["total_wire_bytes"] = sum(v["wire_bytes"] for v in out.values()
+                                  if isinstance(v, dict))
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   links: int = 3) -> Dict[str, float]:
+    """All three terms in seconds (per chip). `links`: ICI links engaged."""
+    t_c = flops / PEAK_FLOPS
+    t_m = hbm_bytes / HBM_BW
+    t_x = coll_bytes / (ICI_BW * links)
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    total = max(t_c, t_m, t_x)
+    return {"compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+            "bottleneck": dom[0],
+            "roofline_fraction": (t_c / total if total > 0 else 0.0)}
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE); decode D=tokens=B."""
+    n_params, n_active = param_counts(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def flops_analytic(cfg, shape, chips: int) -> float:
+    """Exact per-chip FLOPs of the implemented program (ideal SPMD split).
+
+    Counts every matmul as implemented: attention computes the full S^2
+    score matrix (no causal skip — see §Perf), training applies x4 over
+    forward (backward = 2x, full remat recompute = 1x).
+    """
+    B, S = shape.global_batch, shape.seq_len
+    D, V = cfg.d_model, cfg.vocab
+    T = B * S
+    kind = shape.kind
+
+    def attn_flops(tokens, kv_len, layers, heads):
+        proj = 2 * tokens * D * (cfg.n_heads + 2 * cfg.n_kv_heads) * \
+            cfg.head_dim + 2 * tokens * cfg.n_heads * cfg.head_dim * D
+        scores = 4 * tokens * kv_len * heads * cfg.head_dim
+        if cfg.causal_skip and kind != "decode":
+            scores *= 0.5  # triangular kv schedule (attention.py)
+        return layers * (proj + scores)
+
+    def mlp_flops(tokens, layers):
+        if cfg.family == "moe":
+            routed = 6 * tokens * D * cfg.moe_d_ff * cfg.experts_per_token
+            shared = 6 * tokens * D * cfg.n_shared_experts * cfg.moe_d_ff
+            return layers * (routed + shared)
+        mult = 6 if cfg.mlp_act == "swiglu" else 4
+        return layers * mult * tokens * D * cfg.d_ff
+
+    def mamba_flops(tokens, layers):
+        Di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, \
+            cfg.ssm_head_dim
+        proj = 2 * tokens * D * (2 * Di + 2 * N + H) + 2 * tokens * Di * D
+        Q = cfg.ssd_chunk if kind != "decode" else 1
+        # SSD: scores CB^T (2*t*Q*N), diag apply (2*t*Q*H*P), states+off
+        ssd = tokens * (2 * Q * N + 2 * Q * H * P + 4 * N * H * P)
+        return layers * (proj + ssd)
+
+    def rec_flops(tokens, layers):
+        Wd = cfg.lru_width
+        return layers * (2 * tokens * D * 2 * Wd + 4 * tokens * Wd * Wd
+                         + 2 * tokens * Wd * D
+                         + 6 * tokens * D * cfg.d_ff)
+
+    if kind == "decode":
+        tokens, kv = B, S
+    elif kind == "prefill":
+        tokens, kv = T, S
+    else:
+        tokens, kv = T, S
+
+    f = 2.0 * tokens * D * cfg.vocab_padded  # lm head
+    if cfg.family == "ssm":
+        f += mamba_flops(tokens, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        ng = cfg.n_layers // len(pat)
+        n_rec = sum(1 for k in pat if k == "rec") * ng + \
+            (cfg.n_layers - ng * len(pat))
+        n_att = cfg.n_layers - n_rec
+        kv_eff = min(kv, cfg.window) if cfg.window else kv
+        f += rec_flops(tokens, n_rec)
+        f += attn_flops(tokens, kv_eff, n_att, cfg.n_heads)
+    elif cfg.family == "audio":
+        f += attn_flops(tokens, kv, cfg.enc_layers + cfg.n_layers,
+                        cfg.n_heads)
+        f += mlp_flops(tokens, cfg.enc_layers + cfg.n_layers)
+        # cross attention: q-proj+out + scores over enc len
+        f += cfg.n_layers * (4 * tokens * D * cfg.n_heads * cfg.head_dim
+                             + 4 * tokens * kv * cfg.n_heads * cfg.head_dim)
+    else:
+        f += attn_flops(tokens, kv, cfg.n_layers, cfg.n_heads)
+        f += mlp_flops(tokens, cfg.n_layers)
+    if kind == "train":
+        # bwd 2x (+ full-remat recompute 1x)
+        f *= 4.0 if cfg.remat_policy == "full" else 3.0
+    return f / chips
+
+
+def hbm_analytic(cfg, shape, chips: int) -> float:
+    """Modeled per-chip HBM traffic per step (stated-assumption lower bound).
+
+    train:  params 2B read (fwd) + 2B read (remat recompute) + 2B grad write
+            + AdamW m/v read+write fp32 (16B) + 2B param write = 24 B/param
+            (adafactor: 8 B/param), all sharded over every chip;
+            activations: remat saves layer inputs -> ~4 passes over T*D per
+            layer plus in-layer working set ~4x that.
+    prefill: params 2B read + KV cache write + activation stream.
+    decode:  params 2B read + full KV/state cache read + tiny writes.
+    """
+    B, S = shape.global_batch, shape.seq_len
+    D = cfg.d_model
+    T = B * S
+    n_params, _ = param_counts(cfg)
+    kind = shape.kind
+
+    if kind == "train":
+        per_param = 24.0 if cfg.optimizer == "adamw" else 8.0
+        act = 20.0 * cfg.n_layers * T * D * 2  # global bytes
+        return (n_params * per_param + act) / chips
+    if kind == "prefill":
+        act = 12.0 * cfg.n_layers * T * D * 2
+        cache = _cache_bytes(cfg, B, S)
+        return (n_params * 2.0 + act + cache) / chips
+    # decode
+    cache = _cache_bytes(cfg, B, S)
+    return (n_params * 2.0 + cache) / chips
+
+
+def _cache_bytes(cfg, B: int, S: int) -> float:
+    if cfg.family == "ssm":
+        return cfg.n_layers * B * (cfg.ssm_heads * cfg.ssm_head_dim
+                                   * cfg.ssm_state * 4
+                                   + (cfg.conv_width - 1) * cfg.d_inner * 2)
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        ng = cfg.n_layers // len(pat)
+        n_att = sum(1 for k in pat if k == "attn") * ng
+        n_rec = cfg.n_layers - n_att
+        kv = n_att * B * min(S, cfg.window) * 2 * cfg.n_kv_heads * \
+            cfg.head_dim * 2
+        rec = n_rec * B * cfg.lru_width * (4 + 2 * (cfg.conv_width - 1))
+        return kv + rec
+    layers = cfg.n_layers
+    kv = layers * B * S * 2 * cfg.n_kv_heads * cfg.head_dim * 2
+    if cfg.family == "audio":
+        kv *= 2  # self + cross caches
+    return kv
+
+
+def param_counts(cfg) -> tuple:
+    """(total, active-per-token) parameter counts from the config."""
+    D, V = cfg.d_model, cfg.vocab
+    emb = V * D * 2  # embed + lm_head
+    if cfg.family == "ssm":
+        Di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        per = D * (2 * Di + 2 * N + H) + Di * D + 4 * Di + 3 * H + Di
+        tot = cfg.n_layers * per + emb
+        return tot, tot
+    att = D * cfg.n_heads * cfg.head_dim + 2 * D * cfg.n_kv_heads * \
+        cfg.head_dim + cfg.n_heads * cfg.head_dim * D
+    if cfg.family == "moe":
+        ffn_tot = 3 * D * cfg.moe_d_ff * cfg.n_experts
+        ffn_act = 3 * D * cfg.moe_d_ff * cfg.experts_per_token
+        if cfg.n_shared_experts:
+            sh = 3 * D * cfg.n_shared_experts * cfg.moe_d_ff
+            ffn_tot += sh
+            ffn_act += sh
+        tot = cfg.n_layers * (att + ffn_tot) + emb
+        act = cfg.n_layers * (att + ffn_act) + emb
+        return tot, act
+    ffn = 3 * D * cfg.d_ff if cfg.mlp_act == "swiglu" else 2 * D * cfg.d_ff
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        Wd = cfg.lru_width
+        rec = D * 2 * Wd + 2 * Wd * Wd + Wd * D + 4 * Wd + ffn
+        attn_l = att + ffn
+        n_rec = sum(1 for k in pat if k == "rec") * (cfg.n_layers // len(pat))
+        n_rec += cfg.n_layers - (cfg.n_layers // len(pat)) * len(pat)
+        n_att = cfg.n_layers - n_rec
+        tot = n_rec * rec + n_att * attn_l + emb
+        return tot, tot
+    layers = cfg.n_layers + cfg.enc_layers
+    x_att = D * cfg.n_heads * cfg.head_dim * 2 if cfg.cross_attn else 0
+    tot = layers * (att + ffn) + cfg.n_layers * x_att + emb
+    return tot, tot

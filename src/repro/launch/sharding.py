@@ -1,0 +1,201 @@
+"""Sharding rule engine: param/optimizer/batch/cache PartitionSpecs.
+
+Rules are keyed by the LEAF NAME (last pytree path component, or the param
+name for optimizer-state leaves) and list a role per trailing dimension:
+  'fsdp'  -> sharded over the data axes ('pod','data') — ZeRO-3 style
+  'tp'    -> sharded over 'model' — tensor parallel
+  None    -> replicated
+Leading stacked-layer dims are implicitly None.  A dim is only sharded if its
+size is divisible by the axis-product — otherwise it silently falls back to
+replicated (e.g. 20 q-heads on model=16: TP moves to the FFN dims instead).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# roles for the trailing dims of each named leaf
+_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": ("tp", "fsdp"),          # (V, D)
+    "lm_head": ("fsdp", "tp"),        # (D, V)
+    "patch_proj": (None, "fsdp"),     # (F_vit, D)
+    "wq": ("fsdp", "tp", None),       # (D, H, hd)
+    "wk": ("fsdp", "tp", None),
+    "wv": ("fsdp", "tp", None),
+    "wo": ("tp", None, "fsdp"),       # (H, hd, D)
+    "bq": ("tp", None),
+    "bk": ("tp", None),
+    "bv": ("tp", None),
+    "w_gate": ("fsdp", "tp"),         # (D, F)
+    "w_up": ("fsdp", "tp"),
+    "w_in": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),         # (F, D)
+    "w_out": ("tp", "fsdp"),
+    "b_in": ("tp",),
+    "b_out": (None,),
+    "router": ("fsdp", None),         # (D, E)
+    "we_gate": (None, "fsdp", "tp"),  # (E, D, F)
+    "we_up": (None, "fsdp", "tp"),
+    "we_down": (None, "tp", "fsdp"),  # (E, F, D)
+    "wz": ("fsdp", "tp"),
+    "wx": ("fsdp", "tp"),
+    "wB": ("fsdp", None),
+    "wC": ("fsdp", None),
+    "wdt": ("fsdp", None),
+    "conv_x": (None, "tp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "w_x": ("fsdp", "tp"),
+    "w_r": ("fsdp", "tp"),
+    "w_i": ("fsdp", "tp"),
+    "b_r": ("tp",),
+    "b_i": ("tp",),
+    "lam": ("tp",),
+}
+
+
+def _axis_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    s = 1
+    for a in axes:
+        if a not in mesh.shape:
+            return 0
+        s *= mesh.shape[a]
+    return s
+
+
+def _can(dim: int, mesh: Mesh, axes: Sequence[str]) -> bool:
+    """True if `dim` can shard over `axes` (axes exist and divide dim)."""
+    n = _axis_size(mesh, axes)
+    return n > 1 and dim % n == 0
+
+
+def spec_for(name: str, shape: Tuple[int, ...], mesh: Mesh,
+             data_axes: Tuple[str, ...]) -> P:
+    roles = _RULES.get(name)
+    if roles is None:
+        return P()
+    # optimizer-state reshapes: adafactor r drops the last dim, c drops dim -2
+    parts: list = [None] * len(shape)
+    trailing = len(roles)
+    if len(shape) < trailing:
+        return P()  # factored/reduced state handled by caller via adjust
+    off = len(shape) - trailing
+    for i, role in enumerate(roles):
+        if role is None:
+            continue
+        axes = data_axes if role == "fsdp" else ("model",)
+        if _can(shape[off + i], mesh, axes):
+            parts[off + i] = axes if len(axes) > 1 else axes[0]
+    return P(*parts)
+
+
+_STATE_SUFFIX = ("m", "v", "r", "c")
+
+
+def tree_specs(tree: PyTree, mesh: Mesh, data_axes: Tuple[str, ...]
+               ) -> PyTree:
+    """PartitionSpec tree matching `tree` (params or optimizer state)."""
+
+    def leaf_spec(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = names[-1]
+        shape = tuple(leaf.shape)
+        if name in _STATE_SUFFIX and len(names) >= 2 and names[-2] in _RULES:
+            base = names[-2]
+            roles = _RULES[base]
+            if name == "r":      # mean over last dim
+                roles = roles[:-1]
+            elif name == "c":    # mean over dim -2
+                roles = roles[:-2] + roles[-1:]
+            spec = _fit(roles, shape, mesh, data_axes)
+            return spec
+        if name in _STATE_SUFFIX and len(names) >= 2:
+            name = names[-2] if names[-2] in _RULES else name
+        return spec_for(name, shape, mesh, data_axes)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, tree)
+
+
+def _fit(roles, shape, mesh, data_axes) -> P:
+    parts: list = [None] * len(shape)
+    off = len(shape) - len(roles)
+    if off < 0:
+        return P()
+    for i, role in enumerate(roles):
+        if role is None:
+            continue
+        axes = data_axes if role == "fsdp" else ("model",)
+        if _can(shape[off + i], mesh, axes):
+            parts[off + i] = axes if len(axes) > 1 else axes[0]
+    return P(*parts)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_specs(batch: PyTree, mesh: Mesh, data_axes: Tuple[str, ...]
+                ) -> PyTree:
+    """Shard the leading (batch) dim over the data axes when divisible."""
+
+    def f(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        parts: list = [None] * len(shape)
+        if _can(shape[0], mesh, data_axes):
+            parts[0] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*parts)
+
+    return jax.tree_util.tree_map(f, batch)
+
+
+def cache_specs(cache: PyTree, mesh: Mesh, data_axes: Tuple[str, ...]
+                ) -> PyTree:
+    """KV/SSM cache sharding: batch over data axes; heads over model if
+    divisible, else the sequence/window dim; state dims over model for SSM."""
+    daxes = data_axes if len(data_axes) > 1 else data_axes[0]
+
+    def f(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        shape = tuple(leaf.shape)
+        if not shape or shape == ():
+            return P()
+        parts: list = [None] * len(shape)
+        if len(shape) == 5 and (names[-1] in ("k", "v", "xk", "xv")
+                                or "groups" in names):
+            # (L, B, S, H, hd) kv cache
+            if _can(shape[1], mesh, data_axes):
+                parts[1] = daxes
+            if _can(shape[3], mesh, ("model",)):
+                parts[3] = "model"
+            elif _can(shape[2], mesh, ("model",)):
+                parts[2] = "model"
+            return P(*parts)
+        if names[-1] == "state" or (len(shape) == 5):
+            # (L, B, H, P, N) ssm state
+            if _can(shape[1], mesh, data_axes):
+                parts[1] = daxes
+            if _can(shape[2], mesh, ("model",)):
+                parts[2] = "model"
+            return P(*parts)
+        if len(shape) >= 2:
+            if _can(shape[1], mesh, data_axes):
+                parts[1] = daxes
+            if _can(shape[-1], mesh, ("model",)):
+                parts[-1] = "model"
+            return P(*parts)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def to_named(spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s),
+                                  spec_tree,
+                                  is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,108 @@
+"""Abstract input/param specs for lowering (no device allocation).
+
+Everything is ShapeDtypeStruct + NamedSharding — the same pattern the
+multi-pod dry-run uses to prove the distribution config is coherent.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch import sharding as shd
+from repro.models import build_model
+from repro.models.model import init_params
+from repro.train.optimizer import make_optimizer
+
+PyTree = Any
+
+
+def _sds(tree: PyTree, spec_tree: PyTree, mesh: Mesh) -> PyTree:
+    def f(leaf, spec):
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree_util.tree_map(f, tree, spec_tree,
+                                  is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def abstract_params(cfg: ArchConfig) -> PyTree:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(cfg: ArchConfig, params_abs: PyTree) -> PyTree:
+    opt = make_optimizer(cfg.optimizer)
+    return jax.eval_shape(opt.init, params_abs)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh
+                ) -> Dict[str, PyTree]:
+    """Returns dict with abstract (sharded) stand-ins for one dry-run cell:
+
+      train:   params, opt_state, batch, step
+      prefill: params, batch
+      decode:  params, tokens, cache
+    """
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    B, S = shape.global_batch, shape.seq_len
+
+    params_abs = abstract_params(cfg)
+    pspecs = shd.tree_specs(params_abs, mesh, data_axes)
+    params = _sds(params_abs, pspecs, mesh)
+
+    model = build_model(cfg)
+
+    def make_batch(kind: str) -> PyTree:
+        i32 = jnp.int32
+        if cfg.family == "audio":
+            b = {"frames": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                jnp.bfloat16),
+                 "tokens": jax.ShapeDtypeStruct((B, S), i32)}
+            if kind == "train":
+                b["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            return b
+        if cfg.family == "vlm":
+            St = S - cfg.n_patches
+            b = {"tokens": jax.ShapeDtypeStruct((B, St), i32),
+                 "patches": jax.ShapeDtypeStruct(
+                     (B, cfg.n_patches, cfg.frontend_dim), jnp.bfloat16)}
+            if kind == "train":
+                b["labels"] = jax.ShapeDtypeStruct((B, St), i32)
+            return b
+        b = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if kind == "train":
+            b["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return b
+
+    if shape.kind == "train":
+        batch_abs = make_batch("train")
+        bspecs = shd.batch_specs(batch_abs, mesh, data_axes)
+        batch = _sds(batch_abs, bspecs, mesh)
+        opt_abs = abstract_opt_state(cfg, params_abs)
+        ospecs = shd.tree_specs(opt_abs, mesh, data_axes)
+        opt_state = _sds(opt_abs, ospecs, mesh)
+        step = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P()))
+        return {"params": params, "opt_state": opt_state, "batch": batch,
+                "step": step, "param_specs": pspecs, "batch_specs": bspecs,
+                "opt_specs": ospecs}
+
+    if shape.kind == "prefill":
+        batch_abs = make_batch("prefill")
+        bspecs = shd.batch_specs(batch_abs, mesh, data_axes)
+        batch = _sds(batch_abs, bspecs, mesh)
+        return {"params": params, "batch": batch, "param_specs": pspecs,
+                "batch_specs": bspecs}
+
+    # decode: one token + cache of seq_len
+    cache_abs = jax.eval_shape(lambda: model.init_cache(B, S))
+    cspecs = shd.cache_specs(cache_abs, mesh, data_axes)
+    cache = _sds(cache_abs, cspecs, mesh)
+    tok_abs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    tspec = shd.batch_specs(tok_abs, mesh, data_axes)
+    tokens = _sds(tok_abs, tspec, mesh)
+    return {"params": params, "tokens": tokens, "cache": cache,
+            "param_specs": pspecs, "cache_specs": cspecs,
+            "token_specs": tspec}

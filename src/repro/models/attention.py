@@ -1,0 +1,141 @@
+"""GQA attention: chunked (flash-style) training/prefill path + decode path.
+
+The chunked path streams KV blocks with an online-softmax carry so the (S, S)
+score matrix is never materialised — required for the 32k prefill shapes.
+Causal/local masking is applied per block; fully-masked blocks still execute
+(dry-run simplicity; the Pallas flash kernel with block skipping is a §Perf
+iteration, see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = jnp.float32(-1e30)
+
+
+def _block_attn(q, k, v, qpos, kpos, causal: bool, window: int):
+    """q: (B, Sq, Hkv, G, hd); k/v: (B, Skv, Hkv, hd) -> partial softmax stats.
+
+    Returns (m, l, acc): running max (B,Sq,Hkv,G), denom, weighted values.
+    """
+    scores = jnp.einsum("bqhgd,bkhd->bqhgk", q, k,
+                        preferred_element_type=jnp.float32)
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    scores = jnp.where(mask[None, :, None, None, :], scores, NEG_INF)
+    m = jnp.max(scores, axis=-1)
+    e = jnp.exp(scores - m[..., None])
+    e = jnp.where(jnp.isfinite(m)[..., None], e, 0.0)
+    l = jnp.sum(e, axis=-1)
+    acc = jnp.einsum("bqhgk,bkhd->bqhgd", e.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return m, l, acc
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_offset: int = 0, kv_chunk: int = 1024,
+                    q_chunk: int = 2048, scale: Optional[float] = None,
+                    causal_skip: bool = False) -> jax.Array:
+    """q: (B, Sq, Hq, hd); k, v: (B, Skv, Hkv, hd) -> (B, Sq, Hq, hd).
+
+    q_offset: absolute position of q[0] (prefill continuation / decode).
+    causal_skip: unroll the q-chunk loop and scan only the causally-visible
+    kv prefix per q chunk — halves attention FLOPs at S=Sq=Skv (§Perf
+    beyond-paper optimization; default off to keep the baseline faithful).
+    """
+    B, Sq, Hq, hd = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qs = qs.reshape(B, Sq, Hkv, G, hd)
+
+    kv_chunk = min(kv_chunk, Skv)
+    q_chunk = min(q_chunk, Sq)
+    if Skv % kv_chunk or Sq % q_chunk:
+        # irregular sizes: single-block fallback
+        m, l, acc = _block_attn(qs, k, v,
+                                jnp.arange(Sq) + q_offset, jnp.arange(Skv),
+                                causal, window)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+    nkv = Skv // kv_chunk
+
+    def q_block(args, kv_hi: Optional[int] = None):
+        qb, qpos = args                              # (B, qc, Hkv, G, hd)
+        hi = nkv if kv_hi is None else kv_hi
+
+        def kv_step(carry, inputs):
+            m0, l0, acc0 = carry
+            kb, vb, kpos = inputs
+            m1, l1, acc1 = _block_attn(qb, kb, vb, qpos, kpos, causal, window)
+            m = jnp.maximum(m0, m1)
+            a0 = jnp.exp(m0 - m)
+            a1 = jnp.exp(m1 - m)
+            return (m, l0 * a0 + l1 * a1,
+                    acc0 * a0[..., None] + acc1 * a1[..., None]), None
+
+        init = (jnp.full((B, q_chunk, Hkv, G), NEG_INF),
+                jnp.zeros((B, q_chunk, Hkv, G), jnp.float32),
+                jnp.zeros((B, q_chunk, Hkv, G, hd), jnp.float32))
+        ks = k[:, : hi * kv_chunk].reshape(B, hi, kv_chunk, Hkv,
+                                           hd).swapaxes(0, 1)
+        vs = v[:, : hi * kv_chunk].reshape(B, hi, kv_chunk, Hkv,
+                                           hd).swapaxes(0, 1)
+        kpos = jnp.arange(hi * kv_chunk).reshape(hi, kv_chunk)
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (ks, vs, kpos))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    nq = Sq // q_chunk
+    qb = qs.reshape(B, nq, q_chunk, Hkv, G, hd).swapaxes(0, 1)
+    qpos = (jnp.arange(Sq) + q_offset).reshape(nq, q_chunk)
+
+    if causal_skip and causal and q_offset == 0 and Sq == Skv and not window:
+        # unrolled q chunks: chunk i only scans kv blocks [0, i] — the
+        # triangular schedule (S/kv_chunk x static slices, small HLO each)
+        outs = []
+        for i in range(nq):
+            hi = min(((i + 1) * q_chunk + kv_chunk - 1) // kv_chunk, nkv)
+            outs.append(q_block((qb[i], qpos[i]), kv_hi=hi))
+        out = jnp.stack(outs, 0)
+    else:
+        out = jax.lax.map(q_block, (qb, qpos))       # (nq, B, qc, ...)
+    out = out.swapaxes(0, 1).reshape(B, Sq, Hq, hd)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     length: jax.Array, *, window: int = 0,
+                     scale: Optional[float] = None) -> jax.Array:
+    """Single-position attention over a (possibly ring-buffered) KV cache.
+
+    q: (B, 1, Hq, hd); caches: (B, S, Hkv, hd); length: () current #valid.
+    For window > 0 the cache is a ring buffer of size S = window and all slots
+    written so far are valid.
+    """
+    B, _, Hq, hd = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    qs = qs.reshape(B, Hkv, G, hd)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qs, k_cache,
+                        preferred_element_type=jnp.float32)
+    if window > 0:
+        valid = jnp.arange(S) < jnp.minimum(length, S)
+    else:
+        valid = jnp.arange(S) < length
+    scores = jnp.where(valid[None, None, None, :], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, hd).astype(q.dtype)

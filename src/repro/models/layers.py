@@ -1,0 +1,102 @@
+"""Shared neural layers: norms, MLPs, RoPE, initialisers (pure functional)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def dense_init(key, in_dim: int, out_shape, scale: float = 1.0,
+               dtype=jnp.bfloat16):
+    """Truncated-normal fan-in init, stored as (in_dim, *out_shape)."""
+    shape = (in_dim,) + tuple(out_shape)
+    std = scale / max(in_dim, 1) ** 0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return (jax.random.normal(key, (vocab, d), jnp.float32)
+            * (1.0 / d ** 0.5)).astype(dtype)
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+    return out.astype(x.dtype)
+
+
+def layer_norm(x: jax.Array, w: jax.Array, b: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * w.astype(jnp.float32) + b.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+           w_down: jax.Array) -> jax.Array:
+    """SwiGLU MLP: down( silu(x@gate) * (x@up) )."""
+    g = jax.nn.silu(jnp.einsum("...d,df->...f", x, w_gate))
+    u = jnp.einsum("...d,df->...f", x, w_up)
+    return jnp.einsum("...f,fd->...d", (g * u).astype(x.dtype), w_down)
+
+
+def gelu_mlp(x: jax.Array, w_in: jax.Array, b_in, w_out: jax.Array, b_out):
+    h = jnp.einsum("...d,df->...f", x, w_in)
+    if b_in is not None:
+        h = h + b_in
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    o = jnp.einsum("...f,fd->...d", h, w_out)
+    if b_out is not None:
+        o = (o.astype(jnp.float32) + b_out).astype(x.dtype)
+    return o
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_angles(positions: jax.Array, dim: int, base: float = 10000.0):
+    """positions (...,) -> (cos, sin) of shape (..., dim//2)."""
+    inv = 1.0 / (base ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, base: float = 10000.0,
+               fraction: float = 1.0) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) or (S,).
+
+    fraction < 1 rotates only the first `fraction*hd` dims (ChatGLM-style
+    partial rotary / RoPE-2d: the remaining dims are position-independent).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    cos, sin = rope_angles(positions, rot, base)   # (B, S, rot/2)
+    cos = cos[..., None, :]                        # (B, S, 1, rot/2)
+    sin = sin[..., None, :]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin,
+                           x2f * cos + x1f * sin], axis=-1).astype(x.dtype)
+    return jnp.concatenate([out, xp], axis=-1) if rot < hd else out
+
+
+def sinusoidal_pos(S: int, d: int, offset: int = 0) -> jax.Array:
+    pos = jnp.arange(offset, offset + S, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos * inv
+    pe = jnp.zeros((S, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+    return pe

@@ -1,0 +1,876 @@
+"""Model zoo: init/apply for every assigned architecture family.
+
+Pure-functional: params are pytrees with layers STACKED on a leading axis so
+the forward pass is a `lax.scan` over layers (small HLO, fast compile, remat
+per layer).  Families:
+
+  dense / vlm  — GQA transformer (RoPE, optional QKV bias, SwiGLU)
+  moe          — + capacity-based top-k MoE FFN (optional shared experts)
+  ssm          — Mamba-2 SSD blocks (attention-free)
+  hybrid       — RecurrentGemma pattern (rec, rec, attn) + tail
+  audio        — Whisper enc-dec (stub frame embeddings, sinusoidal pos)
+
+Three entry points per model: `loss` (training), `prefill` (builds the cache
+and returns last-position logits) and `decode_step` (one token).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as lru_lib
+from repro.models import ssm as ssm_lib
+
+PyTree = Any
+PDT = jnp.bfloat16  # param dtype
+
+
+# ===========================================================================
+# init helpers
+# ===========================================================================
+
+def _norm_params(key, cfg: ArchConfig, d: int):
+    if cfg.norm_type == "layer":
+        return {"w": jnp.zeros((d,), jnp.float32),
+                "b": jnp.zeros((d,), jnp.float32)}
+    return {"w": jnp.zeros((d,), jnp.float32)}
+
+
+def _apply_norm(p, x, cfg: ArchConfig):
+    if cfg.norm_type == "layer":
+        return L.layer_norm(x, 1.0 + p["w"], p["b"], cfg.norm_eps)
+    return L.rms_norm(x, p["w"], cfg.norm_eps)
+
+
+def _attn_params(key, cfg: ArchConfig, cross: bool = False):
+    D, Hq, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": L.dense_init(ks[0], D, (Hq, hd), dtype=PDT),
+        "wk": L.dense_init(ks[1], D, (Hkv, hd), dtype=PDT),
+        "wv": L.dense_init(ks[2], D, (Hkv, hd), dtype=PDT),
+        "wo": L.dense_init(ks[3], Hq * hd, (D,), dtype=PDT).reshape(Hq, hd, D),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((Hq, hd), jnp.float32)
+        p["bk"] = jnp.zeros((Hkv, hd), jnp.float32)
+        p["bv"] = jnp.zeros((Hkv, hd), jnp.float32)
+    return p
+
+
+def _mlp_params(key, cfg: ArchConfig, d_ff: Optional[int] = None):
+    D = cfg.d_model
+    F = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act == "gelu":
+        return {"w_in": L.dense_init(ks[0], D, (F,), dtype=PDT),
+                "b_in": jnp.zeros((F,), jnp.float32),
+                "w_out": L.dense_init(ks[1], F, (D,), dtype=PDT),
+                "b_out": jnp.zeros((D,), jnp.float32)}
+    return {"w_gate": L.dense_init(ks[0], D, (F,), dtype=PDT),
+            "w_up": L.dense_init(ks[1], D, (F,), dtype=PDT),
+            "w_down": L.dense_init(ks[2], F, (D,), dtype=PDT)}
+
+
+def _moe_params(key, cfg: ArchConfig):
+    D, E, F = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    std = 1.0 / D ** 0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (D, E), jnp.float32) * std
+                   ).astype(jnp.float32),
+        "we_gate": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * std
+                    ).astype(PDT),
+        "we_up": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * std
+                  ).astype(PDT),
+        "we_down": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                    * (1.0 / F ** 0.5)).astype(PDT),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.n_shared_experts * cfg.moe_d_ff
+        p["shared"] = _mlp_params(ks[4], cfg, Fs)
+    return p
+
+
+def _dense_layer_params(key, cfg: ArchConfig, cross: bool = False):
+    ks = jax.random.split(key, 5)
+    p = {"ln1": _norm_params(ks[0], cfg, cfg.d_model),
+         "attn": _attn_params(ks[1], cfg),
+         "ln2": _norm_params(ks[2], cfg, cfg.d_model)}
+    if cfg.family == "moe":
+        p["moe"] = _moe_params(ks[3], cfg)
+    else:
+        p["mlp"] = _mlp_params(ks[3], cfg)
+    if cross:
+        p["lnx"] = _norm_params(ks[4], cfg, cfg.d_model)
+        p["xattn"] = _attn_params(jax.random.fold_in(ks[4], 1), cfg,
+                                  cross=True)
+    return p
+
+
+def _mamba_layer_params(key, cfg: ArchConfig):
+    D, Di, N, H, W = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                      cfg.ssm_heads, cfg.conv_width)
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": _norm_params(ks[0], cfg, D),
+        "wz": L.dense_init(ks[1], D, (Di,), dtype=PDT),
+        "wx": L.dense_init(ks[2], D, (Di,), dtype=PDT),
+        "wB": L.dense_init(ks[3], D, (N,), dtype=PDT),
+        "wC": L.dense_init(ks[4], D, (N,), dtype=PDT),
+        "wdt": L.dense_init(ks[5], D, (H,), dtype=PDT),
+        "conv_x": (jax.random.normal(ks[6], (W, Di), jnp.float32)
+                   * (1.0 / W ** 0.5)).astype(PDT),
+        "conv_b": jnp.zeros((Di,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "Dskip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.full((H,), -2.0, jnp.float32),
+        "out_norm": _norm_params(ks[7], cfg, Di),
+        "wo": L.dense_init(jax.random.fold_in(ks[7], 1), Di, (D,), dtype=PDT),
+    }
+
+
+def _rec_layer_params(key, cfg: ArchConfig):
+    D, Wd = cfg.d_model, cfg.lru_width
+    ks = jax.random.split(key, 9)
+    return {
+        "norm": _norm_params(ks[0], cfg, D),
+        "w_x": L.dense_init(ks[1], D, (Wd,), dtype=PDT),
+        "w_gate": L.dense_init(ks[2], D, (Wd,), dtype=PDT),
+        "conv_w": (jax.random.normal(ks[3], (cfg.conv_width, Wd), jnp.float32)
+                   * 0.5).astype(PDT),
+        "conv_b": jnp.zeros((Wd,), jnp.float32),
+        "lam": jnp.linspace(0.5, 4.0, Wd, dtype=jnp.float32),
+        "w_r": L.dense_init(ks[4], Wd, (Wd,), dtype=PDT),
+        "b_r": jnp.zeros((Wd,), jnp.float32),
+        "w_i": L.dense_init(ks[5], Wd, (Wd,), dtype=PDT),
+        "b_i": jnp.zeros((Wd,), jnp.float32),
+        "w_out": L.dense_init(ks[6], Wd, (D,), dtype=PDT),
+        "ln2": _norm_params(ks[7], cfg, D),
+        "mlp": _mlp_params(ks[8], cfg),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> PyTree:
+    kv, kh, kl, ke, kf = jax.random.split(key, 5)
+    p: Dict[str, Any] = {
+        "embed": L.embed_init(kv, cfg.vocab_padded, cfg.d_model),
+        "lm_head": L.dense_init(kh, cfg.d_model, (cfg.vocab_padded,),
+                                dtype=PDT),
+        "final_norm": _norm_params(kf, cfg, cfg.d_model),
+    }
+    stack = lambda fn, n, k: jax.vmap(lambda kk: fn(kk, cfg))(
+        jax.random.split(k, n))
+    if cfg.family in ("dense", "moe", "vlm"):
+        p["layers"] = stack(_dense_layer_params, cfg.n_layers, kl)
+        if cfg.family == "vlm":
+            p["patch_proj"] = L.dense_init(ke, cfg.frontend_dim,
+                                           (cfg.d_model,), dtype=PDT)
+    elif cfg.family == "ssm":
+        p["layers"] = stack(_mamba_layer_params, cfg.n_layers, kl)
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        n_groups = cfg.n_layers // len(pat)
+        tail_n = cfg.n_layers - n_groups * len(pat)
+
+        def group(k, cfg):
+            kk = jax.random.split(k, len(pat))
+            g = {}
+            for i, kind in enumerate(pat):
+                g[f"b{i}_{kind}"] = (_rec_layer_params(kk[i], cfg)
+                                     if kind == "rec"
+                                     else _dense_layer_params(kk[i], cfg))
+            return g
+
+        p["groups"] = stack(group, n_groups, kl)
+        if tail_n:
+            p["tail"] = stack(_rec_layer_params, tail_n,
+                              jax.random.fold_in(kl, 1))
+    elif cfg.family == "audio":
+        p["enc_layers"] = stack(_dense_layer_params, cfg.enc_layers, ke)
+        p["dec_layers"] = jax.vmap(
+            lambda kk: _dense_layer_params(kk, cfg, cross=True))(
+            jax.random.split(kl, cfg.n_layers))
+    else:
+        raise ValueError(cfg.family)
+    return p
+
+
+# ===========================================================================
+# blocks — sequence (train/prefill) path
+# ===========================================================================
+
+def _attn_seq(p, x, cfg: ArchConfig, positions, *, causal=True, window=0,
+              kv_override=None):
+    """x: (B, S, D) -> (out, (k, v)). kv_override: cross-attention source."""
+    B, S, D = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"].astype(q.dtype)
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+        if "bk" in p:
+            k = k + p["bk"].astype(k.dtype)
+            v = v + p["bv"].astype(v.dtype)
+        if cfg.pos_embedding == "rope":
+            q = L.apply_rope(q, positions, base=cfg.rope_base,
+                             fraction=cfg.rope_fraction)
+            k = L.apply_rope(k, positions, base=cfg.rope_base,
+                             fraction=cfg.rope_fraction)
+    else:
+        k, v = kv_override
+    o = attn.flash_attention(q, k, v, causal=causal, window=window,
+                             kv_chunk=cfg.attn_chunk,
+                             causal_skip=cfg.causal_skip)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return out, (k, v)
+
+
+def _ffn_seq(lp, x, cfg: ArchConfig):
+    if cfg.family == "moe":
+        # decode (S==1) must be drop-free: capacity covers every token
+        factor = (float(cfg.n_experts) if x.shape[1] == 1
+                  else cfg.moe_capacity_factor)
+        y, aux = moe_lib.moe_ffn(x, lp["moe"]["we_gate"], lp["moe"]["we_up"],
+                                 lp["moe"]["we_down"], lp["moe"]["router"],
+                                 top_k=cfg.experts_per_token,
+                                 capacity_factor=factor)
+        if "shared" in lp["moe"]:
+            y = y + _mlp_apply(lp["moe"]["shared"], x, cfg)
+        return y, aux
+    return _mlp_apply(lp["mlp"], x, cfg), 0.0
+
+
+def _mlp_apply(mp, x, cfg: ArchConfig):
+    if cfg.mlp_act == "gelu":
+        return L.gelu_mlp(x, mp["w_in"], mp["b_in"], mp["w_out"], mp["b_out"])
+    return L.swiglu(x, mp["w_gate"], mp["w_up"], mp["w_down"])
+
+
+def _dense_block_seq(lp, x, cfg: ArchConfig, positions, *, causal=True,
+                     window=0, cross_kv=None):
+    h, kv = _attn_seq(lp["attn"], _apply_norm(lp["ln1"], x, cfg), cfg,
+                      positions, causal=causal, window=window)
+    x = x + h
+    if cross_kv is not None:
+        hx, _ = _attn_seq(lp["xattn"], _apply_norm(lp["lnx"], x, cfg), cfg,
+                          positions, causal=False, kv_override=cross_kv)
+        x = x + hx
+    f, aux = _ffn_seq(lp, _apply_norm(lp["ln2"], x, cfg), cfg)
+    return x + f, kv, aux
+
+
+def _mamba_block_seq(lp, x, cfg: ArchConfig):
+    h = _apply_norm(lp["norm"], x, cfg)
+    z = jnp.einsum("bsd,dc->bsc", h, lp["wz"])
+    xr = jnp.einsum("bsd,dc->bsc", h, lp["wx"])
+    Bm = jnp.einsum("bsd,dn->bsn", h, lp["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", h, lp["wC"])
+    dt = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", h, lp["wdt"]).astype(jnp.float32)
+        + lp["dt_bias"])
+    xr, _ = ssm_lib.causal_conv1d(xr, lp["conv_x"], lp["conv_b"])
+    xr = jax.nn.silu(xr.astype(jnp.float32)).astype(x.dtype)
+    Bsz, S, _ = x.shape
+    xh = xr.reshape(Bsz, S, cfg.ssm_heads, cfg.ssm_head_dim)
+    A = -jnp.exp(lp["A_log"])
+    y, _ = ssm_lib.ssd_chunked(xh, dt, A, Bm, Cm, chunk=cfg.ssd_chunk)
+    y = (y.astype(jnp.float32)
+         + lp["Dskip"][None, None, :, None] * xh.astype(jnp.float32)
+         ).astype(x.dtype)
+    y = y.reshape(Bsz, S, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = L.rms_norm(y, lp["out_norm"]["w"], cfg.norm_eps)
+    return x + jnp.einsum("bsc,cd->bsd", y, lp["wo"])
+
+
+def _rec_block_seq(lp, x, cfg: ArchConfig):
+    h = _apply_norm(lp["norm"], x, cfg)
+    xb = jnp.einsum("bsd,dw->bsw", h, lp["w_x"])
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, lp["w_gate"])
+                       .astype(jnp.float32)).astype(x.dtype)
+    xb, _ = ssm_lib.causal_conv1d(xb, lp["conv_w"], lp["conv_b"])
+    y, _ = lru_lib.rglru_scan(xb, lp["lam"], lp["w_r"], lp["b_r"],
+                              lp["w_i"], lp["b_i"])
+    y = y * gate
+    x = x + jnp.einsum("bsw,wd->bsd", y, lp["w_out"])
+    f = _mlp_apply(lp["mlp"], _apply_norm(lp["ln2"], x, cfg), cfg)
+    return x + f
+
+
+# ===========================================================================
+# backbones
+# ===========================================================================
+
+def _embed_inputs(params, cfg: ArchConfig, batch) -> Tuple[jax.Array, jax.Array]:
+    """Returns (x (B, S, D), loss mask (B, S)) for training/prefill."""
+    if cfg.family == "audio":
+        return batch["frames"].astype(PDT), None
+    emb = params["embed"][batch["tokens"]]
+    if cfg.family == "vlm":
+        patches = jnp.einsum("bpf,fd->bpd", batch["patches"].astype(PDT),
+                             params["patch_proj"])
+        emb = jnp.concatenate([patches, emb], axis=1)
+    if cfg.pos_embedding == "sinusoidal":
+        emb = emb + L.sinusoidal_pos(emb.shape[1], cfg.d_model).astype(PDT)
+    return _shard_act(emb, cfg), None
+
+
+def _shard_act(x, cfg: ArchConfig):
+    """Constrain activations to batch-over-data sharding (§Perf).
+
+    Without this, XLA keeps the post-embedding psum 'partial' and pushes it
+    through the QKV projections — all-reducing full-batch f32 activations
+    once per layer (measured: 1.3 TB/step on qwen1.5-4b train_4k).
+    """
+    if not cfg.act_sharding:
+        return x
+    try:
+        from jax._src import mesh as mesh_lib
+        m = mesh_lib.thread_resources.env.physical_mesh
+        if m.empty or x.ndim < 2:
+            return x
+        from jax.sharding import PartitionSpec as P
+        da = tuple(a for a in m.axis_names if a != "model")
+        size = 1
+        for a in da:
+            size *= m.shape[a]
+        if size <= 1 or x.shape[0] % size:
+            return x
+        spec = P(da if len(da) > 1 else da[0], *([None] * (x.ndim - 1)))
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def _maybe_remat(fn, cfg: ArchConfig):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        # save matmul outputs: no recompute of projections (and no replay of
+        # their tensor-parallel all-reduces) at the cost of activation memory
+        policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    else:
+        policy = jax.checkpoint_policies.nothing_saveable
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _backbone_seq(params, cfg: ArchConfig, x, positions, *, collect_kv=False,
+                  enc_out=None):
+    """Runs the stacked layers. Returns (hidden, stacked kv or None, aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, lp):
+            x, aux = carry
+            x, kv, a = _dense_block_seq(lp, x, cfg, positions)
+            return (_shard_act(x, cfg), aux + a), (kv if collect_kv else None)
+        body = _maybe_remat(body, cfg)
+        (x, aux_total), kvs = jax.lax.scan(body, (x, aux_total),
+                                           params["layers"])
+        return x, kvs, aux_total
+
+    if cfg.family == "ssm":
+        def body(x, lp):
+            return _shard_act(_mamba_block_seq(lp, x, cfg), cfg), None
+        body = _maybe_remat(body, cfg)
+        x, _ = jax.lax.scan(body, x, params["layers"])
+        return x, None, aux_total
+
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+
+        def gbody(x, gp):
+            kvs = {}
+            for i, kind in enumerate(pat):
+                lp = gp[f"b{i}_{kind}"]
+                if kind == "rec":
+                    x = _rec_block_seq(lp, x, cfg)
+                else:
+                    x, kv, _ = _dense_block_seq(lp, x, cfg, positions,
+                                                window=cfg.window)
+                    kvs[f"b{i}"] = kv if collect_kv else None
+            return _shard_act(x, cfg), kvs
+        gbody = _maybe_remat(gbody, cfg)
+        x, kvs = jax.lax.scan(gbody, x, params["groups"])
+        if "tail" in params:
+            def tbody(x, lp):
+                return _rec_block_seq(lp, x, cfg), None
+            tbody = _maybe_remat(tbody, cfg)
+            x, _ = jax.lax.scan(tbody, x, params["tail"])
+        return x, kvs, aux_total
+
+    if cfg.family == "audio":
+        # decoder over tokens with cross-attention to enc_out
+        def dbody(x, lp):
+            x, kv, _ = _dense_block_seq(lp, x, cfg, positions,
+                                        cross_kv=enc_out[0] if False else None,
+                                        )
+            return x, kv
+        # NOTE: cross kv is per-layer — handled in dedicated audio fns below
+        raise RuntimeError("audio family uses _whisper_* helpers")
+
+    raise ValueError(cfg.family)
+
+
+def _whisper_encode(params, cfg: ArchConfig, frames):
+    x = frames.astype(PDT)
+    x = x + L.sinusoidal_pos(x.shape[1], cfg.d_model).astype(PDT)
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, lp):
+        x, _, _ = _dense_block_seq(lp, x, cfg, pos, causal=False)
+        return _shard_act(x, cfg), None
+    body = _maybe_remat(body, cfg)
+    x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    return x
+
+
+def _whisper_decode_seq(params, cfg: ArchConfig, tokens, enc, *,
+                        collect_kv=False):
+    x = _shard_act(params["embed"][tokens], cfg)
+    x = x + L.sinusoidal_pos(x.shape[1], cfg.d_model).astype(PDT)
+    pos = jnp.arange(x.shape[1])
+
+    def body(x, lp):
+        xk = jnp.einsum("bsd,dhk->bshk", enc, lp["xattn"]["wk"])
+        xv = jnp.einsum("bsd,dhk->bshk", enc, lp["xattn"]["wv"])
+        x, kv, _ = _dense_block_seq(lp, x, cfg, pos, cross_kv=(xk, xv))
+        return _shard_act(x, cfg), ((kv, (xk, xv)) if collect_kv else None)
+    body = _maybe_remat(body, cfg)
+    x, kvs = jax.lax.scan(body, x, params["dec_layers"])
+    return x, kvs
+
+
+# ===========================================================================
+# loss (chunked-vocab cross entropy)
+# ===========================================================================
+
+def lm_loss(params, cfg: ArchConfig, hidden: jax.Array, labels: jax.Array,
+            mask: Optional[jax.Array] = None) -> jax.Array:
+    """hidden: (B, S, D); labels: (B, S). Chunked over S so the (B, S, V)
+    logits tensor is never materialised; each chunk is rematerialised in the
+    backward pass."""
+    B, S, D = hidden.shape
+    c = min(cfg.loss_chunk, S)
+    nc = S // c if S % c == 0 else 1
+    c = S // nc
+    W = params["lm_head"]
+
+    V = cfg.vocab
+
+    @jax.checkpoint
+    def chunk_nll(h, y, m):
+        logits = jnp.einsum("bsd,dv->bsv", h, W,
+                            preferred_element_type=jnp.float32)
+        if W.shape[-1] > V:  # padded vocab: mask phantom columns
+            logits = jnp.where(jnp.arange(W.shape[-1]) < V, logits, -1e30)
+        lz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return jnp.sum((lz - gold) * m)
+
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    hs = hidden.reshape(B, nc, c, D).swapaxes(0, 1)
+    ys = labels.reshape(B, nc, c).swapaxes(0, 1)
+    ms = mask.reshape(B, nc, c).swapaxes(0, 1)
+
+    def step(tot, inp):
+        h, y, m = inp
+        return tot + chunk_nll(h, y, m), None
+
+    tot, _ = jax.lax.scan(step, jnp.zeros((), jnp.float32), (hs, ys, ms))
+    return tot / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ===========================================================================
+# public API
+# ===========================================================================
+
+class Model(NamedTuple):
+    cfg: ArchConfig
+
+    def init(self, key: jax.Array) -> PyTree:
+        return init_params(self.cfg, key)
+
+    # ----- training -----
+    def loss(self, params: PyTree, batch: Dict[str, jax.Array]) -> jax.Array:
+        cfg = self.cfg
+        if cfg.family == "audio":
+            enc = _whisper_encode(params, cfg, batch["frames"])
+            x, _ = _whisper_decode_seq(params, cfg, batch["tokens"], enc)
+            x = _apply_norm(params["final_norm"], x, cfg)
+            return lm_loss(params, cfg, x, batch["labels"])
+        x, _ = _embed_inputs(params, cfg, batch)
+        positions = jnp.arange(x.shape[1])
+        x, _, aux = _backbone_seq(params, cfg, x, positions)
+        x = _apply_norm(params["final_norm"], x, cfg)
+        if cfg.family == "vlm":
+            P = cfg.n_patches
+            x = x[:, P:, :]
+        loss = lm_loss(params, cfg, x, batch["labels"])
+        return loss + 0.01 * aux
+
+    # ----- serving -----
+    def prefill(self, params: PyTree, batch: Dict[str, jax.Array],
+                cache_len: int) -> Tuple[jax.Array, PyTree]:
+        """Process the full prompt; returns (last logits (B, V), cache)."""
+        cfg = self.cfg
+        if cfg.family == "audio":
+            enc = _whisper_encode(params, cfg, batch["frames"])
+            x, kvs = _whisper_decode_seq(params, cfg, batch["tokens"], enc,
+                                         collect_kv=True)
+            (k, v), (xk, xv) = kvs
+            cache = {"k": _grow(k, cache_len), "v": _grow(v, cache_len),
+                     "xk": xk, "xv": xv,
+                     "len": jnp.asarray(batch["tokens"].shape[1], jnp.int32)}
+        elif cfg.family == "ssm":
+            x, cache = self._ssm_prefill(params, batch)
+        elif cfg.family == "hybrid":
+            x, cache = self._hybrid_prefill(params, batch, cache_len)
+        else:
+            x, _ = _embed_inputs(params, cfg, batch)
+            positions = jnp.arange(x.shape[1])
+            x, kvs, _ = _backbone_seq(params, cfg, x, positions,
+                                      collect_kv=True)
+            k, v = kvs
+            cache = {"k": _grow(k, cache_len), "v": _grow(v, cache_len),
+                     "len": jnp.asarray(x.shape[1], jnp.int32)}
+        x = _apply_norm(params["final_norm"], x, cfg)
+        logits = jnp.einsum("bd,dv->bv", x[:, -1, :], params["lm_head"],
+                            preferred_element_type=jnp.float32)
+        if logits.shape[-1] > cfg.vocab:
+            logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab,
+                               logits, -1e30)
+        return logits, cache
+
+    def _ssm_prefill(self, params, batch):
+        cfg = self.cfg
+        x, _ = _embed_inputs(params, cfg, batch)
+
+        def body(x, lp):
+            # rerun block but capture final state/conv tail
+            h = _apply_norm(lp["norm"], x, cfg)
+            z = jnp.einsum("bsd,dc->bsc", h, lp["wz"])
+            xr = jnp.einsum("bsd,dc->bsc", h, lp["wx"])
+            Bm = jnp.einsum("bsd,dn->bsn", h, lp["wB"])
+            Cm = jnp.einsum("bsd,dn->bsn", h, lp["wC"])
+            dt = jax.nn.softplus(
+                jnp.einsum("bsd,dh->bsh", h, lp["wdt"]).astype(jnp.float32)
+                + lp["dt_bias"])
+            xr, conv_tail = ssm_lib.causal_conv1d(xr, lp["conv_x"],
+                                                  lp["conv_b"])
+            xr = jax.nn.silu(xr.astype(jnp.float32)).astype(x.dtype)
+            Bsz, S, _ = x.shape
+            xh = xr.reshape(Bsz, S, cfg.ssm_heads, cfg.ssm_head_dim)
+            A = -jnp.exp(lp["A_log"])
+            y, state = ssm_lib.ssd_chunked(xh, dt, A, Bm, Cm,
+                                           chunk=cfg.ssd_chunk)
+            y = (y.astype(jnp.float32)
+                 + lp["Dskip"][None, None, :, None] * xh.astype(jnp.float32)
+                 ).astype(x.dtype)
+            y = y.reshape(Bsz, S, cfg.d_inner)
+            y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+            y = L.rms_norm(y, lp["out_norm"]["w"], cfg.norm_eps)
+            return x + jnp.einsum("bsc,cd->bsd", y, lp["wo"]), \
+                (state, conv_tail)
+
+        body = _maybe_remat(body, cfg)
+        x, (states, tails) = jax.lax.scan(body, x, params["layers"])
+        cache = {"state": states, "conv": tails,
+                 "len": jnp.asarray(x.shape[1], jnp.int32)}
+        return x, cache
+
+    def _hybrid_prefill(self, params, batch, cache_len):
+        cfg = self.cfg
+        x, _ = _embed_inputs(params, cfg, batch)
+        positions = jnp.arange(x.shape[1])
+        pat = cfg.block_pattern
+        W = cfg.window
+
+        def rec_with_state(lp, x):
+            h = _apply_norm(lp["norm"], x, cfg)
+            xb = jnp.einsum("bsd,dw->bsw", h, lp["w_x"])
+            gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, lp["w_gate"])
+                               .astype(jnp.float32)).astype(x.dtype)
+            xb, tail = ssm_lib.causal_conv1d(xb, lp["conv_w"], lp["conv_b"])
+            y, hfin = lru_lib.rglru_scan(xb, lp["lam"], lp["w_r"], lp["b_r"],
+                                         lp["w_i"], lp["b_i"])
+            y = y * gate
+            x = x + jnp.einsum("bsw,wd->bsd", y, lp["w_out"])
+            f = _mlp_apply(lp["mlp"], _apply_norm(lp["ln2"], x, cfg), cfg)
+            return x + f, (hfin, tail)
+
+        def gbody(x, gp):
+            st = {}
+            for i, kind in enumerate(pat):
+                lp = gp[f"b{i}_{kind}"]
+                if kind == "rec":
+                    x, s = rec_with_state(lp, x)
+                    st[f"b{i}"] = s
+                else:
+                    x, kv, _ = _dense_block_seq(lp, x, cfg, positions,
+                                                window=W)
+                    k, v = kv
+                    st[f"b{i}"] = (_ring_init(k, W), _ring_init(v, W))
+            return x, st
+        gbody = _maybe_remat(gbody, cfg)
+        x, gstates = jax.lax.scan(gbody, x, params["groups"])
+        cache = {"groups": gstates,
+                 "len": jnp.asarray(x.shape[1], jnp.int32)}
+        if "tail" in params:
+            def tbody(x, lp):
+                x, s = rec_with_state(lp, x)
+                return x, s
+            tbody = _maybe_remat(tbody, cfg)
+            x, tstates = jax.lax.scan(tbody, x, params["tail"])
+            cache["tail"] = tstates
+        return x, cache
+
+    # ----- decode -----
+    def init_cache(self, batch_size: int, cache_len: int) -> PyTree:
+        """Zero-initialised cache (for decode-only dry runs)."""
+        cfg = self.cfg
+        B, S = batch_size, cache_len
+        ln = jnp.asarray(0, jnp.int32)
+        if cfg.family == "ssm":
+            return {"state": jnp.zeros((cfg.n_layers, B, cfg.ssm_heads,
+                                        cfg.ssm_head_dim, cfg.ssm_state),
+                                       jnp.float32),
+                    "conv": jnp.zeros((cfg.n_layers, B, cfg.conv_width - 1,
+                                       cfg.d_inner), PDT),
+                    "len": ln}
+        if cfg.family == "hybrid":
+            pat = cfg.block_pattern
+            G = cfg.n_layers // len(pat)
+            W = cfg.window
+            gst = {}
+            for i, kind in enumerate(pat):
+                if kind == "rec":
+                    gst[f"b{i}"] = (
+                        jnp.zeros((G, B, cfg.lru_width), jnp.float32),
+                        jnp.zeros((G, B, cfg.conv_width - 1, cfg.lru_width),
+                                  PDT))
+                else:
+                    kv = jnp.zeros((G, B, W, cfg.n_kv_heads, cfg.head_dim),
+                                   PDT)
+                    gst[f"b{i}"] = (kv, kv)
+            cache = {"groups": gst, "len": ln}
+            tail_n = cfg.n_layers - G * len(pat)
+            if tail_n:
+                cache["tail"] = (
+                    jnp.zeros((tail_n, B, cfg.lru_width), jnp.float32),
+                    jnp.zeros((tail_n, B, cfg.conv_width - 1, cfg.lru_width),
+                              PDT))
+            return cache
+        nl = cfg.n_layers
+        kv = jnp.zeros((nl, B, S, cfg.n_kv_heads, cfg.head_dim), PDT)
+        cache = {"k": kv, "v": kv, "len": ln}
+        if cfg.family == "audio":
+            cache["xk"] = jnp.zeros((nl, B, S, cfg.n_kv_heads, cfg.head_dim),
+                                    PDT)
+            cache["xv"] = cache["xk"]
+        return cache
+
+    def decode_step(self, params: PyTree, tokens: jax.Array, cache: PyTree
+                    ) -> Tuple[jax.Array, PyTree]:
+        """tokens: (B, 1) -> (logits (B, V), updated cache)."""
+        cfg = self.cfg
+        pos = cache["len"]
+        x = params["embed"][tokens]
+        if cfg.pos_embedding == "sinusoidal":
+            # dynamic offset: gather row `pos` of a static table
+            table = L.sinusoidal_pos(cache_size_of(cache, cfg), cfg.d_model)
+            x = x + table[pos][None, None, :].astype(PDT)
+
+        if cfg.family == "ssm":
+            x, cache = self._ssm_decode(params, x, cache)
+        elif cfg.family == "hybrid":
+            x, cache = self._hybrid_decode(params, x, cache, pos)
+        else:
+            x, cache = self._kv_decode(params, x, cache, pos)
+        x = _apply_norm(params["final_norm"], x, cfg)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"],
+                            preferred_element_type=jnp.float32)[:, 0]
+        if logits.shape[-1] > cfg.vocab:
+            logits = jnp.where(jnp.arange(logits.shape[-1]) < cfg.vocab,
+                               logits, -1e30)
+        return logits, cache
+
+    def _kv_decode(self, params, x, cache, pos):
+        cfg = self.cfg
+        posv = pos[None] if pos.ndim == 0 else pos
+
+        def body(x, inp):
+            if cfg.family == "audio":
+                lp, kc, vc, xk, xv = inp
+            else:
+                lp, kc, vc = inp
+            h = _apply_norm(lp["ln1"], x, cfg)
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+            if "bq" in lp["attn"]:
+                q = q + lp["attn"]["bq"].astype(q.dtype)
+                k = k + lp["attn"]["bk"].astype(k.dtype)
+                v = v + lp["attn"]["bv"].astype(v.dtype)
+            if cfg.pos_embedding == "rope":
+                q = L.apply_rope(q, posv, base=cfg.rope_base,
+                                 fraction=cfg.rope_fraction)
+                k = L.apply_rope(k, posv, base=cfg.rope_base,
+                                 fraction=cfg.rope_fraction)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, pos, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, pos, axis=1)
+            o = attn.decode_attention(q, kc, vc, pos + 1)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+            if cfg.family == "audio":
+                hx = _apply_norm(lp["lnx"], x, cfg)
+                qx = jnp.einsum("bsd,dhk->bshk", hx, lp["xattn"]["wq"])
+                ox = attn.decode_attention(qx, xk, xv,
+                                           jnp.asarray(xk.shape[1], jnp.int32))
+                x = x + jnp.einsum("bshk,hkd->bsd", ox, lp["xattn"]["wo"])
+            f, _ = _ffn_seq(lp, _apply_norm(lp["ln2"], x, cfg), cfg)
+            x = x + f
+            if cfg.family == "audio":
+                return x, (kc, vc, xk, xv)
+            return x, (kc, vc)
+
+        if cfg.family == "audio":
+            xs = (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"])
+            x, (kn, vn, xk, xv) = jax.lax.scan(body, x, xs)
+            return x, {"k": kn, "v": vn, "xk": xk, "xv": xv,
+                       "len": pos + 1}
+        xs = (params["layers"], cache["k"], cache["v"])
+        x, (kn, vn) = jax.lax.scan(body, x, xs)
+        return x, {"k": kn, "v": vn, "len": pos + 1}
+
+    def _ssm_decode(self, params, x, cache):
+        cfg = self.cfg
+
+        def body(x, inp):
+            lp, state, tail = inp
+            h = _apply_norm(lp["norm"], x, cfg)          # (B, 1, D)
+            z = jnp.einsum("bsd,dc->bsc", h, lp["wz"])
+            xr = jnp.einsum("bsd,dc->bsc", h, lp["wx"])
+            Bm = jnp.einsum("bsd,dn->bsn", h, lp["wB"])[:, 0]
+            Cm = jnp.einsum("bsd,dn->bsn", h, lp["wC"])[:, 0]
+            dt = jax.nn.softplus(
+                jnp.einsum("bsd,dh->bsh", h, lp["wdt"]).astype(jnp.float32)
+                + lp["dt_bias"])[:, 0]
+            xr, tail = ssm_lib.causal_conv1d(xr, lp["conv_x"], lp["conv_b"],
+                                             tail)
+            xr = jax.nn.silu(xr.astype(jnp.float32)).astype(x.dtype)
+            Bsz = x.shape[0]
+            xh = xr.reshape(Bsz, cfg.ssm_heads, cfg.ssm_head_dim)
+            A = -jnp.exp(lp["A_log"])
+            y, state = ssm_lib.ssd_decode_step(state, xh, dt, A, Bm, Cm)
+            y = (y.astype(jnp.float32)
+                 + lp["Dskip"][None, :, None] * xh.astype(jnp.float32)
+                 ).astype(x.dtype)
+            y = y.reshape(Bsz, 1, cfg.d_inner)
+            y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+            y = L.rms_norm(y, lp["out_norm"]["w"], cfg.norm_eps)
+            return x + jnp.einsum("bsc,cd->bsd", y, lp["wo"]), (state, tail)
+
+        x, (states, tails) = jax.lax.scan(
+            body, x, (params["layers"], cache["state"], cache["conv"]))
+        return x, {"state": states, "conv": tails, "len": cache["len"] + 1}
+
+    def _hybrid_decode(self, params, x, cache, pos):
+        cfg = self.cfg
+        pat = cfg.block_pattern
+        W = cfg.window
+        posv = pos[None]
+
+        def rec_step(lp, x, st):
+            h_prev, tail = st
+            h = _apply_norm(lp["norm"], x, cfg)
+            xb = jnp.einsum("bsd,dw->bsw", h, lp["w_x"])
+            gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", h, lp["w_gate"])
+                               .astype(jnp.float32)).astype(x.dtype)
+            xb, tail = ssm_lib.causal_conv1d(xb, lp["conv_w"], lp["conv_b"],
+                                             tail)
+            y, h_new = lru_lib.rglru_step(xb[:, 0], h_prev, lp["lam"],
+                                          lp["w_r"], lp["b_r"], lp["w_i"],
+                                          lp["b_i"])
+            y = y[:, None, :] * gate
+            x = x + jnp.einsum("bsw,wd->bsd", y, lp["w_out"])
+            f = _mlp_apply(lp["mlp"], _apply_norm(lp["ln2"], x, cfg), cfg)
+            return x + f, (h_new, tail)
+
+        def attn_step(lp, x, st):
+            kc, vc = st
+            h = _apply_norm(lp["ln1"], x, cfg)
+            q = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wq"])
+            k = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wk"])
+            v = jnp.einsum("bsd,dhk->bshk", h, lp["attn"]["wv"])
+            q = L.apply_rope(q, posv, base=cfg.rope_base)
+            k = L.apply_rope(k, posv, base=cfg.rope_base)
+            slot = jnp.mod(pos, W)
+            kc = jax.lax.dynamic_update_slice_in_dim(kc, k, slot, axis=1)
+            vc = jax.lax.dynamic_update_slice_in_dim(vc, v, slot, axis=1)
+            o = attn.decode_attention(q, kc, vc, pos + 1, window=W)
+            x = x + jnp.einsum("bshk,hkd->bsd", o, lp["attn"]["wo"])
+            f, _ = _ffn_seq(lp, _apply_norm(lp["ln2"], x, cfg), cfg)
+            return x + f, (kc, vc)
+
+        def gbody(x, inp):
+            gp, gst = inp
+            new = {}
+            for i, kind in enumerate(pat):
+                lp = gp[f"b{i}_{kind}"]
+                if kind == "rec":
+                    x, new[f"b{i}"] = rec_step(lp, x, gst[f"b{i}"])
+                else:
+                    x, new[f"b{i}"] = attn_step(lp, x, gst[f"b{i}"])
+            return x, new
+
+        x, gnew = jax.lax.scan(gbody, x, (params["groups"], cache["groups"]))
+        out = {"groups": gnew, "len": pos + 1}
+        if "tail" in cache:
+            def tbody(x, inp):
+                lp, st = inp
+                return rec_step(lp, x, st)
+            x, tnew = jax.lax.scan(tbody, x, (params["tail"], cache["tail"]))
+            out["tail"] = tnew
+        return x, out
+
+
+def _grow(kv: jax.Array, cache_len: int) -> jax.Array:
+    """Pad prefill kv (L, B, S, H, hd) out to the full cache length."""
+    L_, B, S, H, hd = kv.shape
+    if S >= cache_len:
+        return kv[:, :, :cache_len]
+    pad = jnp.zeros((L_, B, cache_len - S, H, hd), kv.dtype)
+    return jnp.concatenate([kv, pad], axis=2)
+
+
+def _ring_init(k: jax.Array, W: int) -> jax.Array:
+    """Keep the last W positions of prefill kv (B, S, H, hd) as ring state,
+    laid out so that position p occupies slot p mod W (decode convention)."""
+    B, S, H, hd = k.shape
+    if S <= W:
+        pad = jnp.zeros((B, W - S, H, hd), k.dtype)
+        return jnp.concatenate([k, pad], axis=1)
+    last = k[:, S - W:, :, :]
+    # index j holds position S-W+j; want it at slot (S-W+j) mod W = (j+S) mod W
+    return jnp.roll(last, S % W, axis=1)
+
+
+def cache_size_of(cache, cfg: ArchConfig) -> int:
+    if "k" in cache:
+        return cache["k"].shape[2]
+    return 8192
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    return Model(cfg)

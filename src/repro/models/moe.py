@@ -1,0 +1,78 @@
+"""Mixture-of-Experts layer: top-k softmax routing with capacity-based
+sort dispatch (static shapes, expert-batched matmuls on the MXU).
+
+Dispatch: flatten tokens, take top-k experts per token, sort the (token,
+choice) pairs by expert id, compute each pair's rank within its expert, and
+scatter token activations into an (E, C, D) buffer (pairs over capacity C are
+dropped, standard GShard semantics).  Expert FFNs run as one batched einsum;
+outputs scatter back weighted by the router probabilities.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def capacity(tokens: int, n_experts: int, top_k: int,
+             factor: float = 1.25, multiple: int = 8) -> int:
+    c = int(tokens * top_k * factor / n_experts) + 1
+    return max(((c + multiple - 1) // multiple) * multiple, multiple)
+
+
+def moe_ffn(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+            w_down: jax.Array, router: jax.Array, *, top_k: int,
+            capacity_factor: float = 1.25
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, D); expert weights (E, D, F)/(E, F, D); router (D, E).
+
+    Returns (output (B, S, D), aux load-balancing loss ()).
+    """
+    B, S, D = x.shape
+    E, _, F = w_gate.shape
+    T = B * S
+    xt = x.reshape(T, D)
+
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32),
+                        router.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                 # (T, E)
+    gate, idx = jax.lax.top_k(probs, top_k)                 # (T, K)
+    gate = gate / jnp.maximum(jnp.sum(gate, -1, keepdims=True), 1e-9)
+
+    # aux loss (Switch): E * sum_e f_e * p_e
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce) / top_k
+
+    C = capacity(T, E, top_k, capacity_factor)
+    flat_e = idx.reshape(-1)                                # (T*K,)
+    # rank of each pair within its expert, by stable sort over expert id
+    order = jnp.argsort(flat_e, stable=True)
+    cnt = jax.ops.segment_sum(jnp.ones_like(flat_e, jnp.int32), flat_e,
+                              num_segments=E)
+    start = jnp.cumsum(cnt) - cnt
+    rank_sorted = jnp.arange(T * top_k, dtype=jnp.int32) - start[flat_e[order]]
+    rank = jnp.zeros((T * top_k,), jnp.int32).at[order].set(rank_sorted)
+
+    keep = rank < C
+    slot = jnp.where(keep, flat_e * C + rank, E * C)        # drop -> trash
+    token_of_pair = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+
+    # dispatch: (E*C+1, D) buffer
+    buf = jnp.zeros((E * C + 1, D), x.dtype).at[slot].set(xt[token_of_pair])
+    h = buf[: E * C].reshape(E, C, D)
+
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", h, w_gate))
+    u = jnp.einsum("ecd,edf->ecf", h, w_up)
+    out_e = jnp.einsum("ecf,efd->ecd", (g * u).astype(x.dtype), w_down)
+
+    out_flat = jnp.concatenate(
+        [out_e.reshape(E * C, D), jnp.zeros((1, D), x.dtype)], axis=0)
+    per_pair = out_flat[slot]                               # (T*K, D)
+    w = (gate.reshape(-1) * keep.astype(jnp.float32)).astype(jnp.float32)
+    y = jax.ops.segment_sum(per_pair.astype(jnp.float32) * w[:, None],
+                            token_of_pair, num_segments=T)
+    return y.reshape(B, S, D).astype(x.dtype), aux

@@ -1,0 +1,54 @@
+"""RG-LRU (Real-Gated Linear Recurrent Unit) — RecurrentGemma / Griffin block.
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+a_t = exp(-c * softplus(Lambda) * sigmoid(r_t)),   c = 8.
+
+Training/prefill uses an associative scan over the sequence; decode is a
+single recurrence step.  The temporal conv (width 4) precedes the gate.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+_C = 8.0
+
+
+def _gates(x, lam, w_r, b_r, w_i, b_i):
+    """x: (B, S, W). Returns (a (f32), gated input (f32))."""
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, w_r).astype(jnp.float32)
+                       + b_r.astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", x, w_i).astype(jnp.float32)
+                       + b_i.astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    return a, mult * i * x.astype(jnp.float32)
+
+
+def rglru_scan(x: jax.Array, lam: jax.Array, w_r, b_r, w_i, b_i,
+               h0: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, W) -> (y (B, S, W), final hidden (B, W))."""
+    B, S, W = x.shape
+    a, bx = _gates(x, lam, w_r, b_r, w_i, b_i)       # (B, S, W) f32
+    if h0 is not None:
+        # fold the carried state in as a virtual step via b_0 += a_0 * h0
+        bx = bx.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bx), axis=1)
+    return hh.astype(x.dtype), hh[:, -1, :]
+
+
+def rglru_step(x: jax.Array, h: jax.Array, lam: jax.Array, w_r, b_r, w_i, b_i
+               ) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, W), h: (B, W) -> (y, new h)."""
+    a, bx = _gates(x[:, None, :], lam, w_r, b_r, w_i, b_i)
+    new = a[:, 0] * h.astype(jnp.float32) + bx[:, 0]
+    return new.astype(x.dtype), new

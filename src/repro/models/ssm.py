@@ -1,0 +1,129 @@
+"""Mamba-2 SSD (state-space duality) layer — chunked matmul form.
+
+Follows Dao & Gu 2024 (arXiv:2405.21060) "minimal SSD": the sequence is split
+into chunks of length Q; intra-chunk terms are dense matmuls (MXU-friendly),
+inter-chunk terms propagate a (H, P, N) state with a short scan over chunks.
+Single B/C group (G=1), scalar-per-head A (the SSD restriction).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSMState(NamedTuple):
+    state: jax.Array  # (B, H, P, N) float32
+    conv: jax.Array   # (B, W-1, C) conv tail (C = conv channels)
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) with out[i,j] = sum_{j<m<=i} x[m], -inf above."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, d, -jnp.inf)
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+                Cm: jax.Array, *, chunk: int = 128,
+                init_state: jax.Array | None = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """SSD scan.
+
+    x:  (B, S, H, P) inputs; dt: (B, S, H) > 0 step sizes;
+    A:  (H,) < 0 decay rates; Bm, Cm: (B, S, N) input/output projections.
+    Returns (y (B, S, H, P), final state (B, H, P, N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        # pad to a chunk multiple with dt=0 steps (identity transitions,
+        # zero input contribution), then drop the padded outputs.
+        pad = Q - S % Q
+        y, final = ssd_chunked(
+            jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            jnp.pad(dt, ((0, 0), (0, pad), (0, 0))),
+            A,
+            jnp.pad(Bm, ((0, 0), (0, pad), (0, 0))),
+            jnp.pad(Cm, ((0, 0), (0, pad), (0, 0))),
+            chunk=Q, init_state=init_state)
+        return y[:, :S], final
+    nc = S // Q
+
+    xf = x.astype(jnp.float32) * dt[..., None].astype(jnp.float32)
+    dA = (dt.astype(jnp.float32) * A.astype(jnp.float32))     # (B, S, H)
+
+    # chunked views
+    xc = xf.reshape(Bsz, nc, Q, H, P)
+    dAc = dA.reshape(Bsz, nc, Q, H).transpose(0, 1, 3, 2)     # (B, nc, H, Q)
+    Bc = Bm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+    Cc = Cm.astype(jnp.float32).reshape(Bsz, nc, Q, N)
+
+    # intra-chunk (diagonal) term
+    L = jnp.exp(segsum(dAc))                                   # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)             # (B,nc,Q,Q)
+    y_diag = jnp.einsum("bchqk,bcqk,bckhp->bcqhp",
+                        L, scores, xc)
+
+    # chunk -> state contribution
+    dA_cum = jnp.cumsum(dAc, axis=-1)                          # (B,nc,H,Q)
+    dA_tot = dA_cum[..., -1:]                                  # (B,nc,H,1)
+    decay_out = jnp.exp(dA_tot - dA_cum)                       # (B,nc,H,Q)
+    states = jnp.einsum("bcqn,bchq,bcqhp->bchpn", Bc, decay_out, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_tot[..., 0])                      # (B,nc,H)
+    s0 = (jnp.zeros((Bsz, H, P, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(s, inp):
+        dec, st = inp
+        s_new = s * dec[0][..., None, None] + st[0]
+        return s_new, s
+
+    dec_t = chunk_decay.transpose(1, 0, 2)[:, None]            # (nc,1,B,H)
+    st_t = states.transpose(1, 0, 2, 3, 4)[:, None]            # (nc,1,B,H,P,N)
+    final, prev_states = jax.lax.scan(step, s0, (dec_t, st_t))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (B,nc,H,P,N)
+
+    decay_in = jnp.exp(dA_cum)                                 # (B,nc,H,Q)
+    y_off = jnp.einsum("bcqn,bchq,bchpn->bcqhp", Cc, decay_in, prev_states)
+
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state: jax.Array, x: jax.Array, dt: jax.Array,
+                    A: jax.Array, Bm: jax.Array, Cm: jax.Array
+                    ) -> Tuple[jax.Array, jax.Array]:
+    """One-token SSD update. state: (B,H,P,N); x: (B,H,P); dt: (B,H);
+    Bm/Cm: (B,N). Returns (y (B,H,P), new state)."""
+    dA = jnp.exp(dt.astype(jnp.float32) * A.astype(jnp.float32))  # (B,H)
+    xdt = x.astype(jnp.float32) * dt[..., None]
+    upd = jnp.einsum("bhp,bn->bhpn", xdt, Bm.astype(jnp.float32))
+    new = state * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new, Cm.astype(jnp.float32))
+    return y.astype(x.dtype), new
+
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array | None,
+                  tail: jax.Array | None = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: (B, S, C); w: (W, C); tail: (B, W-1, C).
+
+    Returns (y (B, S, C), new tail). Activation (silu) applied by caller."""
+    B, S, C = x.shape
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, W - 1, C), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)          # (B, S+W-1, C)
+    y = jnp.zeros((B, S, C), jnp.float32)
+    for i in range(W):
+        y = y + xp[:, i: i + S, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    return y.astype(x.dtype), xp[:, S:, :]

@@ -1,0 +1,6 @@
+from repro.train.optimizer import adafactor, adamw, make_optimizer
+from repro.train.train_step import make_train_step
+from repro.train.serve_step import make_decode_step, make_prefill
+
+__all__ = ["adafactor", "adamw", "make_optimizer", "make_train_step",
+           "make_decode_step", "make_prefill"]

@@ -1,0 +1,116 @@
+"""Optimizers with param-tree-shaped (hence identically sharded) state.
+
+AdamW: m, v in float32 (state = 8 bytes/param on top of bf16 params).
+Adafactor: factored second moment (rows+cols only) with no first moment —
+used for the 400B-class configs where full Adam state would not fit HBM
+(DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, jax.Array],
+                     Tuple[PyTree, PyTree]]
+
+
+def adamw(lr: float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          warmup: int = 100) -> Optimizer:
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        sf = jnp.minimum((step + 1) / warmup, 1.0) * lr
+        t = (step + 1).astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mh = m / (1 - b1 ** t)
+            vh = v / (1 - b2 ** t)
+            delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(
+                jnp.float32)
+            return (p.astype(jnp.float32) - sf * delta).astype(p.dtype), m, v
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_m = treedef.flatten_up_to(state["m"])
+        flat_v = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        outs = [upd(g, m, v, p)
+                for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        return (treedef.unflatten([o[0] for o in outs]),
+                {"m": treedef.unflatten([o[1] for o in outs]),
+                 "v": treedef.unflatten([o[2] for o in outs])})
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-3, decay: float = 0.8, eps: float = 1e-30,
+              clip: float = 1.0, warmup: int = 100) -> Optimizer:
+    """Factored RMS (Shazeer & Stern 2018), beta1=0."""
+
+    def init(params):
+        def st(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(st, params,
+                            is_leaf=lambda x: isinstance(x, jax.Array)
+                            or hasattr(x, "shape"))
+
+    def update(grads, state, params, step):
+        sf = jnp.minimum((step + 1) / warmup, 1.0) * lr
+        t = (step + 1).astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                r = beta * s["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * s["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rm = jnp.mean(r, axis=-1, keepdims=True)
+                vhat = (r[..., None] * c[..., None, :]
+                        / jnp.maximum(rm[..., None], eps))
+                u = gf / jnp.sqrt(jnp.maximum(vhat, eps))
+                ns = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = gf / jnp.sqrt(jnp.maximum(v, eps))
+                ns = {"v": v}
+            # update clipping by RMS
+            rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip)
+            return (p.astype(jnp.float32) - sf * u).astype(p.dtype), ns
+
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_s = treedef.flatten_up_to(state)
+        flat_p = treedef.flatten_up_to(params)
+        outs = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_s = treedef.unflatten([o[1] for o in outs])
+        return new_p, new_s
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(**kw)
+    if name == "adafactor":
+        return adafactor(**kw)
+    raise ValueError(name)

@@ -1,0 +1,42 @@
+"""Serving steps: prefill (prompt -> cache) and decode (one token/step).
+
+The decode step is the function lowered for the ``decode_*`` / ``long_*``
+dry-run shapes: one new token against a KV cache (or SSM/LRU state) of the
+cell's sequence length.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+
+PyTree = Any
+
+
+def make_prefill(cfg: ArchConfig, cache_len: int) -> Callable:
+    model = build_model(cfg)
+
+    def prefill(params: PyTree, batch: Dict[str, jax.Array]):
+        return model.prefill(params, batch, cache_len)
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, sample: bool = False) -> Callable:
+    model = build_model(cfg)
+
+    def decode_step(params: PyTree, tokens: jax.Array, cache: PyTree,
+                    key: jax.Array | None = None
+                    ) -> Tuple[jax.Array, PyTree]:
+        logits, cache = model.decode_step(params, tokens, cache)
+        if sample and key is not None:
+            nxt = jax.random.categorical(key, logits)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, cache
+
+    return decode_step

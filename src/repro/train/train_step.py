@@ -1,0 +1,36 @@
+"""Training step: loss + grad + optimizer update, ready for jit-SPMD."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import build_model
+from repro.train.optimizer import Optimizer, make_optimizer
+
+PyTree = Any
+
+
+def make_train_step(cfg: ArchConfig, opt: Optimizer | None = None
+                    ) -> Callable:
+    """Returns train_step(params, opt_state, batch, step) ->
+    (params, opt_state, metrics)."""
+    model = build_model(cfg)
+    opt = opt or make_optimizer(cfg.optimizer)
+
+    def train_step(params: PyTree, opt_state: PyTree,
+                   batch: Dict[str, jax.Array], step: jax.Array
+                   ) -> Tuple[PyTree, PyTree, Dict[str, jax.Array]]:
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(g.astype(jnp.float32) ** 2)
+            for g in jax.tree.leaves(grads)))
+        # global-norm clip at 1.0
+        scale = jnp.minimum(1.0, 1.0 / jnp.maximum(gnorm, 1e-6))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        params, opt_state = opt.update(grads, opt_state, params, step)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step

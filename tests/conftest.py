@@ -1,0 +1,27 @@
+import jax
+import jax.numpy as jnp
+import pytest
+
+# NOTE: no XLA_FLAGS here — tests must see the real (1-)device platform;
+# multi-device behaviour is tested via subprocesses (test_distributed.py).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="session")
+def blobs():
+    """Shared (X, meta) clustering dataset — one compile footprint."""
+    from repro.data import gmm_blobs
+    X = gmm_blobs(jax.random.PRNGKey(7), 4096, 24, 48)
+    return X
+
+
+@pytest.fixture(scope="session")
+def blob_gt(blobs):
+    from repro.core import brute_force_knn
+    return brute_force_knn(blobs, 16)

@@ -1,0 +1,22 @@
+"""Paper §4.3: the Alg.-3 graph supports competitive ANN search."""
+import jax
+import jax.numpy as jnp
+
+from repro.core import build_knn_graph, graph_search
+from repro.data import gmm_blobs
+
+
+def test_anns_recall_on_gk_graph(blobs):
+    g = build_knn_graph(blobs, 16, xi=32, tau=5, key=jax.random.PRNGKey(0))
+    # in-distribution queries: perturbed held-out points
+    q = blobs[:64] + 0.1 * jax.random.normal(jax.random.PRNGKey(9),
+                                             (64, blobs.shape[1]))
+    ids, d2 = graph_search(blobs, g.ids, q, topk=1, ef=48, iters=32)
+    # exact NN
+    dd = jnp.sum((q[:, None, :] - blobs[None]) ** 2, -1)
+    true1 = jnp.argmin(dd, 1)
+    recall = float(jnp.mean((ids[:, 0] == true1).astype(jnp.float32)))
+    assert recall > 0.8
+    # returned distances are exact for the returned ids
+    want = jnp.sum((q - blobs[ids[:, 0]]) ** 2, -1)
+    assert float(jnp.max(jnp.abs(want - d2[:, 0]))) < 1e-2

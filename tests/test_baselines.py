@@ -1,0 +1,44 @@
+"""Baselines the paper compares against: run + sanity quality ordering."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (closure_kmeans, distortion, lloyd, minibatch_kmeans,
+                        nn_descent, recall_top1)
+
+
+def test_lloyd_converges(blobs):
+    _, _, h = lloyd(blobs, 64, iters=20, key=jax.random.PRNGKey(0))
+    assert h[-1] <= h[0]
+    assert h[-1] < 0.7 * h[0]
+
+
+def test_lloyd_inits(blobs):
+    _, _, h_pp = lloyd(blobs, 64, iters=12, key=jax.random.PRNGKey(1),
+                       init="kmeans++")
+    _, _, h_rand = lloyd(blobs, 64, iters=12, key=jax.random.PRNGKey(1),
+                         init="random")
+    assert h_pp[-1] <= h_rand[-1] * 1.15  # ++ no worse (usually better)
+
+
+def test_minibatch_fast_but_coarse(blobs):
+    a, _ = minibatch_kmeans(blobs, 64, steps=60, key=jax.random.PRNGKey(2))
+    d_mb = float(distortion(blobs, a, 64))
+    _, _, h = lloyd(blobs, 64, iters=15, key=jax.random.PRNGKey(2))
+    assert d_mb < 2.0 * float(distortion(blobs,
+                                         jax.random.randint(
+                                             jax.random.PRNGKey(0),
+                                             (blobs.shape[0],), 0, 64), 64))
+    # paper Fig. 7: mini-batch quality clearly worse than Lloyd-class methods
+    assert d_mb > h[-1]
+
+
+def test_closure_kmeans_quality(blobs):
+    a, _, h = closure_kmeans(blobs, 64, iters=10, key=jax.random.PRNGKey(3))
+    _, _, hl = lloyd(blobs, 64, iters=15, key=jax.random.PRNGKey(3))
+    assert h[-1] <= hl[-1] * 1.25  # close to Lloyd (paper: good trade-off)
+
+
+def test_nn_descent_recall(blobs, blob_gt):
+    g = nn_descent(blobs, 16, iters=8, key=jax.random.PRNGKey(4))
+    assert float(recall_top1(g.ids, blob_gt)) > 0.85

@@ -1,0 +1,95 @@
+"""Distributed GK-means (shard_map) on 8 CPU devices — subprocess tests."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+CODE = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.data import gmm_blobs
+from repro.core import (build_knn_graph, two_means_tree, init_state,
+                        distortion, cluster_stats)
+from repro.core.distributed import make_sharded_epoch, sharded_distortion
+
+key = jax.random.PRNGKey(0)
+n, d, k = 4096, 16, 32
+assert len(jax.devices()) == 8
+X = gmm_blobs(key, n, d, 32)
+g = build_knn_graph(X, 8, xi=32, tau=3, key=key)
+a0 = two_means_tree(X, k, key)
+st = init_state(X, a0, k)
+mesh = jax.make_mesh((8,), ("data",))
+epoch = make_sharded_epoch(mesh, batch_size=128)
+dist_fn = sharded_distortion(mesh)
+assign, D, cnt = st.assign, st.D, st.cnt
+G = jnp.maximum(g.ids, 0)
+d_first = float(dist_fn(X, assign, D, cnt))
+for t in range(6):
+    assign, D, cnt, moves = epoch(X, G, assign, D, cnt,
+                                  jax.random.fold_in(key, t))
+d_last = float(distortion(X, assign, k))
+assert d_last < d_first, (d_first, d_last)
+s2 = cluster_stats(X, assign, k)
+np.testing.assert_allclose(np.asarray(D), np.asarray(s2.D),
+                           rtol=1e-4, atol=1e-2)
+np.testing.assert_allclose(np.asarray(cnt), np.asarray(s2.cnt))
+assert float(cnt.min()) >= 1.0
+# sharded distortion agrees with the single-device formula
+np.testing.assert_allclose(float(dist_fn(X, assign, D, cnt)), d_last,
+                           rtol=1e-4)
+print("DIST_OK", d_first, d_last)
+"""
+
+
+@pytest.mark.slow
+def test_sharded_epoch_8dev():
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
+                       text=True, env=env, timeout=900)
+    assert "DIST_OK" in r.stdout, r.stderr[-3000:]
+
+
+CODE_QUALITY = r"""
+import jax, jax.numpy as jnp
+from repro.data import gmm_blobs
+from repro.core import (build_knn_graph, two_means_tree, init_state, bkm,
+                        graph_candidates, distortion)
+from repro.core.distributed import make_sharded_epoch
+
+key = jax.random.PRNGKey(0)
+n, d, k = 4096, 16, 32
+X = gmm_blobs(key, n, d, 32)
+g = build_knn_graph(X, 8, xi=32, tau=3, key=key)
+G = jnp.maximum(g.ids, 0)
+a0 = two_means_tree(X, k, key)
+
+# single-device reference (same effective batch = 128*8)
+st = init_state(X, a0, k)
+for t in range(6):
+    st = bkm.bkm_epoch(X, st, graph_candidates(G), 1024,
+                       jax.random.fold_in(key, t))
+ref = float(distortion(X, st.assign, k))
+
+mesh = jax.make_mesh((8,), ("data",))
+epoch = make_sharded_epoch(mesh, batch_size=128)
+assign, D, cnt = a0, *init_state(X, a0, k)[1:3]
+for t in range(6):
+    assign, D, cnt, _ = epoch(X, G, assign, D, cnt,
+                              jax.random.fold_in(key, t))
+dist = float(distortion(X, assign, k))
+assert dist < ref * 1.1, (dist, ref)
+print("QUALITY_OK", dist, ref)
+"""
+
+
+@pytest.mark.slow
+def test_sharded_quality_matches_single_device():
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=8")
+    r = subprocess.run([sys.executable, "-c", CODE_QUALITY],
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert "QUALITY_OK" in r.stdout, r.stderr[-3000:]

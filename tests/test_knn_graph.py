@@ -1,0 +1,115 @@
+"""KNN-graph construction (Alg. 3): merge properties, recall evolution,
+the paper's Fig. 1 co-occurrence and Fig. 2 intertwined-evolution claims."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (build_knn_graph, cooccurrence_rate, gk_means,
+                        merge_topk, random_graph, recall_top1, recall_at,
+                        two_means_tree)
+from repro.core.knn_graph import members_table
+from repro.data import gmm_blobs
+
+
+# ---------------------------------------------------------------------------
+# merge_topk properties
+# ---------------------------------------------------------------------------
+
+@settings(deadline=None, max_examples=40)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 8), st.integers(0, 10))
+def test_merge_topk_properties(seed, kappa, m):
+    kk = jax.random.PRNGKey(seed)
+    g_ids = jax.random.randint(kk, (3, kappa), -1, 20)
+    g_d = jnp.abs(jax.random.normal(jax.random.fold_in(kk, 1), (3, kappa)))
+    g_d = jnp.where(g_ids < 0, jnp.inf, g_d)
+    c_ids = jax.random.randint(jax.random.fold_in(kk, 2), (3, m), -1, 20)
+    c_d = jnp.abs(jax.random.normal(jax.random.fold_in(kk, 3), (3, m)))
+    ids, d = merge_topk(g_ids, g_d, c_ids, c_d, kappa)
+    ids_n, d_n = np.asarray(ids), np.asarray(d)
+    for r in range(3):
+        # sorted ascending over the finite prefix (inf-padded tail)
+        fin = d_n[r][np.isfinite(d_n[r])]
+        assert np.all(np.diff(fin) >= -1e-6)
+        assert np.all(np.isfinite(d_n[r][: len(fin)]))
+        # no duplicate valid ids
+        valid = ids_n[r][ids_n[r] >= 0]
+        assert len(valid) == len(set(valid.tolist()))
+        # best candidate survives: global min over (inputs) == d[0]
+        all_d = np.concatenate([np.where(np.asarray(g_ids[r]) < 0, np.inf,
+                                         np.asarray(g_d[r])),
+                                np.where(np.asarray(c_ids[r]) < 0, np.inf,
+                                         np.asarray(c_d[r]))])
+        if np.isfinite(all_d).any():
+            assert d_n[r][0] == pytest.approx(np.min(all_d), rel=1e-6)
+
+
+def test_members_table_roundtrip(key):
+    n, k, cap = 1000, 16, 128
+    assign = jax.random.randint(key, (n,), 0, k)
+    table, overflow = members_table(assign, k, cap)
+    assert int(overflow) == 0
+    t = np.asarray(table)
+    ids = t[t >= 0]
+    assert len(ids) == n and len(set(ids.tolist())) == n
+    a = np.asarray(assign)
+    for c in range(k):
+        members = t[c][t[c] >= 0]
+        assert np.all(a[members] == c)
+
+
+def test_members_table_overflow_counted(key):
+    assign = jnp.zeros((100,), jnp.int32)  # all in cluster 0
+    table, overflow = members_table(assign, 4, 32)
+    assert int(overflow) == 100 - 32
+
+
+# ---------------------------------------------------------------------------
+# Alg. 3 behaviour (paper Fig. 2): recall grows with tau
+# ---------------------------------------------------------------------------
+
+def test_recall_improves_with_tau(blobs, blob_gt):
+    rec = []
+    for tau in (1, 3, 6):
+        g = build_knn_graph(blobs, 16, xi=32, tau=tau,
+                            key=jax.random.PRNGKey(1))
+        rec.append(float(recall_top1(g.ids, blob_gt)))
+    assert rec[0] < rec[-1]
+    assert rec[-1] > 0.9  # high quality after a few rounds (paper: >0.6 @5)
+    assert rec[1] > 0.5
+
+
+def test_random_graph_no_self(key):
+    g = random_graph(key, 100, 8)
+    own = jnp.arange(100)[:, None]
+    assert not bool(jnp.any(g == own))
+    assert int(g.min()) >= 0 and int(g.max()) < 100
+
+
+def test_graph_distances_sorted_and_consistent(blobs):
+    g = build_knn_graph(blobs, 8, xi=32, tau=3, key=jax.random.PRNGKey(2))
+    d = np.asarray(g.dist)
+    assert np.all(np.diff(d, axis=1) >= -1e-5)  # sorted rows
+    # distances match the actual pairs
+    X = np.asarray(blobs)
+    ids = np.asarray(g.ids)
+    for i in (0, 17, 999):
+        for j in range(4):
+            if ids[i, j] >= 0:
+                want = np.sum((X[i] - X[ids[i, j]]) ** 2)
+                assert d[i, j] == pytest.approx(want, rel=1e-3, abs=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# paper Fig. 1: neighbours co-occur in clusters far above chance
+# ---------------------------------------------------------------------------
+
+def test_neighbour_cooccurrence(blobs, blob_gt):
+    n = blobs.shape[0]
+    k = 64
+    assign = two_means_tree(blobs, k, jax.random.PRNGKey(3))
+    rates = np.asarray(cooccurrence_rate(assign, blob_gt[:, :8]))
+    chance = (n // k) / n
+    assert rates[0] > 20 * chance   # 1-NN co-occurs far above chance
+    assert rates[0] > rates[-1]     # decreasing in neighbour rank

@@ -1,0 +1,80 @@
+"""Clustered-KV attention (paper's technique applied to serving)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.kv_cluster import (build_kv_clusters, candidate_recall,
+                                   clustered_decode_attention)
+from repro.models.attention import decode_attention
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    B, S, Hkv, G, hd = 2, 512, 2, 2, 32
+    # keys with cluster structure (like real KV caches: locally correlated)
+    centers = jax.random.normal(key, (B, 16, Hkv, hd)) * 2.0
+    which = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0, 16)
+    k_cache = (centers[jnp.arange(B)[:, None], which]
+               + 0.3 * jax.random.normal(jax.random.fold_in(key, 2),
+                                         (B, S, Hkv, hd)))
+    v_cache = jax.random.normal(jax.random.fold_in(key, 3), (B, S, Hkv, hd))
+    # concentrated queries (the regime where truncated attention is sound):
+    # each q head points at a (noised, scaled) cached key
+    tgt = jax.random.randint(jax.random.fold_in(key, 6), (B, Hkv * G), 0, S)
+    picked = k_cache[jnp.arange(B)[:, None], tgt,
+                     jnp.arange(Hkv * G)[None] // G]      # (B, Hq, hd)
+    q = (2.0 * picked + 0.2 * jax.random.normal(
+        jax.random.fold_in(key, 4), (B, Hkv * G, hd)))[:, None]
+    clusters = build_kv_clusters(k_cache, kc=32, key=jax.random.fold_in(
+        key, 5))
+    return q, k_cache, v_cache, clusters
+
+
+def test_cluster_table_valid(setup):
+    _, k_cache, _, clusters = setup
+    B, S, Hkv, hd = k_cache.shape
+    t = np.asarray(clusters.table)
+    assert clusters.centroids.shape == (B, Hkv, 32, hd)
+    for b in range(B):
+        for h in range(Hkv):
+            ids = t[b, h][t[b, h] >= 0]
+            assert len(ids) == S and len(set(ids.tolist())) == S
+
+
+def test_candidate_recall_high(setup):
+    q, k_cache, _, clusters = setup
+    S = k_cache.shape[1]
+    rec = float(candidate_recall(q, k_cache, clusters,
+                                 jnp.asarray(S), top_c=8))
+    assert rec > 0.9  # true max-score key almost always in the candidates
+
+
+def test_clustered_attention_approximates_full(setup):
+    q, k_cache, v_cache, clusters = setup
+    S = k_cache.shape[1]
+    full = decode_attention(q, k_cache, v_cache, jnp.asarray(S))
+    approx = clustered_decode_attention(q, k_cache, v_cache, clusters,
+                                        jnp.asarray(S), top_c=16)
+    # top half of clusters carries almost all softmax mass
+    err = float(jnp.max(jnp.abs(approx.astype(jnp.float32)
+                                - full.astype(jnp.float32))))
+    scale = float(jnp.max(jnp.abs(full.astype(jnp.float32)))) + 1e-6
+    assert err / scale < 0.15
+    # with ALL clusters selected it must match exactly
+    exact = clustered_decode_attention(q, k_cache, v_cache, clusters,
+                                       jnp.asarray(S), top_c=32)
+    np.testing.assert_allclose(np.asarray(exact, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=1e-2, atol=1e-2)
+
+
+def test_respects_length_mask(setup):
+    q, k_cache, v_cache, clusters = setup
+    short = clustered_decode_attention(q, k_cache, v_cache, clusters,
+                                       jnp.asarray(100), top_c=32)
+    full_ref = decode_attention(q, k_cache, v_cache, jnp.asarray(100))
+    np.testing.assert_allclose(np.asarray(short, np.float32),
+                               np.asarray(full_ref, np.float32),
+                               rtol=1e-2, atol=1e-2)

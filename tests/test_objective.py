@@ -1,0 +1,66 @@
+"""Property tests for the boost-k-means objective (paper Eqn. 2/3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (cluster_stats, centroids, delta_I, delta_I_brute,
+                        distortion, objective_I)
+
+
+@settings(deadline=None, max_examples=30)
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(1, 8),
+       st.integers(12, 40))
+def test_delta_I_matches_brute_oracle(seed, k, d, n):
+    """Eqn. 3 == I(after move) - I(before), for random moves."""
+    kk = jax.random.PRNGKey(seed)
+    X = jax.random.normal(kk, (n, d)) * 3.0
+    assign = jax.random.randint(jax.random.fold_in(kk, 1), (n,), 0, k)
+    i = int(jax.random.randint(jax.random.fold_in(kk, 2), (), 0, n))
+    v = int(jax.random.randint(jax.random.fold_in(kk, 3), (), 0, k))
+    u = int(assign[i])
+    if u == v:
+        return
+    st_ = cluster_stats(X, assign, k)
+    got = float(delta_I(X[i], st_.D[u], st_.cnt[u], st_.D[v][None],
+                        st_.cnt[v][None])[0])
+    want = float(delta_I_brute(X, assign, k, i, v))
+    assert got == pytest.approx(want, rel=1e-3, abs=1e-2)
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 2**31 - 1))
+def test_distortion_identity(seed):
+    """E = (sum ||x||^2 - I) / n  equals the direct mean squared residual."""
+    kk = jax.random.PRNGKey(seed)
+    n, d, k = 64, 5, 7
+    X = jax.random.normal(kk, (n, d))
+    assign = jax.random.randint(jax.random.fold_in(kk, 1), (n,), 0, k)
+    st_ = cluster_stats(X, assign, k)
+    C = centroids(st_)
+    direct = float(jnp.mean(jnp.sum((X - C[assign]) ** 2, -1)))
+    via_I = float(distortion(X, assign, k))
+    assert via_I == pytest.approx(direct, rel=1e-4, abs=1e-5)
+
+
+def test_positive_move_decreases_distortion(key):
+    """Accepting a positive-ΔI move must lower distortion (duality)."""
+    n, d, k = 128, 8, 4
+    X = jax.random.normal(key, (n, d))
+    assign = jax.random.randint(key, (n,), 0, k)
+    st_ = cluster_stats(X, assign, k)
+    base = float(distortion(X, assign, k))
+    moved = 0
+    for i in range(16):
+        u = int(assign[i])
+        for v in range(k):
+            if v == u:
+                continue
+            dI = float(delta_I(X[i], st_.D[u], st_.cnt[u], st_.D[v][None],
+                               st_.cnt[v][None])[0])
+            if dI > 1e-4:
+                new = float(distortion(X, assign.at[i].set(v), k))
+                assert new < base
+                moved += 1
+    assert moved > 0  # random assignment must admit improving moves

@@ -1,0 +1,41 @@
+"""2M-tree invariants: exact equal sizes, valid partition, quality."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import distortion, pad_plan, two_means_tree
+from repro.data import gmm_blobs
+
+
+def test_equal_sizes_and_partition(key):
+    n, k = 1024, 16
+    X = gmm_blobs(key, n, 8, 16)
+    a = two_means_tree(X, k, key)
+    sizes = jnp.bincount(a, length=k)
+    assert int(sizes.min()) == int(sizes.max()) == n // k
+    assert int(a.min()) >= 0 and int(a.max()) == k - 1
+
+
+def test_beats_random_partition(key):
+    n, k = 2048, 32
+    X = gmm_blobs(key, n, 16, 32)
+    a = two_means_tree(X, k, key)
+    rand = jax.random.randint(key, (n,), 0, k)
+    assert float(distortion(X, a, k)) < 0.6 * float(distortion(X, rand, k))
+
+
+@settings(deadline=None, max_examples=50)
+@given(st.integers(1, 10_000_000), st.integers(1, 1_000_000))
+def test_pad_plan(n, k):
+    n2, k2 = pad_plan(n, k)
+    assert k2 >= k and (k2 & (k2 - 1)) == 0
+    assert n2 >= n and n2 % k2 == 0
+    assert n2 - n < k2  # minimal padding
+
+
+def test_deterministic_given_key(key):
+    X = gmm_blobs(key, 512, 8, 8)
+    a1 = two_means_tree(X, 8, key)
+    a2 = two_means_tree(X, 8, key)
+    assert jnp.array_equal(a1, a2)
