@@ -14,10 +14,13 @@ import jax.numpy as jnp
 
 @functools.partial(jax.jit, static_argnums=(3, 4, 5))
 def graph_search(X: jax.Array, ids: jax.Array, queries: jax.Array,
-                 topk: int = 10, ef: int = 32, iters: int = 24):
+                 topk: int = 10, ef: int = 32, iters: int = 24,
+                 key: jax.Array | None = None):
     """Returns (ids (q, topk), d2 (q, topk)).
 
     ef: pool width; iters: expansion rounds (each expands one pool entry).
+    key: seeds the random entry-point pool, so recall experiments are
+    reproducible-but-variable; None keeps the historical fixed seed.
     """
     n, kappa = ids.shape
     Xf = X.astype(jnp.float32)
@@ -60,5 +63,7 @@ def graph_search(X: jax.Array, ids: jax.Array, queries: jax.Array,
         order = jnp.argsort(pool_d)[:topk]
         return pool_id[order], pool_d[order]
 
-    keys = jax.random.split(jax.random.PRNGKey(0), queries.shape[0])
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    keys = jax.random.split(key, queries.shape[0])
     return jax.vmap(one)(queries.astype(jnp.float32), keys)

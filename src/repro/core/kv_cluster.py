@@ -29,6 +29,22 @@ NEG_INF = jnp.float32(-1e30)
 class KVClusters(NamedTuple):
     centroids: jax.Array  # (B, Hkv, kc, hd) float32
     table: jax.Array      # (B, Hkv, kc, cap) int32 member ids, -1 padded
+    radii: jax.Array      # (B, Hkv, kc) float32 max ||k - centroid||
+
+
+def _select_clusters(qs: jax.Array, clusters: KVClusters, top_c: int):
+    """Top-c clusters per q head by the ball upper bound on member scores.
+
+    q.k = q.c + q.(k-c) <= q.c + ||q||*r  (Cauchy-Schwarz), so ranking by
+    q.c + ||q||*r never under-ranks a cluster that could hold a high-score
+    key — the cluster-closure idea: a tight centroid score misses clusters
+    whose few boundary keys still carry softmax mass.
+    """
+    cscore = jnp.einsum("bhgd,bhkd->bhgk", qs, clusters.centroids)
+    bound = cscore + (jnp.linalg.norm(qs, axis=-1)[..., None]
+                      * clusters.radii[:, :, None, :])
+    _, top = jax.lax.top_k(bound, top_c)                  # (B, Hkv, G, c)
+    return top
 
 
 def build_kv_clusters(keys: jax.Array, kc: int, key: jax.Array,
@@ -49,12 +65,15 @@ def build_kv_clusters(keys: jax.Array, kc: int, key: jax.Array,
         D = jax.ops.segment_sum(x.astype(jnp.float32), a, num_segments=kc)
         n = jax.ops.segment_sum(jnp.ones((S,), jnp.float32), a,
                                 num_segments=kc)
-        return D / jnp.maximum(n, 1.0)[:, None]
+        cent = D / jnp.maximum(n, 1.0)[:, None]
+        r = jnp.linalg.norm(x.astype(jnp.float32) - cent[a], axis=-1)
+        return cent, jax.ops.segment_max(r, a, num_segments=kc)
 
-    cent = jax.vmap(stats)(flat, assign)                          # (BH, kc, hd)
+    cent, radii = jax.vmap(stats)(flat, assign)                   # (BH, kc, .)
     table = jax.vmap(lambda a: members_table(a, kc, cap)[0])(assign)
     return KVClusters(cent.reshape(B, H, kc, hd),
-                      table.reshape(B, H, kc, cap))
+                      table.reshape(B, H, kc, cap),
+                      radii.reshape(B, H, kc))
 
 
 @functools.partial(jax.jit, static_argnames=("top_c",))
@@ -74,8 +93,7 @@ def clustered_decode_attention(q: jax.Array, k_cache: jax.Array,
     qs = (q.astype(jnp.float32) * scale).reshape(B, Hkv, G, hd)
 
     # per-q-head cluster selection (group-pooled selection washes out heads)
-    cscore = jnp.einsum("bhgd,bhkd->bhgk", qs, clusters.centroids)
-    _, top = jax.lax.top_k(cscore, top_c)                 # (B, Hkv, G, c)
+    top = _select_clusters(qs, clusters, top_c)           # (B, Hkv, G, c)
 
     # candidate key ids per q head: members of its selected clusters
     cap = clusters.table.shape[-1]
@@ -112,8 +130,7 @@ def candidate_recall(q, k_cache, clusters, length, top_c: int) -> jax.Array:
                      NEG_INF)
     best = jnp.argmax(full, axis=-1)                      # (B, Hkv, G)
 
-    cscore = jnp.einsum("bhgd,bhkd->bhgk", qs, clusters.centroids)
-    _, top = jax.lax.top_k(cscore, top_c)                 # (B, Hkv, G, c)
+    top = _select_clusters(qs, clusters, top_c)           # (B, Hkv, G, c)
     tbl = clusters.table[:, :, None]
     cand = jnp.take_along_axis(
         jnp.broadcast_to(tbl, top.shape[:3] + tbl.shape[3:]),

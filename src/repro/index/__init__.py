@@ -1,0 +1,18 @@
+"""IVF vector-search index backed by GK-means coarse quantization.
+
+The paper's large-k clustering is exactly the coarse quantizer an inverted-
+file ANN index needs: `build_ivf` packs a `GKMeansResult` into tile-aligned
+inverted lists, `search` probes the top-p cells per query and streams only
+those lists through the fused `ivf_scan` kernel, and `store` persists the
+whole index so serving restarts don't re-cluster.
+"""
+from repro.index.ivf import IvfIndex, add, build_ivf, remove, repack
+from repro.index.probe import (build_tile_map, exhaustive_search,
+                               scan_fraction, search)
+from repro.index.store import load_index, save_index
+
+__all__ = [
+    "IvfIndex", "add", "build_ivf", "build_tile_map", "exhaustive_search",
+    "load_index", "remove", "repack", "save_index", "scan_fraction",
+    "search",
+]

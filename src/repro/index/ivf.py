@@ -1,0 +1,194 @@
+"""IVF index structure: GK-means centroids + tile-aligned inverted lists.
+
+Layout.  Vectors are packed list-by-list into a flat (n_rows, d) buffer whose
+rows are grouped in tiles of `block_rows` (the scan kernel's block size).
+Each list c owns the half-open row range [starts[c], starts[c] + caps[c]),
+with caps[c] a multiple of block_rows, so a list is always a whole number of
+tiles and the probe path can address it by tile index alone.  Rows whose id
+is -1 are holes (alignment padding, tombstones from `remove`, or headroom for
+`add`); the scan kernel masks them.  One extra all-hole tile at the end of
+the buffer serves as the null target for tile-map padding.
+
+Mutation.  `add` fills holes in the target list in place; `remove` writes
+tombstones.  Both are O(updates) on the control plane (numpy).  When a list
+overflows or the buffer's live fraction drops below `repack_threshold`, the
+index is re-packed from scratch — the periodic compaction that keeps scans
+proportional to live data.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+
+@dataclass(frozen=True)
+class IvfIndex:
+    centroids: jax.Array      # (k, d) float32 coarse quantizer
+    vecs: jax.Array           # (n_rows, d) packed vectors (holes = zeros)
+    ids: jax.Array            # (n_rows,) int32 original ids, -1 = hole
+    starts: jax.Array         # (k,) int32 row offset per list (tile-aligned)
+    caps: jax.Array           # (k,) int32 row capacity per list (tile-aligned)
+    block_rows: int           # rows per scan tile
+    repack_threshold: float = 0.5   # repack when live/capacity falls below
+
+    @property
+    def k(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def dim(self) -> int:
+        return self.centroids.shape[1]
+
+    @property
+    def n_rows(self) -> int:
+        """Total packed rows, including the trailing null tile."""
+        return self.vecs.shape[0]
+
+    @property
+    def capacity_rows(self) -> int:
+        """Rows owned by lists (excludes the null tile)."""
+        return self.n_rows - self.block_rows
+
+    @property
+    def null_tile(self) -> int:
+        return self.capacity_rows // self.block_rows
+
+    @property
+    def max_list_tiles(self) -> int:
+        """Static bound on tiles per list — sizes the probe-path tile map."""
+        return int(np.max(np.asarray(self.caps))) // self.block_rows
+
+    @property
+    def size(self) -> int:
+        """Number of live vectors."""
+        return int(np.sum(np.asarray(self.ids) >= 0))
+
+    def list_sizes(self) -> np.ndarray:
+        """(k,) live entries per list."""
+        ids = np.asarray(self.ids)
+        starts = np.asarray(self.starts)
+        caps = np.asarray(self.caps)
+        return np.array([int(np.sum(ids[s:s + c] >= 0))
+                         for s, c in zip(starts, caps)], dtype=np.int32)
+
+
+def _align(x: np.ndarray | int, m: int):
+    return (x + m - 1) // m * m
+
+
+def _pack(X: np.ndarray, ids: np.ndarray, assign: np.ndarray,
+          centroids: np.ndarray, k: int, block_rows: int,
+          repack_threshold: float) -> IvfIndex:
+    """Dense numpy pack of (X, ids, assign) into the tile-aligned layout."""
+    n, d = X.shape
+    counts = np.bincount(assign, minlength=k)
+    caps = _align(counts, block_rows).astype(np.int32)
+    starts = (np.concatenate([[0], np.cumsum(caps)[:-1]])).astype(np.int32)
+    n_rows = int(caps.sum()) + block_rows          # + null tile
+    vecs = np.zeros((n_rows, d), dtype=np.float32)
+    pids = np.full((n_rows,), -1, dtype=np.int32)
+    order = np.argsort(assign, kind="stable")
+    rank = np.arange(n) - np.repeat(np.concatenate([[0], np.cumsum(counts)[:-1]]),
+                                    counts)
+    rows = starts[assign[order]] + rank
+    vecs[rows] = X[order].astype(np.float32)
+    pids[rows] = ids[order]
+    return IvfIndex(
+        centroids=jnp.asarray(centroids, dtype=jnp.float32),
+        vecs=jnp.asarray(vecs), ids=jnp.asarray(pids),
+        starts=jnp.asarray(starts), caps=jnp.asarray(caps),
+        block_rows=block_rows, repack_threshold=repack_threshold)
+
+
+def build_ivf(X: jax.Array, result, *, block_rows: int = 128,
+              repack_threshold: float = 0.5) -> IvfIndex:
+    """Build the index from data X (n, d) and a clustering of it.
+
+    `result` is a `repro.core.GKMeansResult` (or anything with `.assign`
+    (n,), `.centroids` (k, d), `.k`) — the GK-means output becomes the
+    coarse quantizer and the inverted lists in one pass.
+    """
+    X = np.asarray(X)
+    assign = np.asarray(result.assign).astype(np.int64)
+    return _pack(X, np.arange(X.shape[0], dtype=np.int32), assign,
+                 np.asarray(result.centroids), int(result.k), block_rows,
+                 repack_threshold)
+
+
+def _gather_live(index: IvfIndex):
+    """(X, ids, assign) of all live entries, in packed order."""
+    ids = np.asarray(index.ids)
+    vecs = np.asarray(index.vecs)
+    starts = np.asarray(index.starts)
+    caps = np.asarray(index.caps)
+    assign = np.full((index.n_rows,), -1, dtype=np.int64)
+    for c, (s, cap) in enumerate(zip(starts, caps)):
+        assign[s:s + cap] = c
+    live = ids >= 0
+    return vecs[live], ids[live], assign[live]
+
+
+def repack(index: IvfIndex) -> IvfIndex:
+    """Rebuild the packed layout with all holes squeezed out."""
+    X, ids, assign = _gather_live(index)
+    return _pack(X, ids, assign, np.asarray(index.centroids), index.k,
+                 index.block_rows, index.repack_threshold)
+
+
+def _maybe_repack(index: IvfIndex) -> IvfIndex:
+    if index.size < index.repack_threshold * max(index.capacity_rows, 1):
+        return repack(index)
+    return index
+
+
+def add(index: IvfIndex, X_new: jax.Array,
+        new_ids: Optional[np.ndarray] = None) -> IvfIndex:
+    """Insert vectors (assigned to their nearest centroid), returning a new
+    index.  Fills holes in place; lists without room trigger a full repack.
+    """
+    X_new = np.asarray(X_new, dtype=np.float32)
+    if new_ids is None:
+        base = int(np.max(np.asarray(index.ids), initial=-1)) + 1
+        new_ids = base + np.arange(X_new.shape[0], dtype=np.int32)
+    new_ids = np.asarray(new_ids, dtype=np.int32)
+    assign, _ = kops.assign_centroids(jnp.asarray(X_new), index.centroids)
+    assign = np.asarray(assign).astype(np.int64)
+
+    ids = np.asarray(index.ids).copy()
+    vecs = np.asarray(index.vecs).copy()
+    starts = np.asarray(index.starts)
+    caps = np.asarray(index.caps)
+    overflow = []
+    for i, c in enumerate(assign):
+        s, cap = starts[c], caps[c]
+        holes = np.nonzero(ids[s:s + cap] < 0)[0]
+        if len(holes):
+            ids[s + holes[0]] = new_ids[i]
+            vecs[s + holes[0]] = X_new[i]
+        else:
+            overflow.append(i)
+    out = replace(index, ids=jnp.asarray(ids), vecs=jnp.asarray(vecs))
+    if overflow:
+        # some list is full: fold the stragglers in via a full repack
+        X_all, id_all, a_all = _gather_live(out)
+        X_all = np.concatenate([X_all, X_new[overflow]])
+        id_all = np.concatenate([id_all, new_ids[overflow]])
+        a_all = np.concatenate([a_all, assign[overflow]])
+        out = _pack(X_all, id_all, a_all, np.asarray(index.centroids),
+                    index.k, index.block_rows, index.repack_threshold)
+    return out
+
+
+def remove(index: IvfIndex, rm_ids) -> IvfIndex:
+    """Tombstone the given original ids; repack when the live fraction of
+    the packed buffer drops below `repack_threshold`."""
+    rm = np.asarray(rm_ids).reshape(-1)
+    ids = np.asarray(index.ids).copy()
+    ids[np.isin(ids, rm)] = -1
+    return _maybe_repack(replace(index, ids=jnp.asarray(ids)))

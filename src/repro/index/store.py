@@ -1,0 +1,97 @@
+"""Index persistence: flat binary with memmap load (zero-copy) or npz.
+
+Flat format (``.ivf``): a JSON header padded to `_ALIGN` bytes describing
+dtype/shape/offset of each array section, followed by the raw array bytes,
+each section aligned to `_ALIGN`.  `load_index(..., mmap=True)` maps every
+section with `np.memmap`, so opening a multi-GB index touches no data until
+the first scan; `device_put=True` (default) instead uploads once to the
+accelerator for serving.
+
+``.npz`` is also supported for portability (compressed, always a copy).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.index.ivf import IvfIndex
+
+_ALIGN = 64
+_MAGIC = "repro-ivf-v1"
+_ARRAYS = ("centroids", "vecs", "ids", "starts", "caps")
+
+
+def _pad(n: int) -> int:
+    return (n + _ALIGN - 1) // _ALIGN * _ALIGN
+
+
+def save_index(index: IvfIndex, path: str) -> None:
+    """Write the index to `path` (.npz suffix -> npz, else flat binary)."""
+    arrays = {name: np.asarray(getattr(index, name)) for name in _ARRAYS}
+    meta = {"magic": _MAGIC, "block_rows": index.block_rows,
+            "repack_threshold": index.repack_threshold}
+    if path.endswith(".npz"):
+        np.savez_compressed(path, meta=json.dumps(meta), **arrays)
+        return
+    sections = {}
+    off = 0  # relative to the end of the header block
+    for name, a in arrays.items():
+        sections[name] = {"dtype": str(a.dtype), "shape": list(a.shape),
+                          "offset": off}
+        off += _pad(a.nbytes)
+    meta["sections"] = sections
+    header = json.dumps(meta).encode()
+    header += b" " * (_pad(len(header) + 8) - len(header) - 8)
+    with open(path, "wb") as f:
+        f.write(len(header).to_bytes(8, "little"))
+        f.write(header)
+        base = f.tell()
+        for name, a in arrays.items():
+            f.seek(base + sections[name]["offset"])
+            f.write(np.ascontiguousarray(a).tobytes())
+        # pad the final section so memmap never runs past EOF
+        f.truncate(base + off)
+
+
+def load_index(path: str, *, mmap: bool = False) -> IvfIndex:
+    """Read an index written by `save_index`.
+
+    mmap=True (flat format only) keeps every array as a read-only
+    `np.memmap` — zero-copy until first touched, ideal for huge indexes
+    inspected offline.  mmap=False (default) uploads once to the device
+    for serving.
+    """
+    if path.endswith(".npz"):
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["meta"]))
+            arrays = {name: z[name] for name in _ARRAYS}
+    else:
+        with open(path, "rb") as f:
+            hlen = int.from_bytes(f.read(8), "little")
+            if not 0 < hlen <= os.path.getsize(path):
+                raise ValueError(f"not a repro IVF index: {path}")
+            try:
+                meta = json.loads(f.read(hlen).decode())
+            except (UnicodeDecodeError, json.JSONDecodeError) as e:
+                raise ValueError(f"not a repro IVF index: {path}") from e
+            base = 8 + hlen
+        if meta.get("magic") != _MAGIC:
+            raise ValueError(f"not a repro IVF index: {path}")
+        arrays = {}
+        for name, sec in meta["sections"].items():
+            shape = tuple(sec["shape"])
+            arrays[name] = np.memmap(path, dtype=sec["dtype"], mode="r",
+                                     offset=base + sec["offset"],
+                                     shape=shape)
+    if not mmap:
+        arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
+    return IvfIndex(block_rows=int(meta["block_rows"]),
+                    repack_threshold=float(meta["repack_threshold"]),
+                    **arrays)
+
+
+def index_nbytes(path: str) -> int:
+    return os.path.getsize(path)

@@ -44,6 +44,142 @@ def _kernel(x_ref, c_ref, amin_ref, dmin_ref, *, bk: int):
         amin_ref[...] = jnp.where(better, loc_arg, amin_ref[...])
 
 
+def _select_topk(d: jax.Array, ids: jax.Array, k: int):
+    """Stable iterative top-k over the last axis (Pallas-safe: no gather/sort).
+
+    d, ids: (bn, L) -> (d (bn, k) ascending, ids (bn, k)).  Ties resolve to the
+    lowest position, so results are deterministic in concatenation order.
+    """
+    bn, L = d.shape
+    pos = jax.lax.broadcasted_iota(jnp.int32, (bn, L), 1)
+    out_d, out_i = [], []
+    for _ in range(k):
+        m = jnp.min(d, axis=-1)                               # (bn,)
+        hit = (d == m[:, None]) & (pos == jnp.min(
+            jnp.where(d == m[:, None], pos, L), axis=-1, keepdims=True))
+        out_d.append(m)
+        out_i.append(jnp.sum(jnp.where(hit, ids, 0), axis=-1))
+        # retire the winner: d -> inf so it can't repeat, id -> -1 so that
+        # exhausted rows (fewer candidates than k) yield id=-1, not a dupe
+        d = jnp.where(hit, jnp.inf, d)
+        ids = jnp.where(hit, -1, ids)
+    return jnp.stack(out_d, axis=-1), jnp.stack(out_i, axis=-1)
+
+
+def _probe_kernel(x_ref, c_ref, pid_ref, pd_ref, *, bk: int, p: int):
+    j = pl.program_id(1)
+    x = x_ref[...].astype(jnp.float32)        # (bn, d)
+    c = c_ref[...].astype(jnp.float32)        # (bk, d)
+
+    dots = jax.lax.dot_general(
+        x, c, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)   # (bn, bk)
+    csq = jnp.sum(c * c, axis=-1)
+    part = csq[None, :] - 2.0 * dots          # (bn, bk): d2 minus ||x||^2
+    tile_ids = (jax.lax.broadcasted_iota(jnp.int32, part.shape, 1)
+                + j * bk)
+
+    @pl.when(j == 0)
+    def _init():
+        d0, i0 = _select_topk(part, tile_ids, p)
+        pd_ref[...] = d0
+        pid_ref[...] = i0
+
+    @pl.when(j > 0)
+    def _update():
+        d = jnp.concatenate([pd_ref[...], part], axis=-1)
+        ids = jnp.concatenate([pid_ref[...], tile_ids], axis=-1)
+        d1, i1 = _select_topk(d, ids, p)
+        pd_ref[...] = d1
+        pid_ref[...] = i1
+
+
+@functools.partial(jax.jit, static_argnames=("p", "bn", "bk", "interpret"))
+def probe_centroids(X: jax.Array, C: jax.Array, p: int, *, bn: int = 1024,
+                    bk: int = 512, interpret: bool = False):
+    """Top-p nearest centroids per sample (IVF coarse probing).
+
+    X: (n, d), C: (k, d) -> (ids (n, p) int32 ascending by distance,
+    d2 (n, p) float32).  Same flash-argmin streaming as `assign_centroids`,
+    but the revisited output block carries a running top-p per sample.
+    n must be a multiple of bn and k of bk; p <= bk (wrappers pad).
+    """
+    n, d = X.shape
+    k = C.shape[0]
+    bn = min(bn, n)
+    bk = min(bk, k)
+    assert n % bn == 0 and k % bk == 0, (n, bn, k, bk)
+    assert p <= bk <= k, (p, bk, k)
+    pid, pd = pl.pallas_call(
+        functools.partial(_probe_kernel, bk=bk, p=p),
+        grid=(n // bn, k // bk),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, p), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, p), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, p), jnp.int32),
+            jax.ShapeDtypeStruct((n, p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, C)
+    xsq = jnp.sum(X.astype(jnp.float32) ** 2, axis=-1)
+    return pid, jnp.maximum(pd + xsq[:, None], 0.0)
+
+
+# ---------------------------------------------------------------------------
+# padding wrappers: arbitrary (n, k) -> tile multiples
+# ---------------------------------------------------------------------------
+
+PAD_SENTINEL = 3e18  # centroid coordinate whose distance dominates everything
+
+
+def pad_tiles(X: jax.Array, C: jax.Array, bn: int, bk: int):
+    """Pad X rows (zeros) and C rows (huge sentinel) to tile multiples.
+
+    Returns (Xp, Cp, bn', bk') where bn'/bk' are clamped to the padded sizes.
+    Sentinel centroids sort behind every real centroid, so any top-p with
+    p <= k_real never selects them.
+    """
+    n = X.shape[0]
+    k = C.shape[0]
+    bn = min(bn, n)
+    bk = min(bk, k)
+    n_pad = (-n) % bn
+    k_pad = (-k) % bk
+    Xp = jnp.pad(X, ((0, n_pad), (0, 0))) if n_pad else X
+    Cp = (jnp.pad(C, ((0, k_pad), (0, 0)), constant_values=PAD_SENTINEL)
+          if k_pad else C)
+    return Xp, Cp, bn, bk
+
+
+def assign_centroids_padded(X: jax.Array, C: jax.Array, *, bn: int = 1024,
+                            bk: int = 512, interpret: bool = False):
+    """`assign_centroids` for arbitrary n, k (pads, runs, slices)."""
+    n = X.shape[0]
+    Xp, Cp, bn_, bk_ = pad_tiles(X, C, bn, bk)
+    a, d2 = assign_centroids(Xp, Cp, bn=bn_, bk=bk_, interpret=interpret)
+    return a[:n], d2[:n]
+
+
+def probe_centroids_padded(X: jax.Array, C: jax.Array, p: int, *,
+                           bn: int = 1024, bk: int = 512,
+                           interpret: bool = False):
+    """`probe_centroids` for arbitrary n, k (pads, runs, slices)."""
+    n = X.shape[0]
+    k = C.shape[0]
+    assert p <= k, (p, k)
+    Xp, Cp, bn_, bk_ = pad_tiles(X, C, bn, bk)
+    if p > bk_:  # tiny-k edge: one tile must still hold top-p
+        bk_ = Cp.shape[0]
+    ids, d2 = probe_centroids(Xp, Cp, p, bn=bn_, bk=bk_, interpret=interpret)
+    return ids[:n], d2[:n]
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
 def assign_centroids(X: jax.Array, C: jax.Array, *, bn: int = 1024,
                      bk: int = 512, interpret: bool = False):

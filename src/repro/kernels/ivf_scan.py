@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused IVF inverted-list scan with a running top-k.
+
+Queries probe p coarse cells; each cell's posting list lives in a tile-aligned
+packed layout (`repro.index.ivf`), so the work per query is a sequence of
+(block_rows, d) tiles of the packed database.  The probe path turns the CSR
+offsets into a per-query *tile map* (q, T) of packed-tile indices (padded with
+a dedicated all-invalid tile), and this kernel streams exactly those tiles
+from HBM through VMEM via scalar-prefetch-driven block indexing — the same
+revisiting pattern as `centroid_assign`, with the revisited output block
+carrying a running per-query top-k instead of a single argmin.
+
+HBM traffic per query is O(scanned_rows * d) — the point of IVF: only the
+probed fraction of the database is ever touched.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.centroid_assign import _select_topk
+
+
+def _kernel(tile_map_ref, q_ref, v_ref, id_ref, oid_ref, od_ref, *,
+            topk: int):
+    t = pl.program_id(1)
+    q = q_ref[...].astype(jnp.float32)          # (1, d)
+    v = v_ref[...].astype(jnp.float32)          # (bl, d)
+    ids = id_ref[...]                           # (bl,) int32, -1 = padding
+
+    dots = jax.lax.dot_general(
+        q, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (1, bl)
+    vsq = jnp.sum(v * v, axis=-1)               # (bl,)
+    part = vsq[None, :] - 2.0 * dots            # (1, bl): d2 minus ||q||^2
+    part = jnp.where(ids[None, :] < 0, jnp.inf, part)
+
+    @pl.when(t == 0)
+    def _init():
+        d0, i0 = _select_topk(part, ids[None, :], topk)
+        od_ref[...] = d0
+        oid_ref[...] = i0
+
+    @pl.when(t > 0)
+    def _update():
+        d = jnp.concatenate([od_ref[...], part], axis=-1)
+        i = jnp.concatenate([oid_ref[...], ids[None, :]], axis=-1)
+        d1, i1 = _select_topk(d, i, topk)
+        od_ref[...] = d1
+        oid_ref[...] = i1
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "topk", "interpret"))
+def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
+             tile_map: jax.Array, *, block_rows: int, topk: int = 10,
+             interpret: bool = False):
+    """Scan each query's probed tiles of the packed database.
+
+    Q: (q, d) queries; vecs: (n_pad, d) packed vectors (n_pad a multiple of
+    block_rows); pids: (n_pad,) int32 original ids, -1 at padding rows;
+    tile_map: (q, T) int32 packed-tile indices per query (repeats of an
+    all-padding tile are harmless).
+
+    Returns (ids (q, topk) int32 with -1 beyond the candidate count,
+    d2 (q, topk) float32 ascending, +inf beyond the candidate count).
+    """
+    nq, d = Q.shape
+    n_pad = vecs.shape[0]
+    assert n_pad % block_rows == 0, (n_pad, block_rows)
+    assert tile_map.shape[0] == nq
+    T = tile_map.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nq, T),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, t, tm: (i, 0)),
+            pl.BlockSpec((block_rows, d), lambda i, t, tm: (tm[i, t], 0)),
+            pl.BlockSpec((block_rows,), lambda i, t, tm: (tm[i, t],)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, topk), lambda i, t, tm: (i, 0)),
+            pl.BlockSpec((1, topk), lambda i, t, tm: (i, 0)),
+        ],
+    )
+    oid, od = pl.pallas_call(
+        functools.partial(_kernel, topk=topk),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, topk), jnp.int32),
+            jax.ShapeDtypeStruct((nq, topk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tile_map.astype(jnp.int32), Q, vecs, pids.astype(jnp.int32))
+    qsq = jnp.sum(Q.astype(jnp.float32) ** 2, axis=-1)
+    d2 = jnp.maximum(od + qsq[:, None], 0.0)
+    # padding candidates carry id -1 (selected only when fewer than topk
+    # real candidates exist); force their distance to +inf for callers.
+    return oid, jnp.where(oid < 0, jnp.inf, d2)

@@ -7,9 +7,9 @@ bodies via ``interpret=True`` to validate them against the same references.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import centroid_assign as _ca
+from repro.kernels import ivf_scan as _ivf
 from repro.kernels import pairwise_topk as _pt
 from repro.kernels import ref as _ref
 
@@ -30,17 +30,27 @@ def pairwise_sq(Xb: jax.Array, *, force: str | None = None) -> jax.Array:
 def assign_centroids(X: jax.Array, C: jax.Array, *, force: str | None = None,
                      bn: int = 1024, bk: int = 512):
     """(n, d) x (k, d) -> nearest-centroid (assign, d2); pads to tile shapes."""
-    n, d = X.shape
-    k = C.shape[0]
     if force == "ref" or (force is None and not _on_tpu()):
         return _ref.assign_centroids(X, C)
-    bn_ = min(bn, n)
-    bk_ = min(bk, k)
-    n_pad = (-n) % bn_
-    k_pad = (-k) % bk_
-    Xp = jnp.pad(X, ((0, n_pad), (0, 0))) if n_pad else X
-    # pad centroids with +inf-distance sentinels (huge coordinates)
-    Cp = jnp.pad(C, ((0, k_pad), (0, 0)), constant_values=3e18) if k_pad else C
-    a, d2 = _ca.assign_centroids(Xp, Cp, bn=bn_, bk=bk_,
-                                 interpret=(force == "interpret"))
-    return a[:n], d2[:n]
+    return _ca.assign_centroids_padded(X, C, bn=bn, bk=bk,
+                                       interpret=(force == "interpret"))
+
+
+def probe_centroids(X: jax.Array, C: jax.Array, p: int, *,
+                    force: str | None = None, bn: int = 1024, bk: int = 512):
+    """(n, d) x (k, d) -> top-p nearest centroids (ids, d2); pads to tiles."""
+    if force == "ref" or (force is None and not _on_tpu()):
+        return _ref.probe_centroids(X, C, p)
+    return _ca.probe_centroids_padded(X, C, p, bn=bn, bk=bk,
+                                      interpret=(force == "interpret"))
+
+
+def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
+             tile_map: jax.Array, *, block_rows: int, topk: int = 10,
+             force: str | None = None):
+    """Per-query scan of probed packed-list tiles -> (ids, d2) top-k."""
+    if force == "ref" or (force is None and not _on_tpu()):
+        return _ref.ivf_scan(Q, vecs, pids, tile_map,
+                             block_rows=block_rows, topk=topk)
+    return _ivf.ivf_scan(Q, vecs, pids, tile_map, block_rows=block_rows,
+                         topk=topk, interpret=(force == "interpret"))

@@ -17,6 +17,64 @@ def pairwise_sq(Xb: jax.Array) -> jax.Array:
     return jnp.maximum(d2, 0.0)
 
 
+def stable_topk(d: jax.Array, ids: jax.Array, k: int):
+    """Iterative top-k over the last axis, ties to the lowest position.
+
+    Matches the selection order of the Pallas kernels' running top-k exactly
+    (jnp.argmin also returns the first minimum).
+    d, ids: (..., L) -> (d (..., k) ascending, ids (..., k)).
+    """
+    out_d, out_i = [], []
+    for _ in range(k):
+        a = jnp.argmin(d, axis=-1)
+        hit = jnp.arange(d.shape[-1]) == a[..., None]
+        out_d.append(jnp.take_along_axis(d, a[..., None], -1)[..., 0])
+        out_i.append(jnp.take_along_axis(ids, a[..., None], -1)[..., 0])
+        # retire the winner (id -> -1: exhausted rows yield -1, not a dupe)
+        d = jnp.where(hit, jnp.inf, d)
+        ids = jnp.where(hit, -1, ids)
+    return jnp.stack(out_d, axis=-1), jnp.stack(out_i, axis=-1)
+
+
+def probe_centroids(X: jax.Array, C: jax.Array, p: int):
+    """Top-p nearest centroids per sample.
+
+    X: (n, d), C: (k, d) -> (ids (n, p) int32 ascending by distance,
+    d2 (n, p) float32 with the ||x||^2 term included).
+    """
+    Xf = X.astype(jnp.float32)
+    Cf = C.astype(jnp.float32)
+    csq = jnp.sum(Cf * Cf, axis=-1)
+    part = csq[None, :] - 2.0 * (Xf @ Cf.T)                # (n, k)
+    d, ids = stable_topk(part, jnp.broadcast_to(
+        jnp.arange(C.shape[0], dtype=jnp.int32), part.shape), p)
+    xsq = jnp.sum(Xf * Xf, axis=-1)
+    return ids, jnp.maximum(d + xsq[:, None], 0.0)
+
+
+def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
+             tile_map: jax.Array, *, block_rows: int, topk: int = 10):
+    """Inverted-list scan oracle over the packed layout.
+
+    Gathers every probed tile's rows per query (same traversal order as the
+    Pallas kernel) and selects top-k with the same stable tie-break.
+    """
+    nq = Q.shape[0]
+    Qf = Q.astype(jnp.float32)
+    pos = (tile_map[:, :, None] * block_rows
+           + jnp.arange(block_rows, dtype=jnp.int32))       # (q, T, bl)
+    pos = pos.reshape(nq, -1)                               # (q, L)
+    cids = pids[pos]                                        # (q, L)
+    cv = vecs[pos].astype(jnp.float32)                      # (q, L, d)
+    vsq = jnp.sum(cv * cv, axis=-1)                         # (q, L)
+    dots = jnp.einsum("qd,qld->ql", Qf, cv)
+    part = jnp.where(cids < 0, jnp.inf, vsq - 2.0 * dots)
+    d, ids = stable_topk(part, cids, topk)
+    qsq = jnp.sum(Qf * Qf, axis=-1)
+    d2 = jnp.maximum(d + qsq[:, None], 0.0)
+    return ids, jnp.where(ids < 0, jnp.inf, d2)
+
+
 def assign_centroids(X: jax.Array, C: jax.Array):
     """Nearest-centroid assignment.
 

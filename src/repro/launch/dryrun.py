@@ -70,7 +70,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t1, 1)
         mem = compiled.memory_analysis()
-        cost = compiled.cost_analysis()
+        cost = rl.cost_analysis(compiled)
         txt = compiled.as_text()
         coll_raw = rl.collective_bytes(txt)
         coll = rl.collective_bytes_corrected(txt)
@@ -79,7 +79,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
             "output_bytes": getattr(mem, "output_size_in_bytes", None),
             "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "peak_bytes": rl.peak_memory_bytes(mem),
         }
         # raw HLO cost analysis (while bodies counted ONCE — see roofline.py)
         rec["flops_hlo_raw"] = cost.get("flops", 0.0) if cost else 0.0

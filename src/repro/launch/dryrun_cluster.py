@@ -64,7 +64,7 @@ def run_cell(workload: str, mode: str, multi_pod: bool) -> dict:
         txt = compiled.as_text()
         coll = rl.collective_bytes_corrected(txt)
         coll_raw = rl.collective_bytes(txt)
-        cost = compiled.cost_analysis()
+        cost = rl.cost_analysis(compiled)
         mem = compiled.memory_analysis()
         # analytic per-chip flops for one epoch: n_loc samples x kappa cands
         import numpy as _np
@@ -84,7 +84,7 @@ def run_cell(workload: str, mode: str, multi_pod: bool) -> dict:
         rec["memory"] = {
             "argument_bytes": mem.argument_size_in_bytes,
             "temp_bytes": mem.temp_size_in_bytes,
-            "peak_bytes": mem.peak_memory_in_bytes,
+            "peak_bytes": rl.peak_memory_bytes(mem),
         }
         rec["roofline"] = rl.roofline_terms(fl, hb,
                                             coll["total_wire_bytes"])

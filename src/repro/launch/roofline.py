@@ -40,6 +40,31 @@ def _nbytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES.get(dtype, 4)
 
 
+def peak_memory_bytes(mem) -> int:
+    """Peak HBM bytes from `compiled.memory_analysis()` across jax versions.
+
+    Newer jaxlibs dropped `peak_memory_in_bytes`; argument + output + temp
+    is the same upper bound XLA reported there.
+    """
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is None:
+        peak = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                + mem.temp_size_in_bytes)
+    return peak
+
+
+def cost_analysis(compiled) -> Dict[str, float]:
+    """`compiled.cost_analysis()` as a dict across jax versions.
+
+    Older jaxlibs return a one-element list of dicts, newer ones the dict
+    itself; normalize so callers can `.get("flops")` either way.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 # ---------------------------------------------------------------------------
 # while-aware HLO traversal
 #

@@ -1,0 +1,66 @@
+"""Deterministic fallback for `hypothesis` when it isn't installed.
+
+The container image has no `hypothesis` wheel and nothing may be pip-installed,
+so property tests fall back to this shim: `@given(...)` reruns the test with a
+fixed-seed pseudo-random sample per strategy (max_examples draws, plus each
+strategy's boundary values), which keeps the properties exercised and the run
+reproducible.  Only the subset of the API these tests use is provided.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+
+class _Strategy:
+    def __init__(self, draw, boundary=()):
+        self.draw = draw
+        self.boundary = tuple(boundary)
+
+
+class strategies:  # noqa: N801 - mimics `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value),
+                         boundary=(min_value, max_value))
+
+
+def settings(deadline=None, max_examples: int = 20, **_kw):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # read lazily: @settings is usually applied OUTSIDE @given, so
+            # the attribute lands on this wrapper after deco() returns
+            max_examples = getattr(wrapper, "_max_examples",
+                                   getattr(fn, "_max_examples", 20))
+            rng = random.Random(0xC0FFEE)
+            cases = []
+            if strats:
+                lo = tuple(s.boundary[0] for s in strats)
+                hi = tuple(s.boundary[-1] for s in strats)
+                cases += [lo, hi]
+            while len(cases) < max_examples:
+                cases.append(tuple(s.draw(rng) for s in strats))
+            for case in cases[:max_examples]:
+                fn(*args, *case, **kwargs)
+
+        # drop the consumed marker so pytest doesn't see a stale attribute
+        wrapper.__dict__.pop("_max_examples", None)
+        # hide the strategy-supplied (trailing) params from pytest, which
+        # would otherwise demand fixtures for them; leading params (session
+        # fixtures) stay visible.
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        wrapper.__signature__ = sig.replace(
+            parameters=params[: len(params) - len(strats)])
+        del wrapper.__wrapped__
+        return wrapper
+    return deco

@@ -34,10 +34,10 @@ def test_lower_compile_and_analyse(mesh, cfg, kind, seq, batch):
     shape = ShapeSpec(f"{kind}_t", seq, batch, kind)
     lowered = lower_cell(cfg, shape, mesh)
     compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = rl.cost_analysis(compiled)
     assert cost.get("flops", 0) > 0
     mem = compiled.memory_analysis()
-    assert mem.peak_memory_in_bytes > 0
+    assert rl.peak_memory_bytes(mem) > 0
     coll = rl.collective_bytes(compiled.as_text())
     assert coll["total_bytes"] >= 0  # no collectives on 1x1 mesh is fine
     terms = rl.roofline_terms(cost["flops"], cost.get("bytes accessed", 0),

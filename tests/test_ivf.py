@@ -1,0 +1,256 @@
+"""IVF index subsystem: kernel exactness (interpret vs. oracle), CSR pack
+invariants under build/add/remove, persistence round-trips, and end-to-end
+recall of the probe path."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import index as ivf
+from repro.data import gmm_blobs
+from repro.kernels import centroid_assign as ca
+from repro.kernels import ivf_scan as iv
+from repro.kernels import ops, ref
+
+
+class FakeResult:
+    """Stands in for GKMeansResult in build_ivf."""
+    def __init__(self, assign, centroids, k):
+        self.assign, self.centroids, self.k = assign, centroids, k
+
+
+def small_index(key, n=1024, d=16, k=16, block_rows=32):
+    X = gmm_blobs(key, n, d, k)
+    C = gmm_blobs(jax.random.fold_in(key, 1), k, d, k)
+    a, _ = ref.assign_centroids(X, C)
+    return X, ivf.build_ivf(X, FakeResult(a, C, k), block_rows=block_rows)
+
+
+# ---------------------------------------------------------------------------
+# kernel exactness, interpret mode vs. the pure-jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,k,p,bn,bk", [(128, 32, 4, 64, 16),
+                                         (256, 48, 8, 64, 16),
+                                         (100, 37, 5, 64, 16)])
+def test_probe_centroids_matches_ref(n, k, p, bn, bk):
+    kk = jax.random.PRNGKey(n + k + p)
+    X = gmm_blobs(kk, n, 16, 8)
+    C = gmm_blobs(jax.random.fold_in(kk, 1), k, 16, 8)
+    ip, dp = ca.probe_centroids_padded(X, C, p, bn=bn, bk=bk, interpret=True)
+    ir, dr = ref.probe_centroids(X, C, p)
+    np.testing.assert_array_equal(np.asarray(ip), np.asarray(ir))
+    np.testing.assert_allclose(np.asarray(dp), np.asarray(dr),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_probe_p1_matches_assign():
+    X = gmm_blobs(jax.random.PRNGKey(0), 100, 8, 4)
+    C = gmm_blobs(jax.random.PRNGKey(1), 13, 8, 4)
+    ip, dp = ref.probe_centroids(X, C, 1)
+    ia, da = ref.assign_centroids(X, C)
+    np.testing.assert_array_equal(np.asarray(ip[:, 0]), np.asarray(ia))
+    np.testing.assert_allclose(np.asarray(dp[:, 0]), np.asarray(da),
+                               rtol=1e-5)
+
+
+def test_assign_centroids_padded_wrapper():
+    """Odd n/k no longer trip the tile assert."""
+    X = gmm_blobs(jax.random.PRNGKey(3), 100, 16, 4)
+    C = gmm_blobs(jax.random.PRNGKey(4), 37, 16, 4)
+    ai, di = ca.assign_centroids_padded(X, C, bn=64, bk=16, interpret=True)
+    ar, dr = ref.assign_centroids(X, C)
+    np.testing.assert_array_equal(np.asarray(ai), np.asarray(ar))
+    np.testing.assert_allclose(np.asarray(di), np.asarray(dr),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_ivf_scan_exact_vs_ref(key):
+    """The fused scan returns bit-identical top-k ids to the oracle."""
+    X, index = small_index(key)
+    nq = 32
+    Q = X[:nq] + 0.1 * jax.random.normal(jax.random.fold_in(key, 2),
+                                         (nq, X.shape[1]))
+    cids, _ = ref.probe_centroids(Q, index.centroids, 4)
+    tm = ivf.build_tile_map(cids, index.starts, index.caps,
+                            max_tiles=index.max_list_tiles,
+                            block_rows=index.block_rows,
+                            null_tile=index.null_tile)
+    ki, kd = iv.ivf_scan(Q, index.vecs, index.ids, tm,
+                         block_rows=index.block_rows, topk=10,
+                         interpret=True)
+    ri, rd = ref.ivf_scan(Q, index.vecs, index.ids, tm,
+                          block_rows=index.block_rows, topk=10)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    fin = np.isfinite(np.asarray(rd))
+    np.testing.assert_allclose(np.asarray(kd)[fin], np.asarray(rd)[fin],
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_ivf_scan_short_candidates(key):
+    """Fewer candidates than topk: tail is id=-1 / d=+inf."""
+    X, index = small_index(key, n=64, k=4, block_rows=8)
+    Q = X[:4]
+    cids, _ = ref.probe_centroids(Q, index.centroids, 1)
+    tm = ivf.build_tile_map(cids, index.starts, index.caps,
+                            max_tiles=index.max_list_tiles,
+                            block_rows=index.block_rows,
+                            null_tile=index.null_tile)
+    ids, d2 = iv.ivf_scan(Q, index.vecs, index.ids, tm,
+                          block_rows=index.block_rows, topk=60,
+                          interpret=True)
+    ids_n, d_n = np.asarray(ids), np.asarray(d2)
+    sizes = index.list_sizes()[np.asarray(cids)[:, 0]]
+    for r in range(4):
+        assert np.all(ids_n[r, sizes[r]:] == -1)
+        assert np.all(np.isinf(d_n[r, sizes[r]:]))
+        assert np.all(np.isfinite(d_n[r, : sizes[r]]))
+
+
+# ---------------------------------------------------------------------------
+# pack / add / remove invariants
+# ---------------------------------------------------------------------------
+
+def _check_invariants(index, X=None, expect_ids=None):
+    ids = np.asarray(index.ids)
+    starts = np.asarray(index.starts)
+    caps = np.asarray(index.caps)
+    bl = index.block_rows
+    # tile alignment and disjoint coverage of the packed buffer
+    assert np.all(starts % bl == 0) and np.all(caps % bl == 0)
+    assert np.all(np.diff(starts) == caps[:-1])
+    assert starts[-1] + caps[-1] == index.capacity_rows
+    # the null tile is all holes
+    assert np.all(ids[index.capacity_rows:] == -1)
+    # every live id appears exactly once
+    live = ids[ids >= 0]
+    assert len(live) == len(set(live.tolist()))
+    if expect_ids is not None:
+        assert set(live.tolist()) == set(expect_ids)
+    # every live row's vector is nearest-centroid-consistent with its list
+    if X is not None:
+        C = np.asarray(index.centroids)
+        vecs = np.asarray(index.vecs)
+        for c in range(index.k):
+            seg = slice(starts[c], starts[c] + caps[c])
+            for r, vid in zip(vecs[seg][ids[seg] >= 0],
+                              ids[seg][ids[seg] >= 0]):
+                np.testing.assert_allclose(r, np.asarray(X)[vid], rtol=1e-6)
+
+
+def test_build_invariants(key):
+    X, index = small_index(key)
+    _check_invariants(index, X, expect_ids=range(X.shape[0]))
+    assert index.size == X.shape[0]
+
+
+def test_add_fills_holes_then_repacks(key):
+    X, index = small_index(key, n=512, k=8, block_rows=32)
+    rows0 = index.n_rows
+    Xn = gmm_blobs(jax.random.fold_in(key, 7), 300, X.shape[1], 8)
+    out = ivf.add(index, Xn)
+    _check_invariants(out, expect_ids=range(512 + 300))
+    assert out.size == 812
+    # new vectors are searchable at full probe width
+    ids, d2 = ivf.exhaustive_search(out, Xn[:8], topk=1, force="ref")
+    assert np.all(np.asarray(ids)[:, 0] >= 512)
+    assert float(jnp.max(d2[:, 0])) < 1e-3
+    assert out.n_rows >= rows0  # grew (holes alone can't hold 300 adds)
+
+
+def test_remove_and_repack(key):
+    X, index = small_index(key, n=512, k=8, block_rows=32)
+    out = ivf.remove(index, np.arange(0, 100))
+    _check_invariants(out, expect_ids=range(100, 512))
+    assert out.size == 412
+    # removed ids are no longer returned even at full probe width
+    ids, _ = ivf.exhaustive_search(out, X[:16], topk=5, force="ref")
+    assert np.all(np.asarray(ids) >= 100)
+    # heavy removal compacts the buffer
+    heavy = ivf.remove(index, np.arange(0, 400))
+    _check_invariants(heavy, expect_ids=range(400, 512))
+    assert heavy.capacity_rows < index.capacity_rows
+
+
+def test_add_remove_roundtrip_searches_equal(key):
+    X, index = small_index(key, n=256, k=4, block_rows=16)
+    Xn = gmm_blobs(jax.random.fold_in(key, 3), 32, X.shape[1], 4)
+    out = ivf.remove(ivf.add(index, Xn),
+                     np.arange(256, 256 + 32))
+    assert out.size == 256
+    q = X[:16]
+    i0, d0 = ivf.search(index, q, topk=5, nprobe=4, force="ref")
+    i1, d1 = ivf.search(out, q, topk=5, nprobe=4, force="ref")
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+# ---------------------------------------------------------------------------
+# persistence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fname", ["index.ivf", "index.npz"])
+def test_save_load_roundtrip(key, tmp_path, fname):
+    X, index = small_index(key, n=256, k=8, block_rows=16)
+    path = os.path.join(tmp_path, fname)
+    ivf.save_index(index, path)
+    loaded = ivf.load_index(path)
+    assert loaded.block_rows == index.block_rows
+    for name in ("centroids", "vecs", "ids", "starts", "caps"):
+        np.testing.assert_array_equal(np.asarray(getattr(loaded, name)),
+                                      np.asarray(getattr(index, name)))
+    q = X[:8]
+    i0, d0 = ivf.search(index, q, topk=5, nprobe=4, force="ref")
+    i1, d1 = ivf.search(loaded, q, topk=5, nprobe=4, force="ref")
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_load_mmap_zero_copy(key, tmp_path):
+    X, index = small_index(key, n=256, k=8, block_rows=16)
+    path = os.path.join(tmp_path, "index.ivf")
+    ivf.save_index(index, path)
+    mm = ivf.load_index(path, mmap=True)
+    assert isinstance(mm.vecs, np.memmap)
+    np.testing.assert_array_equal(np.asarray(mm.vecs),
+                                  np.asarray(index.vecs))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end probe quality
+# ---------------------------------------------------------------------------
+
+def test_multi_probe_recall_increases(key):
+    X, index = small_index(key, n=2048, d=24, k=32, block_rows=32)
+    nq = 64
+    Q = X[:nq] + 0.05 * jax.random.normal(jax.random.fold_in(key, 5),
+                                          (nq, X.shape[1]))
+    dd = jnp.sum((Q[:, None, :] - X[None]) ** 2, -1)
+    gt = jnp.argsort(dd, axis=1)[:, :10]
+
+    recs = []
+    for nprobe in (1, 4, 16):
+        ids, _ = ivf.search(index, Q, topk=10, nprobe=nprobe, force="ref")
+        hits = (ids[:, :, None] == gt[:, None, :]).any(-1)
+        recs.append(float(jnp.mean(hits.astype(jnp.float32))))
+    assert recs[0] <= recs[1] <= recs[2]
+    assert recs[-1] > 0.9
+    assert ivf.scan_fraction(index, Q, nprobe=1, force="ref") < \
+        ivf.scan_fraction(index, Q, nprobe=16, force="ref") <= 1.0
+
+
+def test_graph_search_key_threading(blobs):
+    """Satellite: explicit seeding is reproducible; default preserved."""
+    from repro.core import build_knn_graph, graph_search
+    g = build_knn_graph(blobs, 8, xi=32, tau=2, key=jax.random.PRNGKey(0))
+    q = blobs[:16]
+    i_default, _ = graph_search(blobs, g.ids, q, 5, 32, 16)
+    i_zero, _ = graph_search(blobs, g.ids, q, 5, 32, 16,
+                             key=jax.random.PRNGKey(0))
+    i_other, _ = graph_search(blobs, g.ids, q, 5, 32, 16,
+                              key=jax.random.PRNGKey(123))
+    np.testing.assert_array_equal(np.asarray(i_default), np.asarray(i_zero))
+    # a different seed gives a different (but valid) pool trajectory
+    assert i_other.shape == i_default.shape
+    assert int(i_other.min()) >= 0

@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis wheel
+    from _hyp import given, settings, strategies as st
 
 from repro.core import (build_knn_graph, cooccurrence_rate, gk_means,
                         merge_topk, random_graph, recall_top1, recall_at,

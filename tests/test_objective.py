@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis wheel
+    from _hyp import given, settings, strategies as st
 
 from repro.core import (cluster_stats, centroids, delta_I, delta_I_brute,
                         distortion, objective_I)

@@ -61,7 +61,7 @@ def test_cost_analysis_is_per_partition():
                              sharding=NamedSharding(mesh1, P(None, None)))
     with mesh1:
         c = jax.jit(f).lower(x, w).compile()
-    flops1 = c.cost_analysis().get("flops")
+    flops1 = rl.cost_analysis(c).get("flops")
     assert flops1 == pytest.approx(2 * 256**3, rel=0.2)
 
 

@@ -2,7 +2,10 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis wheel
+    from _hyp import given, settings, strategies as st
 
 from repro.core import distortion, pad_plan, two_means_tree
 from repro.data import gmm_blobs
