@@ -1,0 +1,77 @@
+"""Engine vs the pre-engine host-driven path: epochs/sec and host syncs.
+
+The pre-engine driver ran one jitted epoch per Python-loop step and recomputed
+the O(n·d) distortion on the host after every epoch (one sync per epoch).
+``engine.run`` keeps the whole loop device-resident — per-epoch distortion in
+O(k·d) from the running stats, early stop in-trace, ONE host sync per run.
+
+Emits a ``BENCH_engine.json`` with the measured numbers next to the CSV rows.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+
+from repro.core import build_knn_graph, distortion, engine, two_means_tree
+from repro.data import gmm_blobs
+
+
+def _host_driven(X, a0, k, source, key, iters, batch_size):
+    """The pre-engine driver: epoch dispatch + host distortion sync/epoch."""
+    st = engine.init_state(X, a0, k)
+    cfg = engine.EngineConfig(batch_size=batch_size)
+    hist = []
+    for t in range(iters):
+        st = engine.epoch(X, st, source, jax.random.fold_in(key, t), cfg)
+        hist.append(float(distortion(X, st.assign, k)))   # host sync here
+    return st, hist
+
+
+def run(quick: bool = True):
+    n, d, k, iters = (16384, 32, 256, 10) if quick else (262144, 64, 4096, 10)
+    bs = 1024
+    key = jax.random.PRNGKey(0)
+    X = gmm_blobs(key, n, d, 256)
+    g = build_knn_graph(X, 16, xi=64, tau=3, key=key)
+    a0 = two_means_tree(X, k, key)
+    source = engine.graph_source(g.ids)
+
+    # warm both compile paths (same static configs as the timed runs)
+    cfg = engine.EngineConfig(batch_size=bs, iters=iters, min_move_frac=-1.0)
+    _host_driven(X, a0, k, source, key, 1, bs)
+    jax.block_until_ready(
+        engine.run(X, engine.init_state(X, a0, k), source, key, cfg)[0])
+
+    t0 = time.perf_counter()
+    _, hist_host = _host_driven(X, a0, k, source, key, iters, bs)
+    t_host = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = engine.run(X, engine.init_state(X, a0, k), source, key, cfg)
+    st, hist, _, epochs, final = jax.device_get(out)   # the ONE sync
+    t_run = time.perf_counter() - t0
+
+    rec = {
+        "n": n, "d": d, "k": k, "iters": iters, "batch_size": bs,
+        "host_driven_s": t_host, "engine_run_s": t_run,
+        "epochs_per_sec_host": iters / t_host,
+        "epochs_per_sec_engine": iters / t_run,
+        "speedup": t_host / t_run,
+        "host_syncs_host_driven": iters,
+        "host_syncs_engine_run": 1,
+        "final_distortion_host": hist_host[-1],
+        "final_distortion_engine": float(final),
+    }
+    with open("BENCH_engine.json", "w") as f:
+        json.dump(rec, f, indent=1)
+
+    return [
+        ("engine/host_driven", t_host * 1e6,
+         f"epochs_per_s={iters / t_host:.2f};syncs={iters};"
+         f"final={hist_host[-1]:.4f}"),
+        ("engine/device_resident_run", t_run * 1e6,
+         f"epochs_per_s={iters / t_run:.2f};syncs=1;"
+         f"final={float(final):.4f};speedup={t_host / t_run:.2f}x"),
+    ]

@@ -7,22 +7,22 @@ import time
 
 import jax
 
-from repro.core import (bkm, build_knn_graph, distortion, graph_candidates,
-                        init_state, lloyd, minibatch_kmeans, two_means_tree)
+from repro.core import (build_knn_graph, distortion, engine, lloyd,
+                        two_means_tree)
 from repro.data import gmm_blobs
-import jax.numpy as jnp
 
 
 def _gk_total(X, k, kappa, key, iters=8):
     t0 = time.perf_counter()
     g = build_knn_graph(X, kappa, xi=64, tau=4, key=key)
     a0 = two_means_tree(X, k, key)
-    st = init_state(X, a0, k)
-    cand = graph_candidates(jnp.maximum(g.ids, 0))
-    for t in range(iters):
-        st = bkm.bkm_epoch(X, st, cand, 1024, jax.random.fold_in(key, t))
+    st = engine.init_state(X, a0, k)
+    cfg = engine.EngineConfig(batch_size=1024, iters=iters,
+                              min_move_frac=-1.0)
+    st, _, _, _, final = engine.run(X, st, engine.graph_source(g.ids), key,
+                                    cfg)
     jax.block_until_ready(st.assign)
-    return time.perf_counter() - t0, float(distortion(X, st.assign, k))
+    return time.perf_counter() - t0, float(final)
 
 
 def run(quick: bool = True):
@@ -45,21 +45,22 @@ def run(quick: bool = True):
     n = 32768 if quick else 1048576
     X = gmm_blobs(key, n, d, 256)
     g = build_knn_graph(X, 16, xi=64, tau=4, key=key)
-    cand = graph_candidates(jnp.maximum(g.ids, 0))
+    source = engine.graph_source(g.ids)
+    cfg = engine.EngineConfig(batch_size=1024)
     for k in (1024, 2048, 4096, 8192):
         a0 = two_means_tree(X, k, key)
-        st = init_state(X, a0, k)
-        st = bkm.bkm_epoch(X, st, cand, 1024, key)  # compile
+        st = engine.init_state(X, a0, k)
+        st = engine.epoch(X, st, source, key, cfg)          # compile
         t0 = time.perf_counter()
         for t in range(3):
-            st = bkm.bkm_epoch(X, st, cand, 1024, jax.random.fold_in(key, t))
+            st = engine.epoch(X, st, source, jax.random.fold_in(key, t), cfg)
         jax.block_until_ready(st.assign)
         t_ep = (time.perf_counter() - t0) / 3
         # full-BKM epoch for contrast (linear in k)
-        stf = init_state(X, a0, k)
-        stf = bkm.bkm_full_epoch(X, stf, 1024, key)
+        stf = engine.init_state(X, a0, k)
+        stf = engine.epoch(X, stf, engine.dense_source(), key, cfg)
         t0 = time.perf_counter()
-        stf = bkm.bkm_full_epoch(X, stf, 1024, key)
+        stf = engine.epoch(X, stf, engine.dense_source(), key, cfg)
         jax.block_until_ready(stf.assign)
         t_full = time.perf_counter() - t0
         rows.append((f"fig6b/k={k}", t_ep * 1e6,

@@ -7,7 +7,8 @@ import jax.numpy as jnp
 
 from benchmarks.common import timed
 from repro.data import gmm_blobs
-from repro.kernels import ops, ref
+from repro.kernels import ops
+from repro.launch.roofline import KERNEL_INVENTORY
 
 
 def run(quick: bool = True):
@@ -26,7 +27,21 @@ def run(quick: bool = True):
     C = gmm_blobs(jax.random.fold_in(key, 1), k, d, 8)
     f = jax.jit(lambda x, c: ops.assign_centroids(x, c)[0])
     us = timed(f, X, C)
-    flops = 2.0 * n * k * d
+    flops = KERNEL_INVENTORY["assign_centroids"]["flops"](n, k, d)
     rows.append((f"kernel/assign_centroids(n={n},k={k},d={d})", us,
+                 f"gflops={flops / us / 1e3:.1f}"))
+
+    # engine move-step scoring: gather + ΔI without the (B, C, d) tensor
+    Bg, Cg = (8192, 16) if quick else (65536, 50)
+    kk = jax.random.fold_in(key, 2)
+    xg = gmm_blobs(kk, Bg, d, 8)
+    u = jax.random.randint(jax.random.fold_in(kk, 1), (Bg,), 0, k)
+    cand = jax.random.randint(jax.random.fold_in(kk, 2), (Bg, Cg), 0, k)
+    D = gmm_blobs(jax.random.fold_in(kk, 3), k, d, 8)
+    cnt = jnp.ones((k,), jnp.float32) * 4
+    f = jax.jit(lambda *a: ops.gather_score(*a))
+    us = timed(f, xg, u, cand, D, cnt)
+    flops = KERNEL_INVENTORY["gather_score"]["flops"](Bg, Cg, d)
+    rows.append((f"kernel/gather_score(B={Bg},C={Cg},d={d})", us,
                  f"gflops={flops / us / 1e3:.1f}"))
     return rows

@@ -1,8 +1,9 @@
 """GK-means core: the paper's contribution as composable JAX modules."""
 from repro.core.anns import graph_search
-from repro.core.bkm import (BKMState, bkm_epoch, bkm_full_epoch,
-                            graph_candidates, init_state, run_bkm)
+from repro.core.bkm import BKMState, init_state, run_bkm
 from repro.core.closure import closure_kmeans
+from repro.core.engine import (CandidateSource, EngineConfig, dense_source,
+                               graph_source, probe_source)
 from repro.core.gkmeans import GKMeansResult, gk_means
 from repro.core.knn_graph import (KnnGraph, build_knn_graph, graph_distances,
                                   merge_topk, random_graph)
@@ -19,12 +20,13 @@ from repro.core.recall import (brute_force_knn, cooccurrence_rate, recall_at,
 from repro.core.two_means import pad_plan, two_means_tree
 
 __all__ = [
-    "BKMState", "ClusterStats", "GKMeansResult", "KnnGraph",
-    "bkm_epoch", "bkm_full_epoch", "brute_force_knn", "build_knn_graph",
+    "BKMState", "CandidateSource", "ClusterStats", "EngineConfig",
+    "GKMeansResult", "KnnGraph",
+    "brute_force_knn", "build_knn_graph",
     "centroids", "closure_kmeans", "cluster_stats", "cooccurrence_rate",
-    "delta_I", "delta_I_brute", "distortion", "gk_means", "graph_candidates",
-    "graph_distances", "graph_search", "init_kmeanspp", "init_random",
-    "init_state", "lloyd", "merge_topk", "minibatch_kmeans", "nn_descent",
-    "objective_I", "pad_plan", "random_graph", "recall_at", "recall_top1",
-    "run_bkm", "two_means_tree",
+    "delta_I", "delta_I_brute", "dense_source", "distortion", "gk_means",
+    "graph_distances", "graph_search", "graph_source", "init_kmeanspp",
+    "init_random", "init_state", "lloyd", "merge_topk", "minibatch_kmeans",
+    "nn_descent", "objective_I", "pad_plan", "probe_source", "random_graph",
+    "recall_at", "recall_top1", "run_bkm", "two_means_tree",
 ]

@@ -1,191 +1,42 @@
-"""Boost k-means (BKM) — batched incremental optimisation (paper §3.1, [16]).
+"""Boost k-means (BKM) — thin adapter over the unified clustering engine.
 
-TPU adaptation (DESIGN.md §2): the paper's one-sample-at-a-time stochastic
-moves become mini-batch parallel moves.  Every sample in a batch evaluates
-Eqn. 3 against its candidate clusters using the statistics at the start of the
-batch; accepted moves are applied together with scatter-adds, and the refreshed
-statistics feed the next batch.  ``batch_size=1`` recovers the paper's exact
-serial semantics (used as the reference in tests).
-
-Two candidate regimes:
-  * graph candidates (GK-means, Alg. 2): clusters of the sample's κ neighbours;
-  * dense (full BKM baseline): all k clusters, evaluated with a matmul so the
-    (B, k, d) gather is never materialised.
+The batched move step (paper §3.1, Eqn. 3 / [16]) lives in
+``repro.core.engine`` now, shared by every topology and candidate regime;
+this module keeps the historical entry point ``run_bkm`` (the full
+all-k-candidates baseline and the graph-guided variant) plus the state
+re-exports.  ``batch_size=1`` applies moves one sample at a time against
+live statistics (the paper's serial update rule); note the engine resolves
+graph CANDIDATES against the epoch-start assignment snapshot in every
+topology (the sharded semantics), so neighbour moves within an epoch are
+seen one epoch late.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, NamedTuple, Tuple
+from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.objective import ClusterStats, cluster_stats, delta_I
+from repro.core.engine import (BKMState, EngineConfig, dense_source,
+                               graph_source, init_state, run)
 
-
-class BKMState(NamedTuple):
-    assign: jax.Array  # (n,) int32
-    D: jax.Array       # (k, d) float32
-    cnt: jax.Array     # (k,) float32
-    moves: jax.Array   # () int32 — moves accepted in the last epoch
-
-
-def init_state(X: jax.Array, assign: jax.Array, k: int) -> BKMState:
-    stats = cluster_stats(X, assign, k)
-    return BKMState(assign.astype(jnp.int32), stats.D, stats.cnt,
-                    jnp.zeros((), jnp.int32))
-
-
-# ---------------------------------------------------------------------------
-# candidate generators
-# ---------------------------------------------------------------------------
-
-def graph_candidates(G: jax.Array) -> Callable:
-    """Candidates = clusters where the κ graph-neighbours currently live."""
-    def cand_fn(idx: jax.Array, assign: jax.Array) -> jax.Array:
-        return assign[G[idx]]  # (B, κ)
-    return cand_fn
-
-
-# ---------------------------------------------------------------------------
-# one batched move step (shared by the epoch loops)
-# ---------------------------------------------------------------------------
-
-def _batch_moves(X, state: BKMState, idx, cand, eps, mode):
-    """Evaluate + apply moves for one batch of sample indices.
-
-    cand: (B, C) candidate cluster ids (may include the current cluster).
-    mode: 'bkm'  — accept the best positive ΔI move (Eqn. 3);
-          'lloyd' — move to the closest candidate *centroid* unconditionally
-                    (the "built upon traditional k-means" variant, §5.2).
-    """
-    k = state.D.shape[0]
-    xb = X[idx].astype(jnp.float32)                    # (B, d)
-    u = state.assign[idx]                              # (B,)
-    Dv = state.D[cand]                                 # (B, C, d)
-    nv = state.cnt[cand]                               # (B, C)
-    is_self = cand == u[:, None]
-
-    if mode == "bkm":
-        Du = state.D[u]
-        nu = state.cnt[u]
-        score = delta_I(xb, Du, nu, Dv, nv)            # (B, C), maximise
-        score = jnp.where(is_self, -jnp.inf, score)
-        best = jnp.argmax(score, axis=1)
-        best_gain = jnp.take_along_axis(score, best[:, None], 1)[:, 0]
-        moved = best_gain > eps
-    else:  # lloyd: min distance to candidate centroids (empty cands -> +inf)
-        Cc = Dv / jnp.maximum(nv, 1.0)[..., None]
-        d2 = (jnp.sum(Cc * Cc, -1) - 2.0 *
-              jnp.einsum("bcd,bd->bc", Cc, xb))
-        d2 = jnp.where(nv > 0, d2, jnp.inf)
-        best = jnp.argmin(d2, axis=1)
-        moved = jnp.take_along_axis(is_self, best[:, None], 1)[:, 0] == False  # noqa: E712
-
-    best_v = jnp.take_along_axis(cand, best[:, None], 1)[:, 0]
-
-    # never empty a cluster: block all leavers of clusters whose leaver count
-    # would reach its population (conservative, rare — DESIGN.md §2)
-    leav = jax.ops.segment_sum(moved.astype(jnp.float32), u, num_segments=k)
-    ok = (state.cnt - leav) >= 1.0
-    moved = moved & ok[u]
-
-    v = jnp.where(moved, best_v, u)
-    w = moved.astype(jnp.float32)[:, None]
-    D = state.D.at[u].add(-xb * w).at[v].add(xb * w)
-    cnt = (state.cnt.at[u].add(-w[:, 0]).at[v].add(w[:, 0]))
-    assign = state.assign.at[idx].set(v.astype(jnp.int32))
-    return BKMState(assign, D, cnt, state.moves + jnp.sum(moved, dtype=jnp.int32))
-
-
-# ---------------------------------------------------------------------------
-# epochs
-# ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnums=(2, 3, 5, 6))
-def bkm_epoch(X: jax.Array, state: BKMState, cand_fn: Callable,
-              batch_size: int, key: jax.Array, eps: float = 0.0,
-              mode: str = "bkm") -> BKMState:
-    """One pass over (a shuffled view of) the data in mini-batches.
-
-    Visits n // batch_size * batch_size samples per epoch (the remainder is
-    covered by the reshuffling across epochs, matching the paper's stochastic
-    sweep).
-    """
-    n = X.shape[0]
-    nb = max(n // batch_size, 1)
-    order = jax.random.permutation(key, n).astype(jnp.int32)
-    state = state._replace(moves=jnp.zeros((), jnp.int32))
-
-    def body(i, st):
-        idx = jax.lax.dynamic_slice(order, (i * batch_size,), (batch_size,))
-        cand = cand_fn(idx, st.assign)
-        return _batch_moves(X, st, idx, cand, eps, mode)
-
-    return jax.lax.fori_loop(0, nb, body, state)
-
-
-@functools.partial(jax.jit, static_argnums=(2, 4))
-def bkm_full_epoch(X: jax.Array, state: BKMState, batch_size: int,
-                   key: jax.Array, eps: float = 0.0) -> BKMState:
-    """Full boost k-means baseline: every sample scores ALL k clusters.
-
-    The (B, k) ΔI matrix is computed with one matmul (O(n·k·d) per epoch, the
-    paper's bottleneck); used as the quality upper-bound baseline.
-    """
-    n = X.shape[0]
-    k = state.D.shape[0]
-    nb = max(n // batch_size, 1)
-    order = jax.random.permutation(key, n).astype(jnp.int32)
-    state = state._replace(moves=jnp.zeros((), jnp.int32))
-
-    def body(i, st):
-        idx = jax.lax.dynamic_slice(order, (i * batch_size,), (batch_size,))
-        xb = X[idx].astype(jnp.float32)                # (B, d)
-        u = st.assign[idx]
-        xsq = jnp.sum(xb * xb, -1)                     # (B,)
-        dsq = jnp.sum(st.D * st.D, -1)                 # (k,)
-        dots = xb @ st.D.T                             # (B, k) — MXU path
-        nv = st.cnt[None, :]
-        gain_v = ((dsq[None, :] + 2.0 * dots + xsq[:, None]) / (nv + 1.0)
-                  - jnp.where(nv > 0, dsq[None, :] / jnp.maximum(nv, 1.0), 0.0))
-        du_sq = dsq[u]
-        x_du = jnp.take_along_axis(dots, u[:, None], 1)[:, 0]
-        nu = st.cnt[u]
-        num_u = du_sq - 2.0 * x_du + xsq
-        resid = jnp.where(nu > 1, num_u / jnp.maximum(nu - 1.0, 1.0), 0.0)
-        loss_u = resid - du_sq / jnp.maximum(nu, 1.0)
-        score = gain_v + loss_u[:, None]
-        score = jnp.where(jnp.arange(k)[None, :] == u[:, None], -jnp.inf, score)
-        best_v = jnp.argmax(score, 1).astype(jnp.int32)
-        best_gain = jnp.take_along_axis(score, best_v[:, None], 1)[:, 0]
-        moved = best_gain > eps
-        leav = jax.ops.segment_sum(moved.astype(jnp.float32), u, num_segments=k)
-        moved = moved & ((st.cnt - leav) >= 1.0)[u]
-        v = jnp.where(moved, best_v, u)
-        w = moved.astype(jnp.float32)[:, None]
-        D = st.D.at[u].add(-xb * w).at[v].add(xb * w)
-        cnt = st.cnt.at[u].add(-w[:, 0]).at[v].add(w[:, 0])
-        assign = st.assign.at[idx].set(v.astype(jnp.int32))
-        return BKMState(assign, D, cnt,
-                        st.moves + jnp.sum(moved, dtype=jnp.int32))
-
-    return jax.lax.fori_loop(0, nb, body, state)
+__all__ = ["BKMState", "init_state", "run_bkm"]
 
 
 def run_bkm(X: jax.Array, assign0: jax.Array, k: int, *, iters: int,
-            batch_size: int, key: jax.Array, cand_fn: Callable | None = None,
-            mode: str = "bkm", eps: float = 0.0,
-            ) -> Tuple[BKMState, jax.Array]:
-    """Run `iters` epochs; returns final state + per-epoch distortion history."""
-    from repro.core.objective import distortion
-    state = init_state(X, assign0, k)
-    hist = []
-    for t in range(iters):
-        ek = jax.random.fold_in(key, t)
-        if cand_fn is None:
-            state = bkm_full_epoch(X, state, batch_size, ek, eps)
-        else:
-            state = bkm_epoch(X, state, cand_fn, batch_size, ek, eps, mode)
-        hist.append(distortion(X, state.assign, k))
-    return state, jnp.stack(hist) if hist else jnp.zeros((0,))
+            batch_size: int, key: jax.Array,
+            G: Optional[jax.Array] = None, mode: str = "bkm",
+            eps: float = 0.0) -> Tuple[BKMState, jax.Array]:
+    """Run `iters` epochs; returns final state + per-epoch distortion history.
+
+    G=None scores ALL k clusters per sample with one matmul per batch
+    (O(n·k·d) per epoch — the paper's bottleneck, kept as the quality
+    upper-bound baseline); otherwise G is a (n, κ) neighbour-id array and
+    each sample scores only its neighbours' clusters (GK-means, Alg. 2).
+    """
+    source = dense_source() if G is None else graph_source(G)
+    # min_move_frac < 0: always run the full `iters` epochs (history is
+    # fixed-length for the figure scripts)
+    cfg = EngineConfig(batch_size=min(batch_size, X.shape[0]), mode=mode,
+                       eps=eps, iters=iters, min_move_frac=-1.0)
+    state, hist, _, _, _ = run(X, init_state(X, assign0, k), source, key, cfg)
+    return state, hist

@@ -13,9 +13,9 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bkm
+from repro.core import engine
 from repro.core.knn_graph import members_table
-from repro.core.objective import centroids, cluster_stats, distortion
+from repro.core.objective import centroids, cluster_stats
 from repro.core.two_means import pad_plan, two_means_tree
 
 
@@ -74,12 +74,10 @@ def closure_kmeans(X: jax.Array, k: int, *, iters: int = 20, trees: int = 3,
     else:
         assign = two_means_tree(X, k2, ki)
 
-    state = bkm.init_state(X, assign, k2)
-    cand_fn = bkm.graph_candidates(ids)
-    hist = []
-    for t in range(iters):
-        state = bkm.bkm_epoch(X, state, cand_fn, min(batch_size, n),
-                              jax.random.fold_in(kb, t), 0.0, "lloyd")
-        hist.append(float(distortion(X, state.assign, k2)))
+    state = engine.init_state(X, assign, k2)
+    cfg = engine.EngineConfig(batch_size=min(batch_size, n), mode="lloyd",
+                              iters=iters, min_move_frac=-1.0)
+    state, hist, _, _, _ = engine.run(X, state, engine.graph_source(ids),
+                                      kb, cfg)
     C = centroids(cluster_stats(X, state.assign, k2))
-    return state.assign, C, hist
+    return state.assign, C, [float(h) for h in jax.device_get(hist)]

@@ -1,149 +1,68 @@
-"""Distributed GK-means — shard_map SPMD over the ("pod","data") mesh axes.
+"""Distributed GK-means — shard_map adapters over the unified engine.
 
 Layout (DESIGN.md §4):
   * X and the KNN graph rows are sharded over the data axes (row-parallel);
-  * the assignment vector is sharded; a replicated copy for *candidate lookup*
-    (neighbour ids are global) is refreshed once per epoch via all_gather;
-  * cluster statistics (D, cnt) are replicated and kept exactly consistent by
-    a per-batch psum of the move deltas — each device's batch of moves is
-    evaluated against the same statistics every step, matching the
-    single-device mini-batch semantics with an effective batch of
-    batch_size * n_devices.
+  * the assignment vector is sharded; a replicated copy for *candidate
+    lookup* (neighbour ids are global) is refreshed once per epoch via
+    all_gather;
+  * cluster statistics (D, cnt) are replicated and kept exactly consistent
+    per batch — either by a psum of the dense (k, d) move deltas, or
+    (``sparse_updates``) by all-gathering the moved sample vectors +
+    (src, dst) ids and applying the scatter locally on every replica
+    (O(R*B*d) wire bytes instead of O(k*d) — §Perf).
 
-For very large k the statistics can be sharded over the "model" axis with
-`shard_stats=True`: candidate rows are then gathered shard-locally and summed
-with a psum over "model" (collective cost ~ B*C*d per batch — reported by the
-roofline analysis).
+The epoch body itself lives in ``repro.core.engine`` (``sharded_epoch_body``)
+and is the same candidate->score->move step the single-device path runs:
+``mode='lloyd'``, ``sparse_updates`` and ``payload_bf16`` are engine options
+in both topologies, and ``engine.epoch(..., shards=R)`` reproduces this
+epoch's visit order and arithmetic on one device (the parity tests pin the
+two together bit-exactly).
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from repro.core.bkm import BKMState
-from repro.core.objective import delta_I
-
+from repro.core.engine import (CandidateSource, EngineConfig, dense_source,
+                               graph_source, probe_source,
+                               sharded_epoch_body)
 
 DATA_AXES = ("data",)
 
 
-def _gather_rows_model_sharded(D_l, cnt_l, cand, axis: str):
-    """Gather rows of a model-axis-sharded (k, d) table for global ids `cand`.
-
-    D_l: (k_loc, d) local shard; cand: (B, C) global ids.
-    Returns (B, C, d), (B, C) replicated across the axis (via psum).
-    """
-    k_loc = D_l.shape[0]
-    me = jax.lax.axis_index(axis)
-    owner = cand // k_loc
-    local = jnp.where(owner == me, cand % k_loc, 0)
-    mine = (owner == me).astype(jnp.float32)
-    Dv = D_l[local] * mine[..., None]
-    nv = cnt_l[local] * mine
-    return (jax.lax.psum(Dv, axis), jax.lax.psum(nv, axis))
-
-
 def make_sharded_epoch(mesh: Mesh, *, data_axes: Tuple[str, ...] = DATA_AXES,
                        batch_size: int = 1024, eps: float = 0.0,
-                       sparse_updates: bool = False,
+                       mode: str = "bkm", kind: str = "graph",
+                       probe_p: int = 8, sparse_updates: bool = False,
                        payload_bf16: bool = False):
-    """Build a shard_map'd GK-means epoch for `mesh`.
+    """Build a shard_map'd clustering epoch for `mesh`.
 
-    Returns fn(X, G, state, key) -> state, where X/G/assign are sharded over
-    `data_axes` rows and (D, cnt) are replicated.
+    Returns fn(X, G, state, key) -> (assign, D, cnt, moves), where X/G/assign
+    are sharded over `data_axes` rows and (D, cnt) are replicated.
 
-    sparse_updates (beyond-paper §Perf): instead of psum-ing the DENSE (k, d)
-    statistic deltas every batch (O(k*d) wire traffic — 2 GiB at k=2^20,
-    d=512), all-gather the B moved sample vectors + (src, dst) ids
-    (O(R*B*d)) and apply the scatter locally on every replica.  Statistics
-    stay bit-identically consistent; wire bytes drop by ~k/(R*B).
+    kind selects the candidate source ('graph' | 'dense' | 'probe'); G is
+    the neighbour-id array for 'graph' and ignored otherwise (pass any
+    row-sharded int32 array of matching leading dim).
     """
+    cfg = EngineConfig(batch_size=batch_size, eps=eps, mode=mode,
+                       sparse_updates=sparse_updates,
+                       payload_bf16=payload_bf16)
     row = P(data_axes)
     rep = P()
 
     def epoch(X, G, assign, D, cnt, key):
-        n_loc = X.shape[0]
-        k = D.shape[0]
-        bs = min(batch_size, n_loc)
-        nb = max(n_loc // bs, 1)
-        # candidate lookup table: global assignment, stale within the epoch
-        assign_g = jax.lax.all_gather(assign, data_axes[0], tiled=True)
-        if len(data_axes) > 1:
-            for ax in data_axes[1:]:
-                assign_g = jax.lax.all_gather(assign_g, ax, tiled=True)
-        me = jax.lax.axis_index(data_axes[0])
-        order = jax.random.permutation(jax.random.fold_in(key, me),
-                                       n_loc).astype(jnp.int32)
-
-        def body(i, carry):
-            assign_l, assign_g, D, cnt, moves = carry
-            idx = jax.lax.dynamic_slice(order, (i * bs,), (bs,))
-            xb = X[idx].astype(jnp.float32)
-            u = assign_l[idx]
-            cand = assign_g[G[idx]]                      # (B, kappa)
-            Dv, nv = D[cand], cnt[cand]
-            score = delta_I(xb, D[u], cnt[u], Dv, nv)
-            score = jnp.where(cand == u[:, None], -jnp.inf, score)
-            best = jnp.argmax(score, axis=1)
-            gain = jnp.take_along_axis(score, best[:, None], 1)[:, 0]
-            moved = gain > eps
-            want_v = jnp.take_along_axis(cand, best[:, None], 1)[:, 0]
-
-            if sparse_updates:
-                # gather every replica's batch of proposed moves, then apply
-                # the guard + scatter locally (identical on all replicas)
-                gx = xb * moved.astype(jnp.float32)[:, None]
-                if payload_bf16:
-                    # §Perf C3: halve move-payload wire bytes.  The bitcast
-                    # to u16 keeps XLA's algebraic simplifier from hoisting
-                    # the f32 convert back across the all-gather.
-                    gx = jax.lax.bitcast_convert_type(
-                        gx.astype(jnp.bfloat16), jnp.uint16)
-                gu, gv = u, jnp.where(moved, want_v, u)
-                for ax in data_axes:
-                    gx = jax.lax.all_gather(gx, ax, tiled=True)
-                    gu = jax.lax.all_gather(gu, ax, tiled=True)
-                    gv = jax.lax.all_gather(gv, ax, tiled=True)
-                if payload_bf16:
-                    gx = jax.lax.bitcast_convert_type(gx, jnp.bfloat16)
-                gx = gx.astype(jnp.float32)
-                gw = (gu != gv).astype(jnp.float32)
-                leav = jax.ops.segment_sum(gw, gu, num_segments=k)
-                ok = (cnt - leav) >= 1.0
-                gv = jnp.where(ok[gu], gv, gu)           # veto unsafe moves
-                gx = gx * (gu != gv).astype(jnp.float32)[:, None]
-                D = D.at[gu].add(-gx).at[gv].add(gx)
-                gw2 = (gu != gv).astype(jnp.float32)
-                cnt = cnt.at[gu].add(-gw2).at[gv].add(gw2)
-                moved = moved & ok[u]
-                v = jnp.where(moved, want_v, u)
-            else:
-                # global leaver guard + dense (k, d) delta psum
-                leav = jax.ops.segment_sum(moved.astype(jnp.float32), u,
-                                           num_segments=k)
-                leav = jax.lax.psum(leav, data_axes)
-                moved = moved & ((cnt - leav) >= 1.0)[u]
-                v = jnp.where(moved, want_v, u)
-                w = moved.astype(jnp.float32)[:, None]
-                dD = (jnp.zeros_like(D).at[u].add(-xb * w)
-                      .at[v].add(xb * w))
-                dc = (jnp.zeros_like(cnt).at[u].add(-w[:, 0])
-                      .at[v].add(w[:, 0]))
-                D = D + jax.lax.psum(dD, data_axes)
-                cnt = cnt + jax.lax.psum(dc, data_axes)
-            assign_l = assign_l.at[idx].set(v.astype(jnp.int32))
-            return (assign_l, assign_g, D, cnt,
-                    moves + jnp.sum(moved, dtype=jnp.int32))
-
-        assign, _, D, cnt, moves = jax.lax.fori_loop(
-            0, nb, body, (assign, assign_g, D, cnt, jnp.zeros((), jnp.int32)))
-        moves = jax.lax.psum(moves, data_axes)
-        return assign, D, cnt, moves
+        if kind == "graph":
+            source: CandidateSource = graph_source(G)
+        elif kind == "probe":
+            source = probe_source(probe_p)
+        else:
+            source = dense_source()
+        return sharded_epoch_body(X, source, assign, D, cnt, key, cfg=cfg,
+                                  data_axes=data_axes)
 
     fn = shard_map(
         epoch, mesh=mesh,

@@ -1,0 +1,443 @@
+"""Unified device-resident clustering engine: candidate -> score -> move.
+
+Every clustering loop in this repo is the same three steps:
+
+  candidates  which clusters may a sample move to — the clusters of its κ
+              graph neighbours (GK-means, Alg. 2), all k clusters (full
+              boost k-means), or the top-p probed cells (IVF-style);
+  score       ΔI of the move (paper Eqn. 3, mode='bkm') or distance to the
+              candidate centroid (mode='lloyd', §5.2 variant);
+  move        accept the best move, guard against emptying a cluster, and
+              scatter-update the running statistics (D, cnt).
+
+This module implements that core ONCE for both topologies.  ``epoch`` is the
+single-device pass; ``sharded_epoch_body`` is the same step sequence written
+against ``shard_map`` collectives (``core.distributed`` wraps it) — both call
+the shared ``_move_step``, so ``sparse_updates``, ``payload_bf16``, both
+modes, and the leaver guard behave identically everywhere.  ``epoch`` can
+also *emulate* an R-way sharded visit order bit-exactly (``cfg.shards``),
+which is how the parity tests pin the two topologies together.
+
+``run`` is the fully device-resident multi-epoch driver: a
+``jax.lax.while_loop`` over donated ``BKMState`` with the ``min_move_frac``
+early stop *inside* the trace and per-epoch distortion computed in O(k·d)
+from the running statistics (``sum||x||² − Σ_c ||D_c||²/n_c``, with the
+``sum||x||²`` term hoisted out of the loop) — one host sync per run instead
+of one per epoch.
+
+Candidate sets are plain array arguments (a ``CandidateSource`` pytree), not
+closures: calling the engine with a *new* graph of the same shape reuses the
+existing jit trace (the old ``cand_fn``-as-static-argnum API retraced on
+every call).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+class BKMState(NamedTuple):
+    assign: jax.Array  # (n,) int32
+    D: jax.Array       # (k, d) float32 — composite vectors
+    cnt: jax.Array     # (k,) float32
+    moves: jax.Array   # () int32 — moves accepted in the last epoch
+
+
+def init_state(X: jax.Array, assign: jax.Array, k: int) -> BKMState:
+    from repro.core.objective import cluster_stats
+    stats = cluster_stats(X, assign, k)
+    return BKMState(assign.astype(jnp.int32), stats.D, stats.cnt,
+                    jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# candidate sources
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+class CandidateSource:
+    """Which clusters each sample may move to.
+
+    kind='graph': the clusters of the sample's graph neighbours (``G`` is a
+    (n, κ) int32 neighbour-id array — a *traced* leaf, so swapping in a new
+    graph of the same shape does not retrace);
+    kind='dense': all k clusters, scored with one matmul (the (B, k, d)
+    gather is never materialised);
+    kind='probe': the ``p`` nearest cells by current centroid (flash-argmin
+    top-p probe, ``kernels.ops.probe_centroids``).
+    """
+
+    def __init__(self, kind: str, G: Optional[jax.Array] = None, p: int = 0):
+        assert kind in ("graph", "dense", "probe"), kind
+        self.kind = kind
+        self.G = G
+        self.p = p
+
+    def tree_flatten(self):
+        return (self.G,), (self.kind, self.p)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux[0], children[0], aux[1])
+
+    def __repr__(self):
+        return f"CandidateSource({self.kind!r}, p={self.p})"
+
+
+def graph_source(G: jax.Array) -> CandidateSource:
+    return CandidateSource("graph", jnp.maximum(G, 0).astype(jnp.int32))
+
+
+def dense_source() -> CandidateSource:
+    return CandidateSource("dense")
+
+
+def probe_source(p: int) -> CandidateSource:
+    return CandidateSource("probe", p=p)
+
+
+class EngineConfig(NamedTuple):
+    """Static knobs of the engine (hashable: one jit trace per config)."""
+
+    batch_size: int = 1024
+    mode: str = "bkm"           # 'bkm' (Eqn. 3) | 'lloyd' (§5.2 variant)
+    eps: float = 0.0            # minimum ΔI gain to accept a move
+    iters: int = 1              # epochs for `run`
+    min_move_frac: float = 0.0  # `run` stops when epoch moves <= frac * n
+    sparse_updates: bool = False  # sharded: gather moved rows, not dense psum
+    payload_bf16: bool = False    # sparse payload in bf16 (halves wire bytes)
+    shards: int = 1             # single-device emulation of an R-way order
+    force: Optional[str] = None  # kernel dispatch override (None|'ref'|...)
+
+
+# ---------------------------------------------------------------------------
+# the shared move step
+# ---------------------------------------------------------------------------
+
+def _candidates(source: CandidateSource, xb, idx, lookup, D, cnt, force):
+    """Candidate cluster ids for one batch; None means dense-all-k."""
+    if source.kind == "graph":
+        return lookup[source.G[idx]]                      # (B, κ)
+    if source.kind == "probe":
+        C = D / jnp.maximum(cnt, 1.0)[:, None]
+        ids, _ = kops.probe_centroids(xb, C, source.p, force=force)
+        return ids                                        # (B, p)
+    return None
+
+
+def _score_gathered(xb, u, cand, D, cnt, mode, eps, force):
+    """Best move per sample among gathered candidates -> (moved, want_v)."""
+    is_self = cand == u[:, None]
+    if mode == "bkm":
+        score = kops.gather_score(xb, u, cand, D, cnt, mode="bkm",
+                                  force=force)
+        score = jnp.where(is_self, -jnp.inf, score)
+        best = jnp.argmax(score, axis=1)
+        gain = jnp.take_along_axis(score, best[:, None], 1)[:, 0]
+        moved = gain > eps
+    else:
+        d2 = kops.gather_score(xb, u, cand, D, cnt, mode="lloyd",
+                               force=force)
+        best = jnp.argmin(d2, axis=1)
+        moved = ~jnp.take_along_axis(is_self, best[:, None], 1)[:, 0]
+    want_v = jnp.take_along_axis(cand, best[:, None], 1)[:, 0]
+    return moved, want_v
+
+
+def _score_dense(xb, u, D, cnt, mode, eps):
+    """Best move per sample over ALL k clusters, via one matmul (MXU path)."""
+    k = D.shape[0]
+    dsq = jnp.sum(D * D, axis=-1)                        # (k,)
+    dots = xb @ D.T                                      # (B, k)
+    xsq = jnp.sum(xb * xb, axis=-1)                      # (B,)
+    if mode == "bkm":
+        nv = cnt[None, :]
+        gain_v = ((dsq[None, :] + 2.0 * dots + xsq[:, None]) / (nv + 1.0)
+                  - jnp.where(nv > 0, dsq[None, :] / jnp.maximum(nv, 1.0),
+                              0.0))
+        du_sq = dsq[u]
+        x_du = jnp.take_along_axis(dots, u[:, None], 1)[:, 0]
+        nu = cnt[u]
+        num_u = du_sq - 2.0 * x_du + xsq
+        resid = jnp.where(nu > 1, num_u / jnp.maximum(nu - 1.0, 1.0), 0.0)
+        score = gain_v + (resid - du_sq / jnp.maximum(nu, 1.0))[:, None]
+        score = jnp.where(jnp.arange(k)[None, :] == u[:, None], -jnp.inf,
+                          score)
+        best = jnp.argmax(score, 1).astype(jnp.int32)
+        moved = jnp.take_along_axis(score, best[:, None], 1)[:, 0] > eps
+    else:
+        csq_n = jnp.maximum(cnt, 1.0)
+        d2 = (dsq[None, :] / (csq_n * csq_n)[None, :]
+              - 2.0 * dots / csq_n[None, :])
+        d2 = jnp.where(cnt[None, :] > 0, d2, jnp.inf)
+        best = jnp.argmin(d2, 1).astype(jnp.int32)
+        moved = best != u
+    return moved, best
+
+
+class _Comm(NamedTuple):
+    """Collective hooks of the sharded topology (None -> single device)."""
+
+    data_axes: Tuple[str, ...]
+
+
+def _psum(x, comm: _Comm):
+    return jax.lax.psum(x, comm.data_axes)
+
+
+def _all_gather(x, comm: _Comm):
+    for ax in comm.data_axes:
+        x = jax.lax.all_gather(x, ax, tiled=True)
+    return x
+
+
+def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
+    """One batched candidate->score->move step (both topologies).
+
+    idx indexes rows of the *local* X/assign; `lookup` is the (global)
+    assignment snapshot used for candidate lookup.  `comm` carries the
+    shard_map collective hooks; None means single device, where
+    ``cfg.sparse_updates`` / ``cfg.payload_bf16`` reproduce the sharded
+    sparse path's arithmetic exactly (same scatter over the same row order).
+    """
+    k = D.shape[0]
+    xb = X[idx].astype(jnp.float32)
+    u = assign[idx]
+
+    def score(xb_s, u_s, idx_s):
+        cand = _candidates(source, xb_s, idx_s, lookup, D, cnt, cfg.force)
+        if cand is None:
+            return _score_dense(xb_s, u_s, D, cnt, cfg.mode, cfg.eps)
+        return _score_gathered(xb_s, u_s, cand, D, cnt, cfg.mode, cfg.eps,
+                               cfg.force)
+
+    if comm is None and cfg.shards > 1:
+        # score per emulated shard with the sharded program's exact (bs, C)
+        # shapes: XLA reductions are only bitwise-reproducible at equal
+        # shapes, and the all-or-nothing leaver guard amplifies a single
+        # flipped borderline proposal into a whole-cluster divergence
+        R, bs = cfg.shards, idx.shape[0] // cfg.shards
+        parts = [score(xb[s * bs:(s + 1) * bs], u[s * bs:(s + 1) * bs],
+                       idx[s * bs:(s + 1) * bs]) for s in range(R)]
+        moved = jnp.concatenate([p[0] for p in parts])
+        want_v = jnp.concatenate([p[1] for p in parts])
+    else:
+        moved, want_v = score(xb, u, idx)
+
+    if comm is not None and cfg.sparse_updates:
+        # gather every replica's proposed moves, then apply the leaver guard
+        # + scatter locally — identical on all replicas, O(R*B*d) wire bytes
+        # instead of the dense O(k*d) psum (§Perf).
+        gx = xb * moved.astype(jnp.float32)[:, None]
+        if cfg.payload_bf16:
+            # §Perf C3: halve move-payload wire bytes.  The bitcast to u16
+            # keeps XLA's algebraic simplifier from hoisting the f32 convert
+            # back across the all-gather.
+            gx = jax.lax.bitcast_convert_type(
+                gx.astype(jnp.bfloat16), jnp.uint16)
+        gu, gv = u, jnp.where(moved, want_v, u)
+        gx = _all_gather(gx, comm)
+        gu = _all_gather(gu, comm)
+        gv = _all_gather(gv, comm)
+        if cfg.payload_bf16:
+            gx = jax.lax.bitcast_convert_type(gx, jnp.bfloat16)
+        gx = gx.astype(jnp.float32)
+        gw = (gu != gv).astype(jnp.float32)
+        leav = jax.ops.segment_sum(gw, gu, num_segments=k)
+        ok = (cnt - leav) >= 1.0
+        gv = jnp.where(ok[gu], gv, gu)                   # veto unsafe moves
+        gx = gx * (gu != gv).astype(jnp.float32)[:, None]
+        D = D.at[gu].add(-gx).at[gv].add(gx)
+        gw2 = (gu != gv).astype(jnp.float32)
+        cnt = cnt.at[gu].add(-gw2).at[gv].add(gw2)
+        moved = moved & ok[u]
+        v = jnp.where(moved, want_v, u)
+    elif comm is not None:
+        # dense statistics sync: global leaver guard + (k, d) delta psum
+        leav = jax.ops.segment_sum(moved.astype(jnp.float32), u,
+                                   num_segments=k)
+        leav = _psum(leav, comm)
+        moved = moved & ((cnt - leav) >= 1.0)[u]
+        v = jnp.where(moved, want_v, u)
+        w = moved.astype(jnp.float32)[:, None]
+        dD = jnp.zeros_like(D).at[u].add(-xb * w).at[v].add(xb * w)
+        dc = jnp.zeros_like(cnt).at[u].add(-w[:, 0]).at[v].add(w[:, 0])
+        D = D + _psum(dD, comm)
+        cnt = cnt + _psum(dc, comm)
+    else:
+        # single device.  The guard blocks all leavers of any cluster whose
+        # leaver count would reach its population (conservative, rare).
+        leav = jax.ops.segment_sum(moved.astype(jnp.float32), u,
+                                   num_segments=k)
+        moved = moved & ((cnt - leav) >= 1.0)[u]
+        v = jnp.where(moved, want_v, u)
+        gx = xb * moved.astype(jnp.float32)[:, None]
+        if cfg.payload_bf16 and cfg.sparse_updates:
+            gx = gx.astype(jnp.bfloat16).astype(jnp.float32)
+        if cfg.shards > 1 and not cfg.sparse_updates:
+            # mirror the dense-psum arithmetic: per-shard partial deltas,
+            # then a sequential device-order sum (matches the all-reduce up
+            # to its backend-defined fp ordering — assignments and counts
+            # stay exact, D to ~1 ulp; the parity test pins all three)
+            R = cfg.shards
+            bs = idx.shape[0] // R
+            dD_tot, dc_tot = None, None
+            for s in range(R):
+                sl = slice(s * bs, (s + 1) * bs)
+                us, vs, gs = u[sl], v[sl], gx[sl]
+                ms = (us != vs).astype(jnp.float32)
+                dDs = jnp.zeros_like(D).at[us].add(-gs).at[vs].add(gs)
+                dcs = jnp.zeros_like(cnt).at[us].add(-ms).at[vs].add(ms)
+                dD_tot = dDs if s == 0 else dD_tot + dDs
+                dc_tot = dcs if s == 0 else dc_tot + dcs
+            D = D + dD_tot
+            cnt = cnt + dc_tot
+        else:
+            gw = (u != v).astype(jnp.float32)
+            D = D.at[u].add(-gx).at[v].add(gx)
+            cnt = cnt.at[u].add(-gw).at[v].add(gw)
+
+    assign = assign.at[idx].set(v.astype(jnp.int32))
+    moves = moves + jnp.sum(moved, dtype=jnp.int32)
+    return assign, D, cnt, moves
+
+
+# ---------------------------------------------------------------------------
+# single-device epochs and the device-resident run
+# ---------------------------------------------------------------------------
+
+def _epoch_impl(X, state: BKMState, source: CandidateSource, key,
+                cfg: EngineConfig) -> BKMState:
+    n = X.shape[0]
+    R = cfg.shards
+    n_loc = n // R
+    bs = min(cfg.batch_size, n_loc)
+    nb = max(n_loc // bs, 1)
+    # the sharded epoch's visit order exactly: one shared local permutation,
+    # shard s owning the contiguous rows [s*n_loc, (s+1)*n_loc)
+    order_loc = jax.random.permutation(key, n_loc).astype(jnp.int32)
+    orders = order_loc[None, :] + (jnp.arange(R, dtype=jnp.int32)
+                                   * n_loc)[:, None]
+    lookup = state.assign      # candidate lookup: epoch-start snapshot
+    state = state._replace(moves=jnp.zeros((), jnp.int32))
+
+    def body(i, st):
+        idx = jax.lax.dynamic_slice(orders, (0, i * bs), (R, bs)).reshape(-1)
+        assign, D, cnt, moves = _move_step(
+            X, st.assign, st.D, st.cnt, st.moves, idx, lookup, source, cfg,
+            None)
+        return BKMState(assign, D, cnt, moves)
+
+    return jax.lax.fori_loop(0, nb, body, state)
+
+
+@functools.partial(jax.jit, static_argnums=(4,))
+def epoch(X: jax.Array, state: BKMState, source: CandidateSource,
+          key: jax.Array, cfg: EngineConfig = EngineConfig()) -> BKMState:
+    """One engine pass over (a shuffled view of) the data in mini-batches.
+
+    Visits n // batch_size * batch_size samples (the remainder is covered by
+    reshuffling across epochs).  The candidate lookup table is the
+    epoch-start assignment (refreshing it per batch is a HBM round-trip per
+    step; staleness within one epoch matches the sharded semantics).
+    """
+    return _epoch_impl(X, state, source, key, cfg)
+
+
+def stats_distortion(xsq_total, D, cnt, n) -> jax.Array:
+    """Distortion in O(k·d) from the running statistics (paper Eqn. 2/4)."""
+    dsq = jnp.sum(D * D, axis=-1)
+    objective = jnp.sum(jnp.where(cnt > 0, dsq / jnp.maximum(cnt, 1.0), 0.0))
+    return (xsq_total - objective) / n
+
+
+def _run_impl(X, state, source, key, cfg):
+    n = X.shape[0]
+    xsq_total = jnp.sum(jnp.square(X.astype(jnp.float32)))   # hoisted once
+    hist0 = jnp.full((cfg.iters,), jnp.nan, jnp.float32)
+    mhist0 = jnp.zeros((cfg.iters,), jnp.int32)
+    thresh = cfg.min_move_frac * n
+
+    def cond(carry):
+        t, _, _, _, done = carry
+        return (t < cfg.iters) & ~done
+
+    def body(carry):
+        t, st, hist, mhist, _ = carry
+        st = _epoch_impl(X, st, source, jax.random.fold_in(key, t), cfg)
+        dist = stats_distortion(xsq_total, st.D, st.cnt, n)
+        hist = hist.at[t].set(dist)
+        mhist = mhist.at[t].set(st.moves)
+        done = st.moves <= thresh
+        return t + 1, st, hist, mhist, done
+
+    t, st, hist, mhist, _ = jax.lax.while_loop(
+        cond, body,
+        (jnp.zeros((), jnp.int32), state, hist0, mhist0,
+         jnp.zeros((), bool)))
+    final = stats_distortion(xsq_total, st.D, st.cnt, n)
+    return st, hist, mhist, t, final
+
+
+_run_donate = jax.jit(_run_impl, static_argnums=(4,), donate_argnums=(1,))
+_run_plain = jax.jit(_run_impl, static_argnums=(4,))
+
+
+def run(X: jax.Array, state: BKMState, source: CandidateSource,
+        key: jax.Array, cfg: EngineConfig
+        ) -> Tuple[BKMState, jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Device-resident multi-epoch run (state buffers donated on accelerators).
+
+    Returns (state, hist (iters,) f32 per-epoch distortion (NaN past the
+    early stop), mhist (iters,) int32 per-epoch accepted moves, epochs ()
+    int32 actually executed, final () f32 distortion).  The whole loop —
+    including the ``min_move_frac`` early stop and the per-epoch distortion
+    — runs inside one trace: callers pay one host sync per run, not one per
+    epoch.
+    """
+    f = _run_plain if jax.default_backend() == "cpu" else _run_donate
+    return f(X, state, source, key, cfg)
+
+
+# ---------------------------------------------------------------------------
+# sharded epoch body (wrapped in shard_map by core.distributed)
+# ---------------------------------------------------------------------------
+
+def sharded_epoch_body(X, source: CandidateSource, assign, D, cnt, key, *,
+                       cfg: EngineConfig, data_axes: Tuple[str, ...]):
+    """One epoch inside shard_map: X/G/assign row-sharded, (D, cnt) replicated.
+
+    Returns (assign, D, cnt, moves).  Shares ``_move_step`` with the
+    single-device ``epoch`` — the per-shard visit order and the collective
+    hooks are the only topology-specific pieces.
+
+    All shards use ONE shared permutation of their local row indices per
+    epoch.  Shards hold disjoint rows, so distinct per-shard orders buy no
+    extra randomness — and a shard-index-dependent order is deliberately
+    avoided: a per-device value whose only consumer is a collective-bearing
+    loop body is unreliably partitioned by some backends (XLA:CPU with
+    forced host devices silently collapses it to partition 0's buffer),
+    which would make the visit order backend-dependent.
+    """
+    comm = _Comm(data_axes)
+    n_loc = X.shape[0]
+    bs = min(cfg.batch_size, n_loc)
+    nb = max(n_loc // bs, 1)
+    # candidate lookup table: global assignment, stale within the epoch
+    lookup = _all_gather(assign, comm)
+    order = jax.random.permutation(key, n_loc).astype(jnp.int32)
+
+    def body(i, carry):
+        assign_l, D, cnt, moves = carry
+        idx = jax.lax.dynamic_slice(order, (i * bs,), (bs,))
+        return _move_step(X, assign_l, D, cnt, moves, idx, lookup, source,
+                          cfg, comm)
+
+    assign, D, cnt, moves = jax.lax.fori_loop(
+        0, nb, body, (assign, D, cnt, jnp.zeros((), jnp.int32)))
+    return assign, D, cnt, _psum(moves, comm)

@@ -22,7 +22,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import bkm
+from repro.core import engine
 from repro.core.two_means import two_means_tree
 from repro.kernels import ops as kops
 
@@ -213,13 +213,15 @@ def build_knn_graph(X: jax.Array, kappa: int, *, xi: int = 64, tau: int = 8,
         k1, k2 = jax.random.split(kt)
         assign = two_means_tree(Xp, k0, k1)
         if guided and t > 0:
-            # one graph-guided BKM pass: the intertwined evolving step.
-            # neighbours are real ids (< n), which are also valid padded rows.
-            state = bkm.init_state(Xp, assign, k0)
-            ids_pad = jnp.maximum(graph.ids[:n], 0)  # -1 -> 0 (harmless cand)
-            cand_fn = bkm.graph_candidates(ids_pad[real_id])
-            state = bkm.bkm_epoch(Xp, state, cand_fn,
-                                  min(bkm_batch, n_pad), k2)
+            # one graph-guided engine pass: the intertwined evolving step.
+            # neighbours are real ids (< n), which are also valid padded
+            # rows.  The graph is an ARRAY argument of the engine epoch, so
+            # the tau rounds (and repeated build calls) share one jit trace.
+            state = engine.init_state(Xp, assign, k0)
+            source = engine.graph_source(graph.ids[:n][real_id])
+            state = engine.epoch(Xp, state, source, k2,
+                                 engine.EngineConfig(
+                                     batch_size=min(bkm_batch, n_pad)))
             assign = state.assign
         table, _overflow = members_table(assign, k0, cap)
         graph = refine_graph(Xp, table, real_id, graph, kappa,

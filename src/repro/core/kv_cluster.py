@@ -20,6 +20,7 @@ from typing import NamedTuple, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import engine
 from repro.core.knn_graph import members_table
 from repro.core.two_means import two_means_tree
 
@@ -48,10 +49,17 @@ def _select_clusters(qs: jax.Array, clusters: KVClusters, top_c: int):
 
 
 def build_kv_clusters(keys: jax.Array, kc: int, key: jax.Array,
-                      cap_factor: int = 2) -> KVClusters:
+                      cap_factor: int = 2, refine_epochs: int = 0,
+                      refine_mode: str = "bkm") -> KVClusters:
     """Cluster cached keys per (batch, kv-head).
 
     keys: (B, S, Hkv, hd).  kc must be a power of two dividing S.
+
+    refine_epochs > 0 polishes the equal-size 2M-tree partition with
+    dense-candidate engine epochs (vmapped over the B*Hkv cache slices) —
+    lower distortion per cluster at the cost of unequal sizes, so pick a
+    ``cap_factor`` with headroom (clusters drifting past ``cap`` lose their
+    overflow members from the attended candidate set).
     """
     B, S, H, hd = keys.shape
     cap = cap_factor * (S // kc)
@@ -60,6 +68,19 @@ def build_kv_clusters(keys: jax.Array, kc: int, key: jax.Array,
 
     assign = jax.vmap(lambda x, k: two_means_tree(x, kc, k, refine_iters=2)
                       )(flat.astype(jnp.float32), keys_r)        # (BH, S)
+
+    if refine_epochs:
+        cfg = engine.EngineConfig(batch_size=min(1024, S), mode=refine_mode)
+        source = engine.dense_source()
+
+        def refine(x, a, kk):
+            st = engine.init_state(x, a, kc)
+            for t in range(refine_epochs):
+                st = engine.epoch(x, st, source, jax.random.fold_in(kk, t),
+                                  cfg)
+            return st.assign
+
+        assign = jax.vmap(refine)(flat.astype(jnp.float32), assign, keys_r)
 
     def stats(x, a):
         D = jax.ops.segment_sum(x.astype(jnp.float32), a, num_segments=kc)

@@ -9,6 +9,7 @@ from __future__ import annotations
 import jax
 
 from repro.kernels import centroid_assign as _ca
+from repro.kernels import gather_score as _gs
 from repro.kernels import ivf_scan as _ivf
 from repro.kernels import pairwise_topk as _pt
 from repro.kernels import ref as _ref
@@ -43,6 +44,16 @@ def probe_centroids(X: jax.Array, C: jax.Array, p: int, *,
         return _ref.probe_centroids(X, C, p)
     return _ca.probe_centroids_padded(X, C, p, bn=bn, bk=bk,
                                       interpret=(force == "interpret"))
+
+
+def gather_score(x: jax.Array, u: jax.Array, cand: jax.Array, D: jax.Array,
+                 cnt: jax.Array, *, mode: str = "bkm",
+                 force: str | None = None) -> jax.Array:
+    """(B, d) x (B, C) candidate ids -> (B, C) move scores, gather fused."""
+    if force == "ref" or (force is None and not _on_tpu()):
+        return _ref.gather_score(x, u, cand, D, cnt, mode=mode)
+    return _gs.gather_score(x, u, cand, D, cnt, mode=mode,
+                            interpret=(force == "interpret"))
 
 
 def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,

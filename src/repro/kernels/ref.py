@@ -75,6 +75,47 @@ def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
     return ids, jnp.where(ids < 0, jnp.inf, d2)
 
 
+def gather_score(x: jax.Array, u: jax.Array, cand: jax.Array, D: jax.Array,
+                 cnt: jax.Array, *, mode: str = "bkm") -> jax.Array:
+    """Candidate-move scoring oracle (the engine's hot loop).
+
+    x: (B, d), u: (B,) int32 source clusters, cand: (B, C) int32 candidate
+    clusters, D: (k, d) composite vectors, cnt: (k,) counts.
+
+    mode='bkm': ΔI of moving x from u to each candidate (paper Eqn. 3;
+    self-moves not masked).  mode='lloyd': squared distance to each candidate
+    centroid minus ||x||^2, +inf for empty candidates.  The feature dim is
+    zero-padded to full 128-wide TPU lanes first so every reduction runs over
+    the same shape as in the Pallas kernel (bitwise-matching scores).
+    """
+    d_pad = (-x.shape[1]) % 128
+    if d_pad:
+        x = jnp.pad(x, ((0, 0), (0, d_pad)))
+        D = jnp.pad(D, ((0, 0), (0, d_pad)))
+    xf = x.astype(jnp.float32)
+    Dv = D.astype(jnp.float32)[cand]                    # (B, C, d)
+    nv = cnt[cand].astype(jnp.float32)                  # (B, C)
+    if mode == "lloyd":
+        inv = 1.0 / jnp.maximum(nv, 1.0)
+        cc = Dv * inv[..., None]
+        d2 = (jnp.sum(cc * cc, axis=-1)
+              - 2.0 * jnp.sum(xf[:, None, :] * cc, axis=-1))
+        return jnp.where(nv > 0, d2, jnp.inf)
+    Du = D.astype(jnp.float32)[u]                       # (B, d)
+    nu = cnt[u].astype(jnp.float32)                     # (B,)
+    xsq = jnp.sum(xf * xf, axis=-1)                     # (B,)
+    du_sq = jnp.sum(Du * Du, axis=-1)
+    x_du = jnp.sum(xf * Du, axis=-1)
+    dv_sq = jnp.sum(Dv * Dv, axis=-1)                   # (B, C)
+    x_dv = jnp.sum(xf[:, None, :] * Dv, axis=-1)
+    gain = (dv_sq + 2.0 * x_dv + xsq[:, None]) / (nv + 1.0)
+    gain = gain - jnp.where(nv > 0, dv_sq / jnp.maximum(nv, 1.0), 0.0)
+    num_u = du_sq - 2.0 * x_du + xsq
+    resid = jnp.where(nu > 1, num_u / jnp.maximum(nu - 1.0, 1.0), 0.0)
+    loss_u = resid - du_sq / jnp.maximum(nu, 1.0)
+    return gain + loss_u[:, None]
+
+
 def assign_centroids(X: jax.Array, C: jax.Array):
     """Nearest-centroid assignment.
 

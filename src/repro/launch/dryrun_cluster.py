@@ -2,12 +2,14 @@ import os
 os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
                            + " --xla_force_host_platform_device_count=512")
 
-"""Dry-run for the PAPER'S OWN workload: one distributed GK-means epoch at
+"""Dry-run for the PAPER'S OWN workload: one distributed engine epoch at
 VLAD10M scale (10M x 512-d -> 1M clusters) on the production meshes, in both
-statistic-update modes (dense psum vs sparse all-gather — §Perf).
+statistic-update modes (dense psum vs sparse all-gather — §Perf) and both
+move rules (bkm ΔI / lloyd nearest-candidate — the engine's mode matrix).
 
   PYTHONPATH=src python -m repro.launch.dryrun_cluster \
-      [--workload vlad10m|sift1m] [--mode dense|sparse|both] [--mesh both]
+      [--workload vlad10m|sift1m] [--mode dense|sparse|both] [--mesh both] \
+      [--cluster-mode bkm|lloyd|both]
 """
 import argparse  # noqa: E402
 import json  # noqa: E402
@@ -29,7 +31,8 @@ WORKLOADS = {
 }
 
 
-def run_cell(workload: str, mode: str, multi_pod: bool) -> dict:
+def run_cell(workload: str, mode: str, multi_pod: bool,
+             cluster_mode: str = "bkm") -> dict:
     w = WORKLOADS[workload]
     mesh = make_production_mesh(multi_pod=multi_pod)
     # the clustering workload keeps (D, cnt) replicated, so there is no
@@ -37,12 +40,11 @@ def run_cell(workload: str, mode: str, multi_pod: bool) -> dict:
     # sharding rows over data only left 16x redundant compute per replica)
     data_axes = (tuple(mesh.axis_names) if mode in ("sparse", "sparse_bf16")
                  else data_axes_of(mesh))
-    chips = 512 if multi_pod else 256
-    rec = {"workload": workload, "mode": mode,
+    rec = {"workload": workload, "mode": mode, "cluster_mode": cluster_mode,
            "mesh": "2x16x16" if multi_pod else "16x16"}
     try:
         epoch = make_sharded_epoch(mesh, data_axes=data_axes,
-                                   batch_size=w["batch"],
+                                   batch_size=w["batch"], mode=cluster_mode,
                                    sparse_updates=mode.startswith("sparse"),
                                    payload_bf16=(mode == "sparse_bf16"))
         row = NamedSharding(mesh, P(data_axes))
@@ -100,29 +102,36 @@ def main():
     ap.add_argument("--workload", default="both")
     ap.add_argument("--mode", default="both")
     ap.add_argument("--mesh", default="both")
+    ap.add_argument("--cluster-mode", default="bkm",
+                    choices=["bkm", "lloyd", "both"])
     ap.add_argument("--out", default="results/dryrun_cluster.json")
     args = ap.parse_args()
     wl = list(WORKLOADS) if args.workload == "both" else [args.workload]
     modes = (["dense", "sparse", "sparse_bf16"] if args.mode == "both"
              else [args.mode])
+    cmodes = (["bkm", "lloyd"] if args.cluster_mode == "both"
+              else [args.cluster_mode])
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
     results = []
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
     for w in wl:
         for m in modes:
-            for mp in meshes:
-                print(f"[cluster-dryrun] {w}/{m}/"
-                      f"{'2x16x16' if mp else '16x16'} ...", flush=True)
-                rec = run_cell(w, m, mp)
-                wire = rec.get("collectives", {}).get("total_wire_bytes", 0)
-                print(f"  -> {rec['status']} compile={rec.get('compile_s')}s "
-                      f"wire={wire/1e9:.2f}GB "
-                      f"dom={rec.get('roofline', {}).get('bottleneck')}",
-                      flush=True)
-                results.append(rec)
-                with open(args.out, "w") as f:
-                    json.dump(results, f, indent=1)
+            for cm in cmodes:
+                for mp in meshes:
+                    print(f"[cluster-dryrun] {w}/{m}/{cm}/"
+                          f"{'2x16x16' if mp else '16x16'} ...", flush=True)
+                    rec = run_cell(w, m, mp, cm)
+                    wire = rec.get("collectives", {}).get(
+                        "total_wire_bytes", 0)
+                    print(f"  -> {rec['status']} "
+                          f"compile={rec.get('compile_s')}s "
+                          f"wire={wire/1e9:.2f}GB "
+                          f"dom={rec.get('roofline', {}).get('bottleneck')}",
+                          flush=True)
+                    results.append(rec)
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1)
     bad = sum(r["status"] != "ok" for r in results)
     return 1 if bad else 0
 

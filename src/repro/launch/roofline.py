@@ -19,6 +19,49 @@ PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
 HBM_BW = 819e9           # bytes/s per chip
 ICI_BW = 50e9            # bytes/s per link
 
+# ---------------------------------------------------------------------------
+# Pallas kernel inventory — analytic per-call FLOP / HBM-byte models for the
+# custom kernels (src/repro/kernels/).  `flops`/`hbm_bytes` take the call
+# shape and return per-call totals; benchmarks divide by measured time for
+# roofline fractions.
+# ---------------------------------------------------------------------------
+
+KERNEL_INVENTORY = {
+    "pairwise_sq": dict(
+        desc="batched (B, m, m) within-cluster distance matrices (Alg. 3 "
+             "refinement hot-spot), one MXU matmul per cluster tile",
+        flops=lambda B, m, d: 2.0 * B * m * m * d,
+        hbm_bytes=lambda B, m, d: 4.0 * (B * m * d + B * m * m),
+    ),
+    "assign_centroids": dict(
+        desc="flash-argmin nearest-centroid assignment: centroid tiles "
+             "stream through VMEM, O(n*d + k*d + n) HBM traffic",
+        flops=lambda n, k, d: 2.0 * n * k * d,
+        hbm_bytes=lambda n, k, d: 4.0 * (n * d + k * d + 2 * n),
+    ),
+    "probe_centroids": dict(
+        desc="top-p generalisation of the flash-argmin (IVF coarse probe / "
+             "engine probe candidates)",
+        flops=lambda n, k, d, p: 2.0 * n * k * d,
+        hbm_bytes=lambda n, k, d, p: 4.0 * (n * d + k * d + 2 * n * p),
+    ),
+    "ivf_scan": dict(
+        desc="scalar-prefetch inverted-list tile streaming with running "
+             "top-k; HBM traffic is only the probed fraction",
+        flops=lambda q, rows, d, topk: 2.0 * q * rows * d,
+        hbm_bytes=lambda q, rows, d, topk: 4.0 * (q * d + q * rows * d
+                                                  + 2 * q * topk),
+    ),
+    "gather_score": dict(
+        desc="fused candidate-row gather + ΔI/distance scoring in VMEM "
+             "(engine move step); the (B, C, d) gathered tensor never "
+             "reaches HBM",
+        flops=lambda B, C, d: 6.0 * B * (C + 1) * d,
+        hbm_bytes=lambda B, C, d: 4.0 * (B * d + B * (C + 1) * (d + 1)
+                                         + B * C),
+    ),
+}
+
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
     "s16": 2, "u16": 2, "f16": 2, "bf16": 2,

@@ -1,4 +1,5 @@
-"""Distributed GK-means (shard_map) on 8 CPU devices — subprocess tests."""
+"""Distributed engine epochs (shard_map) on virtual CPU devices — subprocess
+tests (the parent process must keep seeing the real 1-device platform)."""
 import os
 import subprocess
 import sys
@@ -6,6 +7,14 @@ import sys
 import pytest
 
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(code: str, devices: int = 8, timeout: int = 900):
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}")
+    return subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=timeout)
+
 
 CODE = r"""
 import jax, jax.numpy as jnp, numpy as np
@@ -46,18 +55,15 @@ print("DIST_OK", d_first, d_last)
 
 @pytest.mark.slow
 def test_sharded_epoch_8dev():
-    env = dict(os.environ, PYTHONPATH=SRC,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
-                       text=True, env=env, timeout=900)
+    r = _run(CODE)
     assert "DIST_OK" in r.stdout, r.stderr[-3000:]
 
 
 CODE_QUALITY = r"""
 import jax, jax.numpy as jnp
 from repro.data import gmm_blobs
-from repro.core import (build_knn_graph, two_means_tree, init_state, bkm,
-                        graph_candidates, distortion)
+from repro.core import (build_knn_graph, two_means_tree, init_state, engine,
+                        distortion)
 from repro.core.distributed import make_sharded_epoch
 
 key = jax.random.PRNGKey(0)
@@ -69,9 +75,10 @@ a0 = two_means_tree(X, k, key)
 
 # single-device reference (same effective batch = 128*8)
 st = init_state(X, a0, k)
+cfg = engine.EngineConfig(batch_size=1024)
 for t in range(6):
-    st = bkm.bkm_epoch(X, st, graph_candidates(G), 1024,
-                       jax.random.fold_in(key, t))
+    st = engine.epoch(X, st, engine.graph_source(G), jax.random.fold_in(key, t),
+                      cfg)
 ref = float(distortion(X, st.assign, k))
 
 mesh = jax.make_mesh((8,), ("data",))
@@ -88,8 +95,96 @@ print("QUALITY_OK", dist, ref)
 
 @pytest.mark.slow
 def test_sharded_quality_matches_single_device():
-    env = dict(os.environ, PYTHONPATH=SRC,
-               XLA_FLAGS="--xla_force_host_platform_device_count=8")
-    r = subprocess.run([sys.executable, "-c", CODE_QUALITY],
-                       capture_output=True, text=True, env=env, timeout=900)
+    r = _run(CODE_QUALITY)
     assert "QUALITY_OK" in r.stdout, r.stderr[-3000:]
+
+
+# ---------------------------------------------------------------------------
+# topology parity: the sharded engine epoch must equal the single-device
+# engine epoch run with the same R-way visit order (`cfg.shards=R`) — for
+# BOTH statistic-update paths and BOTH move rules.
+# ---------------------------------------------------------------------------
+
+CODE_PARITY = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.data import gmm_blobs
+from repro.core import build_knn_graph, two_means_tree, init_state, engine
+from repro.core.distributed import make_sharded_epoch
+
+key = jax.random.PRNGKey(0)
+n, d, k, R = 2048, 16, 32, 4
+assert len(jax.devices()) == R
+X = gmm_blobs(key, n, d, 32)
+g = build_knn_graph(X, 8, xi=32, tau=2, key=key)
+G = jnp.maximum(g.ids, 0)
+a0 = two_means_tree(X, k, key)
+mesh = jax.make_mesh((R,), ("data",))
+source = engine.graph_source(G)
+
+for mode in ("bkm", "lloyd"):
+    for sparse in (False, True):
+        epoch = make_sharded_epoch(mesh, batch_size=128, mode=mode,
+                                   sparse_updates=sparse)
+        st0 = init_state(X, a0, k)
+        assign, D, cnt = st0.assign, st0.D, st0.cnt
+        st = init_state(X, a0, k)
+        cfg = engine.EngineConfig(batch_size=128, mode=mode,
+                                  sparse_updates=sparse, shards=R)
+        for t in range(3):
+            kt = jax.random.fold_in(key, t)
+            assign, D, cnt, moves = epoch(X, G, assign, D, cnt, kt)
+            st = engine.epoch(X, st, source, kt, cfg)
+            np.testing.assert_array_equal(np.asarray(assign),
+                                          np.asarray(st.assign),
+                                          err_msg=f"{mode}/{sparse}/ep{t}")
+            np.testing.assert_array_equal(np.asarray(cnt), np.asarray(st.cnt),
+                                          err_msg=f"{mode}/{sparse}/ep{t}")
+            assert int(moves) == int(st.moves), (mode, sparse, t)
+            if sparse:
+                # identical scatter over the identical gathered row order
+                np.testing.assert_array_equal(np.asarray(D), np.asarray(st.D))
+            else:
+                np.testing.assert_allclose(np.asarray(D), np.asarray(st.D),
+                                           rtol=2e-6, atol=1e-4)
+print("PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_single_device_parity_4dev():
+    """Acceptance: identical assignments across topologies, every mode."""
+    r = _run(CODE_PARITY, devices=4)
+    assert "PARITY_OK" in r.stdout, r.stderr[-3000:]
+
+
+CODE_DENSE_PROBE = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.data import gmm_blobs
+from repro.core import two_means_tree, init_state, distortion
+from repro.core.distributed import make_sharded_epoch
+
+key = jax.random.PRNGKey(0)
+n, d, k = 2048, 16, 32
+X = gmm_blobs(key, n, d, 32)
+a0 = two_means_tree(X, k, key)
+mesh = jax.make_mesh((4,), ("data",))
+Gdummy = jnp.zeros((n, 1), jnp.int32)
+d0 = float(distortion(X, a0, k))
+for kind in ("dense", "probe"):
+    st = init_state(X, a0, k)
+    epoch = make_sharded_epoch(mesh, batch_size=128, kind=kind, probe_p=8)
+    assign, D, cnt = st.assign, st.D, st.cnt
+    for t in range(3):
+        assign, D, cnt, _ = epoch(X, Gdummy, assign, D, cnt,
+                                  jax.random.fold_in(key, t))
+    d1 = float(distortion(X, assign, k))
+    assert d1 < d0, (kind, d0, d1)
+print("KINDS_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_dense_and_probe_sources_4dev():
+    """The CandidateSource matrix is available in the sharded topology too."""
+    r = _run(CODE_DENSE_PROBE, devices=4)
+    assert "KINDS_OK" in r.stdout, r.stderr[-3000:]

@@ -1,0 +1,123 @@
+"""The unified clustering engine: sources, modes, device-resident run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cluster_stats, distortion, engine, two_means_tree
+from repro.data import gmm_blobs
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    n, d, k = 2048, 16, 32
+    X = gmm_blobs(key, n, d, 32)
+    a0 = two_means_tree(X, k, key)
+    G = jax.random.randint(key, (n, 8), 0, n)
+    return X, a0, G, k, key
+
+
+def _epochs(X, a0, k, source, key, cfg, iters=5):
+    st = engine.init_state(X, a0, k)
+    for t in range(iters):
+        st = engine.epoch(X, st, source, jax.random.fold_in(key, t), cfg)
+    return st
+
+
+@pytest.mark.parametrize("mode", ["bkm", "lloyd"])
+def test_dense_source_improves(setup, mode):
+    X, a0, _, k, key = setup
+    cfg = engine.EngineConfig(batch_size=256, mode=mode)
+    st = _epochs(X, a0, k, engine.dense_source(), key, cfg)
+    assert float(distortion(X, st.assign, k)) < float(distortion(X, a0, k))
+
+
+def test_probe_source_matches_dense_quality(setup):
+    """Top-p probed candidates (p=8 of k=32) reach dense-candidate quality."""
+    X, a0, _, k, key = setup
+    cfg = engine.EngineConfig(batch_size=256)
+    st_p = _epochs(X, a0, k, engine.probe_source(8), key, cfg)
+    st_d = _epochs(X, a0, k, engine.dense_source(), key, cfg)
+    d_p = float(distortion(X, st_p.assign, k))
+    d_d = float(distortion(X, st_d.assign, k))
+    assert d_p <= d_d * 1.05
+
+
+def test_graph_source_stats_consistent(setup):
+    X, a0, G, k, key = setup
+    cfg = engine.EngineConfig(batch_size=256)
+    st = _epochs(X, a0, k, engine.graph_source(G), key, cfg)
+    s = cluster_stats(X, st.assign, k)
+    np.testing.assert_allclose(np.asarray(st.cnt), np.asarray(s.cnt))
+    np.testing.assert_allclose(np.asarray(st.D), np.asarray(s.D),
+                               rtol=1e-4, atol=1e-2)
+    assert float(st.cnt.min()) >= 1.0
+
+
+def test_no_retrace_on_new_graph(setup):
+    """Satellite: the graph is an ARRAY argument — a fresh graph of the same
+    shape must reuse the jit trace (the old cand_fn-as-static-argnum API
+    retraced per closure)."""
+    X, a0, G, k, key = setup
+    cfg = engine.EngineConfig(batch_size=256)
+    st = engine.init_state(X, a0, k)
+    engine.epoch(X, st, engine.graph_source(G), key, cfg)
+    before = engine.epoch._cache_size()
+    for fold in (11, 22, 33):
+        G2 = jax.random.randint(jax.random.fold_in(key, fold), G.shape, 0,
+                                X.shape[0])
+        engine.epoch(X, st, engine.graph_source(G2), key, cfg)
+    assert engine.epoch._cache_size() == before
+
+
+def test_run_equals_epoch_loop(setup):
+    """The device-resident run is bit-identical to a host loop of epochs."""
+    X, a0, G, k, key = setup
+    source = engine.graph_source(G)
+    cfg = engine.EngineConfig(batch_size=256, iters=5, min_move_frac=-1.0)
+    st_run, hist, mhist, epochs, final = engine.run(
+        X, engine.init_state(X, a0, k), source, key, cfg)
+    st_loop = _epochs(X, a0, k, source, key,
+                      engine.EngineConfig(batch_size=256), iters=5)
+    np.testing.assert_array_equal(np.asarray(st_run.assign),
+                                  np.asarray(st_loop.assign))
+    assert int(epochs) == 5
+    assert int(mhist[-1]) == int(st_loop.moves)
+    # the O(k*d) running-stats distortion matches the O(n*d) recompute
+    np.testing.assert_allclose(float(final),
+                               float(distortion(X, st_loop.assign, k)),
+                               rtol=1e-4)
+    assert np.all(np.isfinite(np.asarray(hist)))
+
+
+def test_run_early_stop_inside_trace(setup):
+    X, a0, G, k, key = setup
+    cfg = engine.EngineConfig(batch_size=256, iters=8, min_move_frac=1.0)
+    _, hist, _, epochs, _ = engine.run(X, engine.init_state(X, a0, k),
+                                       engine.graph_source(G), key, cfg)
+    assert int(epochs) == 1          # every epoch moves <= n -> stop at once
+    assert np.isnan(np.asarray(hist)[1:]).all()
+
+
+def test_payload_bf16_rounds_stats(setup):
+    """payload_bf16 is an engine option in every topology: the single-device
+    sparse path rounds move payloads through bf16 (emulating the sharded
+    wire format) and still converges."""
+    X, a0, G, k, key = setup
+    cfg = engine.EngineConfig(batch_size=256, sparse_updates=True,
+                              payload_bf16=True)
+    st = _epochs(X, a0, k, engine.graph_source(G), key, cfg)
+    assert float(distortion(X, st.assign, k)) < float(distortion(X, a0, k))
+    # counts stay exact integers even though payloads were rounded
+    s = cluster_stats(X, st.assign, k)
+    np.testing.assert_allclose(np.asarray(st.cnt), np.asarray(s.cnt))
+
+
+def test_candidate_source_pytree_roundtrip():
+    src = engine.graph_source(jnp.zeros((4, 2), jnp.int32))
+    leaves, treedef = jax.tree_util.tree_flatten(src)
+    src2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert src2.kind == "graph" and src2.G.shape == (4, 2)
+    d = engine.dense_source()
+    assert jax.tree_util.tree_leaves(d) == []

@@ -2,12 +2,11 @@
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import (bkm, distortion, gk_means, lloyd, run_bkm,
-                        two_means_tree, graph_candidates, init_state)
+from repro.core import (distortion, engine, gk_means, lloyd, run_bkm,
+                        two_means_tree, init_state)
 from repro.data import gmm_blobs
 
 
@@ -47,18 +46,45 @@ def test_bkm_core_beats_lloyd_core(blobs):
     assert g.distortion <= l.distortion * 1.02
 
 
+def test_run_path_single_host_sync(blobs, monkeypatch):
+    """Acceptance: a full gk_means run performs <= 1 host sync in the epoch
+    loop.  jax.device_get and jax.block_until_ready are the only sync points
+    the run path may use; count them around a run with a prebuilt graph."""
+    g = gk_means(blobs, 64, kappa=16, xi=32, tau=4, iters=2,
+                 key=jax.random.PRNGKey(8)).graph
+    syncs = {"n": 0}
+    real_get, real_block = jax.device_get, jax.block_until_ready
+
+    def counting_get(x):
+        syncs["n"] += 1
+        return real_get(x)
+
+    def counting_block(x):
+        syncs["n"] += 1
+        return real_block(x)
+
+    monkeypatch.setattr(jax, "device_get", counting_get)
+    monkeypatch.setattr(jax, "block_until_ready", counting_block)
+    res = gk_means(blobs, 64, kappa=16, iters=10, graph=g,
+                   key=jax.random.PRNGKey(9))
+    assert syncs["n"] <= 1, f"run path made {syncs['n']} host syncs"
+    assert res.history[-1] <= res.history[0]
+
+
 def test_serial_equivalence_small(key):
-    """batch_size=1 == the paper's serial stochastic semantics; batched moves
-    converge to comparable distortion (DESIGN.md §2 deviation bound)."""
+    """batch_size=1 applies the paper's one-sample-at-a-time update rule
+    (candidate lookup stays epoch-start, as in every engine topology);
+    batched moves converge to comparable distortion (DESIGN.md §2)."""
     X = gmm_blobs(key, 512, 8, 16)
     a0 = two_means_tree(X, 16, key)
     G = jax.random.randint(key, (512, 8), 0, 512)
-    cand = graph_candidates(G)
+    source = engine.graph_source(G)
     outs = {}
     for bs in (1, 128):
         st = init_state(X, a0, 16)
+        cfg = engine.EngineConfig(batch_size=bs)
         for t in range(6):
-            st = bkm.bkm_epoch(X, st, cand, bs, jax.random.fold_in(key, t))
+            st = engine.epoch(X, st, source, jax.random.fold_in(key, t), cfg)
         outs[bs] = float(distortion(X, st.assign, 16))
     assert outs[128] <= outs[1] * 1.10  # within 10% of serial reference
 
@@ -71,16 +97,17 @@ def test_cost_independent_of_k(blobs):
     X = blobs
     n = X.shape[0]
     G = jax.random.randint(jax.random.PRNGKey(0), (n, 16), 0, n)
-    cand = graph_candidates(G)
+    source = engine.graph_source(G)
+    cfg = engine.EngineConfig(batch_size=512)
     times = {}
     for k in (32, 256):
         a0 = two_means_tree(X, k, jax.random.PRNGKey(1))
         st = init_state(X, a0, k)
-        bkm.bkm_epoch(X, st, cand, 512, jax.random.PRNGKey(2))  # compile+run
+        engine.epoch(X, st, source, jax.random.PRNGKey(2), cfg)  # compile
         t0 = time.perf_counter()
         for t in range(3):
-            st = bkm.bkm_epoch(X, st, cand, 512, jax.random.fold_in(
-                jax.random.PRNGKey(3), t))
+            st = engine.epoch(X, st, source, jax.random.fold_in(
+                jax.random.PRNGKey(3), t), cfg)
         jax.block_until_ready(st.assign)
         times[k] = time.perf_counter() - t0
     assert times[256] < 3.0 * times[32]  # sub-linear in k (paper: constant)
@@ -91,9 +118,10 @@ def test_moves_guard_never_empties_cluster(key):
     a0 = two_means_tree(X, 8, key)
     G = jax.random.randint(key, (256, 8), 0, 256)
     st = init_state(X, a0, 8)
+    cfg = engine.EngineConfig(batch_size=64)
     for t in range(8):
-        st = bkm.bkm_epoch(X, st, graph_candidates(G), 64,
-                           jax.random.fold_in(key, t))
+        st = engine.epoch(X, st, engine.graph_source(G),
+                          jax.random.fold_in(key, t), cfg)
     assert float(st.cnt.min()) >= 1.0
     # stats consistent with assignment
     from repro.core import cluster_stats

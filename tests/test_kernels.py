@@ -65,3 +65,56 @@ def test_ops_dispatch_cpu_uses_ref():
     X = gmm_blobs(jax.random.PRNGKey(5), 8 * 16, 8, 2).reshape(8, 16, 8)
     np.testing.assert_allclose(np.asarray(ops.pairwise_sq(X)),
                                np.asarray(ref.pairwise_sq(X)), rtol=1e-5)
+
+
+def _gather_score_case(B, d, k, C, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (B, d)) * 2
+    u = jax.random.randint(jax.random.fold_in(key, 1), (B,), 0, k)
+    cand = jax.random.randint(jax.random.fold_in(key, 2), (B, C), 0, k)
+    D = jax.random.normal(jax.random.fold_in(key, 3), (k, d)) * 5
+    cnt = jax.random.randint(jax.random.fold_in(key, 4), (k,), 0,
+                             6).astype(jnp.float32)
+    return x, u, cand, D, cnt
+
+
+@pytest.mark.parametrize("B,d,k,C", [(13, 24, 40, 7), (16, 128, 32, 16),
+                                     (8, 100, 16, 1), (32, 16, 64, 5)])
+@pytest.mark.parametrize("mode", ["bkm", "lloyd"])
+def test_gather_score_interpret_exact(B, d, k, C, mode):
+    """Acceptance: the fused gather+score kernel matches ref.py EXACTLY
+    (bitwise) in interpret mode — both sides reduce over the same
+    lane-padded shapes."""
+    from repro.kernels import gather_score as gs
+    x, u, cand, D, cnt = _gather_score_case(B, d, k, C, B * d + C)
+    want = ref.gather_score(x, u, cand, D, cnt, mode=mode)
+    got = gs.gather_score(x, u, cand, D, cnt, mode=mode, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_score_matches_delta_I():
+    """ref.gather_score IS Eqn. 3 (validated against core.objective)."""
+    from repro.core.objective import delta_I
+    x, u, cand, D, cnt = _gather_score_case(32, 24, 16, 6, 5)
+    cnt = jnp.maximum(cnt, 1.0)
+    a = ref.gather_score(x, u, cand, D, cnt, mode="bkm")
+    b = delta_I(x, D[u], cnt[u], D[cand], cnt[cand])
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-4)
+
+
+def test_gather_score_lloyd_empty_candidates_inf():
+    x, u, cand, D, _ = _gather_score_case(8, 16, 12, 4, 9)
+    cnt = jnp.zeros((12,), jnp.float32)          # every cluster empty
+    out = ref.gather_score(x, u, cand, D, cnt, mode="lloyd")
+    assert bool(jnp.all(jnp.isinf(out)))
+    from repro.kernels import gather_score as gs
+    out_k = gs.gather_score(x, u, cand, D, cnt, mode="lloyd", interpret=True)
+    np.testing.assert_array_equal(np.asarray(out_k), np.asarray(out))
+
+
+def test_gather_score_dispatch_cpu_uses_ref():
+    x, u, cand, D, cnt = _gather_score_case(8, 16, 12, 4, 3)
+    np.testing.assert_array_equal(
+        np.asarray(ops.gather_score(x, u, cand, D, cnt)),
+        np.asarray(ref.gather_score(x, u, cand, D, cnt)))

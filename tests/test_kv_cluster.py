@@ -70,6 +70,39 @@ def test_clustered_attention_approximates_full(setup):
                                rtol=1e-2, atol=1e-2)
 
 
+def test_engine_refinement_improves_clusters(setup):
+    """build_kv_clusters(refine_epochs=...) polishes the 2M partition with
+    dense engine epochs; candidate recall must hold (cap_factor gives the
+    now-unequal clusters headroom)."""
+    q, k_cache, _, _ = setup
+    S = k_cache.shape[1]
+    refined = build_kv_clusters(k_cache, kc=32, key=jax.random.PRNGKey(5),
+                                cap_factor=8, refine_epochs=2)
+    rec = float(candidate_recall(q, k_cache, refined, jnp.asarray(S),
+                                 top_c=8))
+    assert rec > 0.9
+    # per-cluster distortion improves on the unrefined partition
+    base = build_kv_clusters(k_cache, kc=32, key=jax.random.PRNGKey(5),
+                             cap_factor=8)
+
+    def mean_dist(cl, keys):
+        B, Sn, H, hd = keys.shape
+        flat = keys.transpose(0, 2, 1, 3).reshape(B * H, Sn, hd)
+        cents = cl.centroids.reshape(B * H, 32, hd)
+        tot = 0.0
+        for i in range(B * H):
+            a = np.full((Sn,), -1, np.int64)
+            t = np.asarray(cl.table.reshape(B * H, 32, -1)[i])
+            for c in range(32):
+                for m in t[c][t[c] >= 0]:
+                    a[m] = c
+            diff = np.asarray(flat[i]) - np.asarray(cents[i])[a]
+            tot += float((diff * diff).sum())
+        return tot
+
+    assert mean_dist(refined, k_cache) <= mean_dist(base, k_cache) * 1.001
+
+
 def test_respects_length_mask(setup):
     q, k_cache, v_cache, clusters = setup
     short = clustered_decode_attention(q, k_cache, v_cache, clusters,

@@ -1,6 +1,5 @@
 """End-to-end behaviour tests for the paper's system (GK-means framework)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -41,8 +40,7 @@ def test_speedup_vs_full_bkm(blobs):
     At k=256 the candidate width is kappa+1=17 ≪ 256; verify quality holds
     and the graph-guided epoch is cheaper even at modest k."""
     import time
-    from repro.core import (bkm, two_means_tree, init_state,
-                            graph_candidates, build_knn_graph)
+    from repro.core import engine, two_means_tree, init_state, build_knn_graph
     X = blobs
     k = 256
     g = build_knn_graph(X, 16, xi=32, tau=4, key=jax.random.PRNGKey(4))
@@ -50,22 +48,24 @@ def test_speedup_vs_full_bkm(blobs):
 
     st_g = init_state(X, a0, k)
     st_f = init_state(X, a0, k)
-    cand = graph_candidates(jnp.maximum(g.ids, 0))
+    source = engine.graph_source(g.ids)
+    dense = engine.dense_source()
+    cfg = engine.EngineConfig(batch_size=512)
     # warm up compiles
-    bkm.bkm_epoch(X, st_g, cand, 512, jax.random.PRNGKey(0))
-    bkm.bkm_full_epoch(X, st_f, 512, jax.random.PRNGKey(0))
+    engine.epoch(X, st_g, source, jax.random.PRNGKey(0), cfg)
+    engine.epoch(X, st_f, dense, jax.random.PRNGKey(0), cfg)
 
     t0 = time.perf_counter()
     for t in range(3):
-        st_g = bkm.bkm_epoch(X, st_g, cand, 512, jax.random.fold_in(
-            jax.random.PRNGKey(6), t))
+        st_g = engine.epoch(X, st_g, source, jax.random.fold_in(
+            jax.random.PRNGKey(6), t), cfg)
     jax.block_until_ready(st_g.assign)
     t_graph = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     for t in range(3):
-        st_f = bkm.bkm_full_epoch(X, st_f, 512, jax.random.fold_in(
-            jax.random.PRNGKey(6), t))
+        st_f = engine.epoch(X, st_f, dense, jax.random.fold_in(
+            jax.random.PRNGKey(6), t), cfg)
     jax.block_until_ready(st_f.assign)
     t_full = time.perf_counter() - t0
 
@@ -80,3 +80,23 @@ def test_speedup_vs_full_bkm(blobs):
         pytest.skip("wall-clock speedup claim requires an accelerator; "
                     "quality half of the claim verified above")
     assert t_graph < t_full           # and cheaper even at modest k=256
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("script,args", [
+    ("examples/quickstart.py", ["--n", "2048", "--k", "32", "--d", "16"]),
+    ("examples/cluster_large.py",
+     ["--n", "4096", "--k", "256", "--d", "16", "--iters", "4"]),
+])
+def test_examples_converge(script, args):
+    """The examples are engine-API clients; smoke-run them small.  Each
+    asserts its own convergence (quickstart: history monotone; cluster_large:
+    final < first distortion)."""
+    import os
+    import subprocess
+    import sys
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ, PYTHONPATH=os.path.join(root, "src"))
+    r = subprocess.run([sys.executable, os.path.join(root, script)] + args,
+                       capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
