@@ -5,21 +5,36 @@ the O(n·d) distortion on the host after every epoch (one sync per epoch).
 ``engine.run`` keeps the whole loop device-resident — per-epoch distortion in
 O(k·d) from the running stats, early stop in-trace, ONE host sync per run.
 
-Emits a ``BENCH_engine.json`` with the measured numbers next to the CSV rows.
+Two modes:
+
+  single   the single-device ``engine.run`` vs a host-driven epoch loop
+           (emits ``BENCH_engine.json``);
+  sharded  the same comparison across a mesh: ``ShardedEngine.run`` vs a
+           host-driven loop of ``ShardedEngine.epoch`` + per-epoch
+           ``ShardedEngine.distortion`` syncs.  Runs in a child process with
+           ``--xla_force_host_platform_device_count`` so it works on a
+           single-CPU box (emits ``BENCH_sharded_run.json``).
+
+CLI (the CI smoke step): ``python benchmarks/engine_bench.py --quick``
+runs both modes and prints the CSV rows.
 """
 from __future__ import annotations
 
+import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 
-import jax
-
-from repro.core import build_knn_graph, distortion, engine, two_means_tree
-from repro.data import gmm_blobs
+SHARDED_DEVICES = 4
+SHARDED_JSON = "BENCH_sharded_run.json"
 
 
 def _host_driven(X, a0, k, source, key, iters, batch_size):
     """The pre-engine driver: epoch dispatch + host distortion sync/epoch."""
+    import jax
+    from repro.core import distortion, engine
     st = engine.init_state(X, a0, k)
     cfg = engine.EngineConfig(batch_size=batch_size)
     hist = []
@@ -30,6 +45,15 @@ def _host_driven(X, a0, k, source, key, iters, batch_size):
 
 
 def run(quick: bool = True):
+    """Both modes — the benchmarks.run harness entry point."""
+    return run_single(quick) + run_sharded(quick)
+
+
+def run_single(quick: bool = True):
+    import jax
+    from repro.core import build_knn_graph, engine, two_means_tree
+    from repro.data import gmm_blobs
+
     n, d, k, iters = (16384, 32, 256, 10) if quick else (262144, 64, 4096, 10)
     bs = 1024
     key = jax.random.PRNGKey(0)
@@ -75,3 +99,118 @@ def run(quick: bool = True):
          f"epochs_per_s={iters / t_run:.2f};syncs=1;"
          f"final={float(final):.4f};speedup={t_host / t_run:.2f}x"),
     ]
+
+
+def _sharded_child(quick: bool):
+    """Body of the sharded mode — must run under R forced host devices."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import build_knn_graph, engine, two_means_tree
+    from repro.core.distributed import ShardedEngine
+    from repro.data import gmm_blobs
+
+    n, d, k, iters = (8192, 32, 256, 8) if quick else (262144, 64, 4096, 10)
+    R = len(jax.devices())
+    bs = 256                    # per-shard; global batch = R * bs
+    key = jax.random.PRNGKey(0)
+    X = gmm_blobs(key, n, d, 256)
+    g = build_knn_graph(X, 16, xi=64, tau=3, key=key)
+    G = jnp.maximum(g.ids, 0)
+    a0 = two_means_tree(X, k, key)
+    st = engine.init_state(X, a0, k)
+
+    mesh = jax.make_mesh((R,), ("data",))
+    cfg = engine.EngineConfig(batch_size=bs, iters=iters, min_move_frac=-1.0)
+    eng = ShardedEngine(mesh, cfg)
+
+    # warm every compile path
+    jax.block_until_ready(eng.epoch(X, G, st.assign, st.D, st.cnt, key))
+    jax.block_until_ready(eng.distortion(X, st.assign, st.D, st.cnt))
+    jax.block_until_ready(eng.run(X, G, st.assign, st.D, st.cnt, key)[0])
+
+    t0 = time.perf_counter()
+    assign, D, cnt = st.assign, st.D, st.cnt
+    hist_host = []
+    for t in range(iters):
+        assign, D, cnt, moves = eng.epoch(X, G, assign, D, cnt,
+                                          jax.random.fold_in(key, t))
+        hist_host.append(float(eng.distortion(X, assign, D, cnt)))  # sync
+    t_host = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = eng.run(X, G, st.assign, st.D, st.cnt, key)
+    assign_r, D_r, cnt_r, hist, mhist, epochs, final = jax.device_get(out)
+    t_run = time.perf_counter() - t0                     # the ONE sync
+
+    rec = {
+        "n": n, "d": d, "k": k, "iters": iters, "devices": R,
+        "batch_size_per_shard": bs,
+        "host_driven_s": t_host, "sharded_run_s": t_run,
+        "epochs_per_sec_host": iters / t_host,
+        "epochs_per_sec_sharded_run": iters / t_run,
+        "speedup": t_host / t_run,
+        "host_syncs_host_driven": iters,
+        "host_syncs_sharded_run": 1,
+        "final_distortion_host": hist_host[-1],
+        "final_distortion_sharded_run": float(final),
+    }
+    with open(SHARDED_JSON, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
+    """Sharded mode via a child process with forced host devices (the parent
+    JAX runtime is already initialised with the real device count)."""
+    here = os.path.dirname(os.path.abspath(__file__))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    env["JAX_PLATFORMS"] = "cpu"   # forced host devices are a CPU feature
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, os.path.abspath(__file__), "--child",
+           "--quick" if quick else "--full"]
+    subprocess.run(cmd, check=True, env=env, timeout=3600)
+    with open(SHARDED_JSON) as f:
+        rec = json.load(f)
+    return [
+        ("engine/sharded_host_driven", rec["host_driven_s"] * 1e6,
+         f"epochs_per_s={rec['epochs_per_sec_host']:.2f};"
+         f"syncs={rec['host_syncs_host_driven']};"
+         f"devices={rec['devices']};"
+         f"final={rec['final_distortion_host']:.4f}"),
+        ("engine/sharded_device_resident_run", rec["sharded_run_s"] * 1e6,
+         f"epochs_per_s={rec['epochs_per_sec_sharded_run']:.2f};syncs=1;"
+         f"devices={rec['devices']};"
+         f"final={rec['final_distortion_sharded_run']:.4f};"
+         f"speedup={rec['speedup']:.2f}x"),
+    ]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--quick", dest="quick", action="store_true",
+                      default=True)
+    size.add_argument("--full", dest="quick", action="store_false")
+    ap.add_argument("--mode", default="both",
+                    choices=["single", "sharded", "both"])
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    quick = args.quick
+    if args.child:
+        _sharded_child(quick)
+        return
+    rows = []
+    if args.mode in ("single", "both"):
+        rows += run_single(quick)
+    if args.mode in ("sharded", "both"):
+        rows += run_sharded(quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,18 +4,23 @@ the regime where traditional k-means is hopeless and GK-means shines.
 
     PYTHONPATH=src python examples/cluster_large.py [--n 131072] [--k 8192]
 
-On one device the epochs run fully device-resident through ``engine.run``
-(one host sync for the whole loop); on a multi-device system the same engine
-step runs SPMD via ``core.distributed.make_sharded_epoch``.
+Both topologies run the epoch loop fully device-resident — ``engine.run`` on
+one device, ``ShardedEngine.run`` SPMD across a multi-device mesh — so either
+way the whole loop (per-epoch distortion + ``min_move_frac`` early stop) costs
+ONE host sync.  When n is not divisible by the device count (shard_map needs
+equal shards), the first ``usable_rows(n, R)`` rows are clustered and the
+remainder is assigned to its nearest centroid post-hoc, with a warning.
 """
 import argparse
+import math
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import build_knn_graph, engine, two_means_tree
-from repro.core.distributed import make_sharded_epoch, sharded_distortion
+from repro.core.distributed import ShardedEngine, usable_rows
+from repro.kernels import ops as kops
 from repro.data import gmm_blobs
 
 
@@ -31,45 +36,61 @@ def main():
     print(f"[data] generating n={args.n} d={args.d}")
     X = gmm_blobs(key, args.n, args.d, 1024)
 
+    n_dev = len(jax.devices())
+    # the 2M-tree init needs k | n and shard_map needs n_dev | n: truncate
+    # to the largest multiple of both
+    n_use = usable_rows(args.n, math.lcm(args.k, n_dev))
+    rem = args.n - n_use
+    if n_use == 0:
+        raise SystemExit(f"n={args.n} must be at least "
+                         f"lcm(k={args.k}, devices={n_dev})="
+                         f"{math.lcm(args.k, n_dev)}")
+    if rem:
+        print(f"[warn] n={args.n} not divisible by "
+              f"lcm(k={args.k}, {n_dev} devices)={math.lcm(args.k, n_dev)}: "
+              f"clustering the first {n_use} rows; the {rem} remainder "
+              f"rows are assigned to their nearest centroid afterwards")
+    Xc = X[:n_use]
+
     t0 = time.time()
-    g = build_knn_graph(X, 16, xi=64, tau=4, key=key)
+    g = build_knn_graph(Xc, 16, xi=64, tau=4, key=key)
     print(f"[graph] built in {time.time() - t0:.1f}s")
 
     t0 = time.time()
-    a0 = two_means_tree(X, args.k, key)
+    a0 = two_means_tree(Xc, args.k, key)
     print(f"[init] 2M tree ({args.k} clusters) in {time.time() - t0:.1f}s")
 
-    n_dev = len(jax.devices())
-    st = engine.init_state(X, a0, args.k)
-    xsq = jnp.sum(jnp.square(X.astype(jnp.float32)))
-    d_init = float(engine.stats_distortion(xsq, st.D, st.cnt, args.n))
+    st = engine.init_state(Xc, a0, args.k)
+    xsq = jnp.sum(jnp.square(Xc.astype(jnp.float32)))
+    d_init = float(engine.stats_distortion(xsq, st.D, st.cnt, n_use))
     print(f"[init] distortion {d_init:.4f}")
+    cfg = engine.EngineConfig(batch_size=1024, iters=args.iters,
+                              min_move_frac=1e-4)
+    t0 = time.time()
     if n_dev > 1:
         mesh = jax.make_mesh((n_dev,), ("data",))
-        epoch = make_sharded_epoch(mesh, batch_size=1024)
-        dfn = sharded_distortion(mesh)
-        assign, D, cnt = st.assign, st.D, st.cnt
+        eng = ShardedEngine(mesh, cfg)
         G = jnp.maximum(g.ids, 0)
-        d_last = d_init
-        for t in range(args.iters):
-            t0 = time.time()
-            assign, D, cnt, moves = epoch(X, G, assign, D, cnt,
-                                          jax.random.fold_in(key, t))
-            d_last = float(dfn(X, assign, D, cnt))
-            print(f"[iter {t}] moves={int(moves)} dist={d_last:.4f} "
-                  f"({time.time() - t0:.1f}s, {n_dev} devices)")
+        assign, D, cnt, hist, moves, epochs, final = jax.device_get(
+            eng.run(Xc, G, st.assign, st.D, st.cnt, key))
+        where = f"{n_dev} devices"
     else:
-        t0 = time.time()
-        cfg = engine.EngineConfig(batch_size=1024, iters=args.iters,
-                                  min_move_frac=1e-4)
         st, hist, moves, epochs, final = jax.device_get(
-            engine.run(X, st, engine.graph_source(g.ids), key, cfg))
-        dt = time.time() - t0
-        for t in range(int(epochs)):
-            print(f"[iter {t}] moves={int(moves[t])} dist={hist[t]:.4f}")
-        print(f"[run] {int(epochs)} device-resident epochs in {dt:.1f}s "
-              f"(one host sync)")
-        d_last = float(final)
+            engine.run(Xc, st, engine.graph_source(g.ids), key, cfg))
+        D, cnt = st.D, st.cnt
+        where = "1 device"
+    dt = time.time() - t0
+    for t in range(int(epochs)):
+        print(f"[iter {t}] moves={int(moves[t])} dist={hist[t]:.4f}")
+    print(f"[run] {int(epochs)} device-resident epochs in {dt:.1f}s "
+          f"({where}, one host sync)")
+    d_last = float(final)
+
+    if rem:
+        C = D / jnp.maximum(jnp.asarray(cnt), 1.0)[:, None]
+        rem_assign, _ = kops.assign_centroids(X[n_use:], C)
+        print(f"[remainder] {rem} rows assigned to their nearest centroid "
+              f"({len(set(rem_assign.tolist()))} distinct clusters)")
 
     assert d_last < d_init, (d_init, d_last)
     print(f"[done] distortion {d_init:.4f} -> {d_last:.4f} (converging)")

@@ -11,15 +11,27 @@ Layout (DESIGN.md §4):
     (src, dst) ids and applying the scatter locally on every replica
     (O(R*B*d) wire bytes instead of O(k*d) — §Perf).
 
-The epoch body itself lives in ``repro.core.engine`` (``sharded_epoch_body``)
-and is the same candidate->score->move step the single-device path runs:
-``mode='lloyd'``, ``sparse_updates`` and ``payload_bf16`` are engine options
-in both topologies, and ``engine.epoch(..., shards=R)`` reproduces this
-epoch's visit order and arithmetic on one device (the parity tests pin the
-two together bit-exactly).
+``ShardedEngine`` is the one entry point: a mesh + ``EngineConfig`` pair
+with jitted ``epoch`` / ``run`` / ``distortion`` shard_map programs.  The
+bodies live in ``repro.core.engine`` (``sharded_epoch_body`` /
+``sharded_run_body``) and are the same candidate->score->move step the
+single-device path runs: ``mode='lloyd'``, ``sparse_updates`` and
+``payload_bf16`` are engine options in both topologies,
+``engine.epoch(..., shards=R)`` reproduces one sharded epoch on one device,
+and ``engine.run(..., shards=R)`` reproduces a whole ``ShardedEngine.run``
+(the parity tests pin both bit-exactly in sparse mode).  ``run`` keeps the
+epoch loop, per-epoch O(k·d) distortion, and the ``min_move_frac`` early
+stop inside ONE trace across the mesh — one host sync per run, matching the
+single-device ``engine.run``.
+
+Row counts must divide the mesh (shard_map needs equal shards): callers
+with ``n % R != 0`` cluster the first ``usable_rows(n, R)`` rows and handle
+the remainder out-of-band (``examples/cluster_large.py`` assigns them to
+their nearest centroid post-hoc).
 """
 from __future__ import annotations
 
+import math
 from typing import Tuple
 
 import jax
@@ -29,9 +41,85 @@ from jax.experimental.shard_map import shard_map
 
 from repro.core.engine import (CandidateSource, EngineConfig, dense_source,
                                graph_source, probe_source,
-                               sharded_epoch_body)
+                               sharded_epoch_body, sharded_run_body)
 
 DATA_AXES = ("data",)
+
+
+def usable_rows(n: int, shards: int) -> int:
+    """Largest row count <= n that the mesh's data axes divide evenly."""
+    return (n // shards) * shards
+
+
+class ShardedEngine:
+    """Mesh-resident clustering engine: one API for every sharded caller.
+
+    Holds (mesh, ``EngineConfig``, candidate kind) and exposes three jitted
+    shard_map entry points over row-sharded X/G/assign and replicated
+    (D, cnt):
+
+      ``epoch(X, G, assign, D, cnt, key)``  -> (assign, D, cnt, moves)
+          one pass (``engine.sharded_epoch_body``);
+      ``run(X, G, assign, D, cnt, key)``    -> (assign, D, cnt, hist, mhist,
+          epochs, final) — the whole ``cfg.iters`` epoch loop, per-epoch
+          stats distortion and the ``min_move_frac`` early stop inside ONE
+          trace (``engine.sharded_run_body``): one host sync per run;
+      ``distortion(X, assign, D, cnt)``     -> () global mean distortion
+          (O(n·d) recompute, for host-driven loops and checks).
+
+    ``kind`` selects the candidate source ('graph' | 'dense' | 'probe'); G
+    is the neighbour-id array for 'graph' and ignored otherwise (pass any
+    row-sharded int32 array of matching leading dim).
+    """
+
+    def __init__(self, mesh: Mesh, cfg: EngineConfig = EngineConfig(), *,
+                 kind: str = "graph", probe_p: int = 8,
+                 data_axes: Tuple[str, ...] = DATA_AXES):
+        assert kind in ("graph", "dense", "probe"), kind
+        self.mesh = mesh
+        self.cfg = cfg
+        self.kind = kind
+        self.probe_p = probe_p
+        self.data_axes = tuple(data_axes)
+        self.shards = math.prod(mesh.shape[a] for a in self.data_axes)
+        row, rep = P(self.data_axes), P()
+
+        def source(G) -> CandidateSource:
+            if kind == "graph":
+                return graph_source(G)
+            if kind == "probe":
+                return probe_source(probe_p)
+            return dense_source()
+
+        def epoch_fn(X, G, assign, D, cnt, key):
+            return sharded_epoch_body(X, source(G), assign, D, cnt, key,
+                                      cfg=cfg, data_axes=self.data_axes)
+
+        def run_fn(X, G, assign, D, cnt, key):
+            return sharded_run_body(X, source(G), assign, D, cnt, key,
+                                    cfg=cfg, data_axes=self.data_axes)
+
+        def dist_fn(X, assign, D, cnt):
+            Xf = X.astype(jnp.float32)
+            C = D / jnp.maximum(cnt, 1.0)[:, None]
+            diff = Xf - C[assign]
+            tot = jax.lax.psum(jnp.sum(diff * diff), self.data_axes)
+            n = jax.lax.psum(jnp.float32(X.shape[0]), self.data_axes)
+            return tot / n
+
+        self.epoch = jax.jit(shard_map(
+            epoch_fn, mesh=mesh, in_specs=(row, row, row, rep, rep, rep),
+            out_specs=(row, rep, rep, rep), check_rep=False))
+        self.run = jax.jit(shard_map(
+            run_fn, mesh=mesh, in_specs=(row, row, row, rep, rep, rep),
+            out_specs=(row, rep, rep, rep, rep, rep, rep), check_rep=False))
+        self.distortion = jax.jit(shard_map(
+            dist_fn, mesh=mesh, in_specs=(row, row, rep, rep),
+            out_specs=rep, check_rep=False))
+
+    def __repr__(self):
+        return (f"ShardedEngine(shards={self.shards}, kind={self.kind!r}, "
+                f"cfg={self.cfg})")
 
 
 def make_sharded_epoch(mesh: Mesh, *, data_axes: Tuple[str, ...] = DATA_AXES,
@@ -39,51 +127,14 @@ def make_sharded_epoch(mesh: Mesh, *, data_axes: Tuple[str, ...] = DATA_AXES,
                        mode: str = "bkm", kind: str = "graph",
                        probe_p: int = 8, sparse_updates: bool = False,
                        payload_bf16: bool = False):
-    """Build a shard_map'd clustering epoch for `mesh`.
-
-    Returns fn(X, G, state, key) -> (assign, D, cnt, moves), where X/G/assign
-    are sharded over `data_axes` rows and (D, cnt) are replicated.
-
-    kind selects the candidate source ('graph' | 'dense' | 'probe'); G is
-    the neighbour-id array for 'graph' and ignored otherwise (pass any
-    row-sharded int32 array of matching leading dim).
-    """
+    """Back-compat shim: the ``epoch`` entry point of a ``ShardedEngine``."""
     cfg = EngineConfig(batch_size=batch_size, eps=eps, mode=mode,
                        sparse_updates=sparse_updates,
                        payload_bf16=payload_bf16)
-    row = P(data_axes)
-    rep = P()
-
-    def epoch(X, G, assign, D, cnt, key):
-        if kind == "graph":
-            source: CandidateSource = graph_source(G)
-        elif kind == "probe":
-            source = probe_source(probe_p)
-        else:
-            source = dense_source()
-        return sharded_epoch_body(X, source, assign, D, cnt, key, cfg=cfg,
-                                  data_axes=data_axes)
-
-    fn = shard_map(
-        epoch, mesh=mesh,
-        in_specs=(row, row, row, rep, rep, rep),
-        out_specs=(row, rep, rep, rep),
-        check_rep=False)
-    return jax.jit(fn)
+    return ShardedEngine(mesh, cfg, kind=kind, probe_p=probe_p,
+                         data_axes=data_axes).epoch
 
 
 def sharded_distortion(mesh: Mesh, data_axes: Tuple[str, ...] = DATA_AXES):
-    """Distortion over row-sharded (X, assign) with replicated stats."""
-    row = P(data_axes)
-
-    def f(X, assign, D, cnt):
-        Xf = X.astype(jnp.float32)
-        C = D / jnp.maximum(cnt, 1.0)[:, None]
-        diff = Xf - C[assign]
-        loc = jnp.sum(diff * diff)
-        tot = jax.lax.psum(loc, data_axes)
-        cnt_n = jax.lax.psum(jnp.float32(X.shape[0]), data_axes)
-        return tot / cnt_n
-
-    return jax.jit(shard_map(f, mesh=mesh, in_specs=(row, row, P(), P()),
-                             out_specs=P(), check_rep=False))
+    """Back-compat shim: the ``distortion`` entry point of a ShardedEngine."""
+    return ShardedEngine(mesh, data_axes=data_axes).distortion

@@ -23,7 +23,9 @@ which is how the parity tests pin the two topologies together.
 early stop *inside* the trace and per-epoch distortion computed in O(k·d)
 from the running statistics (``sum||x||² − Σ_c ||D_c||²/n_c``, with the
 ``sum||x||²`` term hoisted out of the loop) — one host sync per run instead
-of one per epoch.
+of one per epoch.  ``sharded_run_body`` is the same loop written against the
+shard_map collectives (``core.distributed.ShardedEngine`` wraps it), so the
+multi-device topology pays one host sync per run too.
 
 Candidate sets are plain array arguments (a ``CandidateSource`` pytree), not
 closures: calling the engine with a *new* graph of the same shape reuses the
@@ -119,14 +121,19 @@ class EngineConfig(NamedTuple):
 # the shared move step
 # ---------------------------------------------------------------------------
 
-def _candidates(source: CandidateSource, xb, idx, lookup, D, cnt, force):
+def _candidates(source: CandidateSource, xb, u, idx, lookup, D, cnt, force):
     """Candidate cluster ids for one batch; None means dense-all-k."""
     if source.kind == "graph":
         return lookup[source.G[idx]]                      # (B, κ)
     if source.kind == "probe":
         C = D / jnp.maximum(cnt, 1.0)[:, None]
         ids, _ = kops.probe_centroids(xb, C, source.p, force=force)
-        return ids                                        # (B, p)
+        # The sample's own cluster must stay a candidate: the top-p probe
+        # ranks by distance to D/max(cnt,1), so empty cells (centroid at the
+        # origin) can crowd u out of the probe set, leaving `is_self`
+        # all-False downstream — lloyd scoring then force-moves even when
+        # staying is best, and bkm scoring loses its self-move mask.
+        return jnp.concatenate([ids, u[:, None]], axis=1)  # (B, p+1)
     return None
 
 
@@ -210,7 +217,8 @@ def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
     u = assign[idx]
 
     def score(xb_s, u_s, idx_s):
-        cand = _candidates(source, xb_s, idx_s, lookup, D, cnt, cfg.force)
+        cand = _candidates(source, xb_s, u_s, idx_s, lookup, D, cnt,
+                           cfg.force)
         if cand is None:
             return _score_dense(xb_s, u_s, D, cnt, cfg.mode, cfg.eps)
         return _score_gathered(xb_s, u_s, cand, D, cnt, cfg.mode, cfg.eps,
@@ -362,6 +370,9 @@ def _run_impl(X, state, source, key, cfg):
     hist0 = jnp.full((cfg.iters,), jnp.nan, jnp.float32)
     mhist0 = jnp.zeros((cfg.iters,), jnp.int32)
     thresh = cfg.min_move_frac * n
+    if cfg.iters == 0:     # static: a 0-length hist cannot be .at[t]-traced
+        return (state, hist0, mhist0, jnp.zeros((), jnp.int32),
+                stats_distortion(xsq_total, state.D, state.cnt, n))
 
     def cond(carry):
         t, _, _, _, done = carry
@@ -404,6 +415,19 @@ def run(X: jax.Array, state: BKMState, source: CandidateSource,
     return f(X, state, source, key, cfg)
 
 
+def run_inline(X: jax.Array, state: BKMState, source: CandidateSource,
+               key: jax.Array, cfg: EngineConfig
+               ) -> Tuple[BKMState, jax.Array, jax.Array, jax.Array,
+                          jax.Array]:
+    """``run`` without buffer donation — safe under vmap / an outer trace.
+
+    Same return signature as ``run``; use this when the multi-epoch loop is
+    itself mapped (e.g. ``kv_cluster`` vmaps a run per cache slice), where
+    the donated-state variant would be inlined and its donation dropped.
+    """
+    return _run_plain(X, state, source, key, cfg)
+
+
 # ---------------------------------------------------------------------------
 # sharded epoch body (wrapped in shard_map by core.distributed)
 # ---------------------------------------------------------------------------
@@ -441,3 +465,54 @@ def sharded_epoch_body(X, source: CandidateSource, assign, D, cnt, key, *,
     assign, D, cnt, moves = jax.lax.fori_loop(
         0, nb, body, (assign, D, cnt, jnp.zeros((), jnp.int32)))
     return assign, D, cnt, _psum(moves, comm)
+
+
+def sharded_run_body(X, source: CandidateSource, assign, D, cnt, key, *,
+                     cfg: EngineConfig, data_axes: Tuple[str, ...]):
+    """The full multi-epoch run inside ONE shard_map trace over the mesh.
+
+    The sharded twin of ``_run_impl``: a ``lax.while_loop`` over epochs with
+    ``sharded_epoch_body`` as the body, per-epoch distortion in O(k·d) from
+    the replicated running statistics (the global ``sum||x||²`` term psum'd
+    once and hoisted out of the loop), move history, and the
+    ``min_move_frac`` early stop — all in-trace, so a run costs one host
+    sync across the whole mesh instead of one per epoch.
+
+    Returns (assign (n_loc,), D, cnt, hist (iters,) f32 — NaN past the early
+    stop, mhist (iters,) int32 global accepted moves, epochs () int32,
+    final () f32 distortion).  ``core.distributed.ShardedEngine`` wraps this
+    in shard_map; parity with the single-device ``run(..., shards=R)``
+    emulation is bit-exact in ``sparse_updates`` mode (same per-epoch
+    ``fold_in`` key schedule, same visit order, same scatter arithmetic).
+    """
+    comm = _Comm(tuple(data_axes))
+    n = _psum(jnp.asarray(X.shape[0], jnp.float32), comm)
+    xsq_total = _psum(jnp.sum(jnp.square(X.astype(jnp.float32))), comm)
+    hist0 = jnp.full((cfg.iters,), jnp.nan, jnp.float32)
+    mhist0 = jnp.zeros((cfg.iters,), jnp.int32)
+    thresh = cfg.min_move_frac * n
+    if cfg.iters == 0:     # static: a 0-length hist cannot be .at[t]-traced
+        return (assign, D, cnt, hist0, mhist0, jnp.zeros((), jnp.int32),
+                stats_distortion(xsq_total, D, cnt, n))
+
+    def cond(carry):
+        t, _, _, _, _, _, done = carry
+        return (t < cfg.iters) & ~done
+
+    def body(carry):
+        t, assign_l, D_, cnt_, hist, mhist, _ = carry
+        assign_l, D_, cnt_, moves = sharded_epoch_body(
+            X, source, assign_l, D_, cnt_, jax.random.fold_in(key, t),
+            cfg=cfg, data_axes=data_axes)
+        dist = stats_distortion(xsq_total, D_, cnt_, n)
+        hist = hist.at[t].set(dist)
+        mhist = mhist.at[t].set(moves)
+        done = moves.astype(jnp.float32) <= thresh
+        return t + 1, assign_l, D_, cnt_, hist, mhist, done
+
+    t, assign, D, cnt, hist, mhist, _ = jax.lax.while_loop(
+        cond, body,
+        (jnp.zeros((), jnp.int32), assign, D, cnt, hist0, mhist0,
+         jnp.zeros((), bool)))
+    final = stats_distortion(xsq_total, D, cnt, n)
+    return assign, D, cnt, hist, mhist, t, final

@@ -20,7 +20,8 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
-from repro.core.distributed import make_sharded_epoch  # noqa: E402
+from repro.core.distributed import ShardedEngine  # noqa: E402
+from repro.core.engine import EngineConfig  # noqa: E402
 from repro.launch import roofline as rl  # noqa: E402
 from repro.launch.mesh import data_axes_of, make_production_mesh  # noqa: E402
 
@@ -43,10 +44,10 @@ def run_cell(workload: str, mode: str, multi_pod: bool,
     rec = {"workload": workload, "mode": mode, "cluster_mode": cluster_mode,
            "mesh": "2x16x16" if multi_pod else "16x16"}
     try:
-        epoch = make_sharded_epoch(mesh, data_axes=data_axes,
-                                   batch_size=w["batch"], mode=cluster_mode,
-                                   sparse_updates=mode.startswith("sparse"),
-                                   payload_bf16=(mode == "sparse_bf16"))
+        cfg = EngineConfig(batch_size=w["batch"], mode=cluster_mode,
+                           sparse_updates=mode.startswith("sparse"),
+                           payload_bf16=(mode == "sparse_bf16"))
+        epoch = ShardedEngine(mesh, cfg, data_axes=data_axes).epoch
         row = NamedSharding(mesh, P(data_axes))
         rep = NamedSharding(mesh, P())
         n, d, k, kappa = w["n"], w["d"], w["k"], w["kappa"]

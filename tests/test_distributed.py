@@ -188,3 +188,85 @@ def test_sharded_dense_and_probe_sources_4dev():
     """The CandidateSource matrix is available in the sharded topology too."""
     r = _run(CODE_DENSE_PROBE, devices=4)
     assert "KINDS_OK" in r.stdout, r.stderr[-3000:]
+
+
+# ---------------------------------------------------------------------------
+# sharded_run: the whole epoch loop in ONE shard_map trace — bit-exact parity
+# with the single-device `engine.run(..., shards=R)` emulation, exactly one
+# host sync per run (device->host transfers disallowed around the dispatch),
+# and the in-trace early stop.
+# ---------------------------------------------------------------------------
+
+CODE_SHARDED_RUN = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.data import gmm_blobs
+from repro.core import build_knn_graph, two_means_tree, init_state, engine
+from repro.core.distributed import ShardedEngine
+
+key = jax.random.PRNGKey(0)
+n, d, k, R = 2048, 16, 32, 4
+assert len(jax.devices()) == R
+X = gmm_blobs(key, n, d, 32)
+g = build_knn_graph(X, 8, xi=32, tau=2, key=key)
+G = jnp.maximum(g.ids, 0)
+a0 = two_means_tree(X, k, key)
+mesh = jax.make_mesh((R,), ("data",))
+iters = 5
+cfg = engine.EngineConfig(batch_size=128, sparse_updates=True, iters=iters,
+                          min_move_frac=-1.0)
+eng = ShardedEngine(mesh, cfg)
+st0 = init_state(X, a0, k)
+
+# ONE host sync per run: compile+dispatch makes no device->host transfer;
+# the single jax.device_get below is the only sync
+with jax.transfer_guard_device_to_host("disallow"):
+    out = eng.run(X, G, st0.assign, st0.D, st0.cnt, key)
+assign, D, cnt, hist, mhist, epochs, final = jax.device_get(out)
+
+# bit-exact parity with the single-device R-way emulation (sparse mode)
+st = init_state(X, a0, k)
+st1, hist1, mhist1, epochs1, final1 = jax.device_get(
+    engine.run(X, st, engine.graph_source(G), key, cfg._replace(shards=R)))
+np.testing.assert_array_equal(assign, st1.assign)
+np.testing.assert_array_equal(cnt, st1.cnt)
+np.testing.assert_array_equal(D, st1.D)
+np.testing.assert_array_equal(mhist, mhist1)
+assert int(epochs) == int(epochs1) == iters
+np.testing.assert_allclose(hist, hist1, rtol=1e-5)
+np.testing.assert_allclose(final, final1, rtol=1e-5)
+
+# the min_move_frac early stop runs inside the trace
+eng2 = ShardedEngine(mesh, engine.EngineConfig(batch_size=128, iters=8,
+                                               min_move_frac=1.0))
+_, _, _, hist2, _, ep2, _ = jax.device_get(
+    eng2.run(X, G, st0.assign, st0.D, st0.cnt, key))
+assert int(ep2) == 1 and np.isnan(hist2[1:]).all()
+print("SHARDED_RUN_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_run_parity_and_single_sync_4dev():
+    """Acceptance: sharded_run == engine.run(shards=R) bit-exactly, one host
+    sync per run, early stop in-trace."""
+    r = _run(CODE_SHARDED_RUN, devices=4)
+    assert "SHARDED_RUN_OK" in r.stdout, r.stderr[-3000:]
+
+
+@pytest.mark.slow
+def test_cluster_large_example_indivisible_n_4dev():
+    """examples/cluster_large.py multi-device path: n % n_dev != 0 no longer
+    crashes — remainder rows are truncated from the sharded run (with a
+    warning) and assigned to their nearest centroid post-hoc, and the epoch
+    loop early-stops through ShardedEngine.run (one host sync)."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ, PYTHONPATH=SRC,
+               XLA_FLAGS="--xla_force_host_platform_device_count=4")
+    r = subprocess.run(
+        [sys.executable, os.path.join(root, "examples", "cluster_large.py"),
+         "--n", "2050", "--k", "64", "--d", "16", "--iters", "3"],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
+    assert "[warn] n=2050 not divisible by lcm(k=64, 4 devices)" in r.stdout
+    assert "[remainder] 2 rows assigned" in r.stdout
+    assert "one host sync" in r.stdout

@@ -114,6 +114,97 @@ def test_payload_bf16_rounds_stats(setup):
     np.testing.assert_allclose(np.asarray(st.cnt), np.asarray(s.cnt))
 
 
+def test_run_iters_zero(setup):
+    """Edge: iters=0 — run returns the initial state untouched, zero-length
+    histories, and the initial distortion."""
+    X, a0, G, k, key = setup
+    st0 = engine.init_state(X, a0, k)
+    cfg = engine.EngineConfig(batch_size=256, iters=0)
+    st, hist, mhist, epochs, final = engine.run(X, st0, engine.graph_source(G),
+                                                key, cfg)
+    assert int(epochs) == 0
+    assert hist.shape == (0,) and mhist.shape == (0,)
+    np.testing.assert_array_equal(np.asarray(st.assign), np.asarray(st0.assign))
+    np.testing.assert_allclose(float(final), float(distortion(X, a0, k)),
+                               rtol=1e-4)
+
+
+def test_n_smaller_than_batch(setup):
+    """Edge: n < batch_size — one clamped batch per epoch, run still works."""
+    _, _, _, _, key = setup
+    n, d, k = 96, 8, 8
+    X = gmm_blobs(key, n, d, 8)
+    a0 = two_means_tree(X, k, key)
+    G = jax.random.randint(key, (n, 4), 0, n)
+    cfg = engine.EngineConfig(batch_size=1024, iters=5, min_move_frac=-1.0)
+    st, hist, _, epochs, final = engine.run(
+        X, engine.init_state(X, a0, k), engine.graph_source(G), key, cfg)
+    assert int(epochs) == 5
+    assert float(final) <= float(distortion(X, a0, k)) + 1e-6
+    s = cluster_stats(X, st.assign, k)
+    np.testing.assert_allclose(np.asarray(st.cnt), np.asarray(s.cnt))
+    assert float(st.cnt.min()) >= 1.0
+
+
+def test_shards_not_dividing_n(setup):
+    """Edge: cfg.shards ∤ n — the emulated R-way order visits the first
+    R*(n//R) rows; the remainder keeps its assignment and the running stats
+    stay consistent with the full assignment vector."""
+    _, _, _, _, key = setup
+    n, d, k, R = 2048, 8, 16, 3
+    X = gmm_blobs(key, n, d, 16)
+    a0 = two_means_tree(X, k, key)
+    G = jax.random.randint(key, (n, 8), 0, n)
+    cfg = engine.EngineConfig(batch_size=128, shards=R)
+    st = engine.init_state(X, a0, k)
+    for t in range(3):
+        st = engine.epoch(X, st, engine.graph_source(G),
+                          jax.random.fold_in(key, t), cfg)
+    # remainder rows (never visited) keep their initial assignment
+    np.testing.assert_array_equal(np.asarray(st.assign)[(n // R) * R:],
+                                  np.asarray(a0)[(n // R) * R:])
+    s = cluster_stats(X, st.assign, k)
+    np.testing.assert_allclose(np.asarray(st.cnt), np.asarray(s.cnt))
+    np.testing.assert_allclose(np.asarray(st.D), np.asarray(s.D),
+                               rtol=1e-4, atol=1e-2)
+    assert float(st.cnt.min()) >= 1.0
+
+
+def test_probe_lloyd_keeps_own_cluster():
+    """Regression (fails on the pre-fix engine): the top-p probe ranks cells
+    by distance to D/max(cnt,1), so EMPTY cells (centroid at the origin) can
+    crowd a sample's own cluster out of the candidate set — `is_self` went
+    all-False and lloyd scoring force-moved the sample even though staying
+    was best.  The fix appends u to the probe candidates.
+
+    Setup: 2 real clusters + 6 empty cells.  Each real cluster holds 15
+    samples at ±(2.1, 0..) and one outlier at ±(0.5, 0..) whose own centroid
+    (±2.0) is its nearest non-empty centroid, but which sits closer to the
+    origin than to it — the top-4 probe returns only empty cells for the
+    outliers.  Pre-fix both outliers are force-moved; post-fix nothing
+    moves."""
+    d, k = 8, 8
+    base = np.zeros((32, d), np.float32)
+    base[:15, 0] = 2.1
+    base[15, 0] = 0.5
+    base[16:31, 0] = -2.1
+    base[31, 0] = -0.5
+    X = jnp.asarray(base)
+    a0 = jnp.asarray([0] * 16 + [1] * 16, dtype=jnp.int32)
+    st0 = engine.init_state(X, a0, k)
+    cfg = engine.EngineConfig(batch_size=32, mode="lloyd")
+    st = engine.epoch(X, st0, engine.probe_source(4), jax.random.PRNGKey(0),
+                      cfg)
+    assert int(st.moves) == 0
+    np.testing.assert_array_equal(np.asarray(st.assign), np.asarray(a0))
+    # the same hazard in bkm probe scoring: the self column must be masked,
+    # an epoch must never raise distortion at a local optimum of this shape
+    st_b = engine.epoch(X, st0, engine.probe_source(4), jax.random.PRNGKey(0),
+                        engine.EngineConfig(batch_size=32, mode="bkm"))
+    assert float(distortion(X, st_b.assign, k)) <= float(
+        distortion(X, a0, k)) + 1e-6
+
+
 def test_candidate_source_pytree_roundtrip():
     src = engine.graph_source(jnp.zeros((4, 2), jnp.int32))
     leaves, treedef = jax.tree_util.tree_flatten(src)
