@@ -25,3 +25,28 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
 def emit(rows: List[Row]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def run_forced_host_child(bench_file: str, quick: bool, devices: int,
+                          timeout: int = 3600) -> None:
+    """Re-run `bench_file --child` under R forced host CPU devices.
+
+    The parent JAX runtime is already initialised with the real device
+    count, so multi-device CPU benches execute their measurement body in a
+    child process with ``--xla_force_host_platform_device_count`` set
+    (engine_bench and graph_build_bench share this launch recipe).
+    """
+    import os
+    import subprocess
+    import sys
+    here = os.path.dirname(os.path.abspath(bench_file))
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + f" --xla_force_host_platform_device_count={devices}")
+    env["JAX_PLATFORMS"] = "cpu"   # forced host devices are a CPU feature
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(here, "..", "src")]
+        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+    cmd = [sys.executable, os.path.abspath(bench_file), "--child",
+           "--quick" if quick else "--full"]
+    subprocess.run(cmd, check=True, env=env, timeout=timeout)

@@ -22,9 +22,6 @@ from __future__ import annotations
 
 import argparse
 import json
-import os
-import subprocess
-import sys
 import time
 
 SHARDED_DEVICES = 4
@@ -161,17 +158,11 @@ def _sharded_child(quick: bool):
 def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
     """Sharded mode via a child process with forced host devices (the parent
     JAX runtime is already initialised with the real device count)."""
-    here = os.path.dirname(os.path.abspath(__file__))
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
-                        + f" --xla_force_host_platform_device_count={devices}")
-    env["JAX_PLATFORMS"] = "cpu"   # forced host devices are a CPU feature
-    env["PYTHONPATH"] = os.pathsep.join(
-        [os.path.join(here, "..", "src")]
-        + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
-    cmd = [sys.executable, os.path.abspath(__file__), "--child",
-           "--quick" if quick else "--full"]
-    subprocess.run(cmd, check=True, env=env, timeout=3600)
+    try:
+        from benchmarks.common import run_forced_host_child
+    except ImportError:       # run directly: benchmarks/ itself is sys.path
+        from common import run_forced_host_child
+    run_forced_host_child(__file__, quick, devices)
     with open(SHARDED_JSON) as f:
         rec = json.load(f)
     return [

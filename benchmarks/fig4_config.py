@@ -22,8 +22,14 @@ def run(quick: bool = True):
     std = gk_means(X, k, **ks, key=jax.random.PRNGKey(1), mode="bkm")
     t_std = (time.perf_counter() - t0) * 1e6
     rec = float(recall_top1(std.graph.ids, gt))
+    # Alg. 3 build diagnostics: member-table overflow + guided-pass moves
+    # per tau round (BuildDiagnostics, via gk_means' graph stage)
+    ovf = [int(v) for v in std.graph_diag.overflow]
+    mv = [int(v) for v in std.graph_diag.guided_moves]
     rows.append(("fig4/GK-means", t_std,
-                 f"distortion={std.distortion:.4f};graph_recall={rec:.3f}"))
+                 f"distortion={std.distortion:.4f};graph_recall={rec:.3f};"
+                 f"overflow={sum(ovf)}({'/'.join(map(str, ovf))});"
+                 f"guided_moves={'/'.join(map(str, mv))}"))
 
     t0 = time.perf_counter()
     llo = gk_means(X, k, **ks, key=jax.random.PRNGKey(1), mode="lloyd",

@@ -44,4 +44,21 @@ def run(quick: bool = True):
     flops = KERNEL_INVENTORY["gather_score"]["flops"](Bg, Cg, d)
     rows.append((f"kernel/gather_score(B={Bg},C={Cg},d={d})", us,
                  f"gflops={flops / us / 1e3:.1f}"))
+
+    # graph-build refinement: fused candidate-distance + top-κ merge, timed
+    # through the chunked production entry point (the raw ref path would
+    # materialise a (B, C, d) gather — ~17 GB at the full sizes)
+    from repro.core.graph_build import _refine_rows
+    Br, Cr, kap = (4096, 64, 16) if quick else (65536, 128, 32)
+    kr = jax.random.fold_in(key, 3)
+    xr = gmm_blobs(kr, Br, d, 8)
+    rws = jax.random.randint(jax.random.fold_in(kr, 1), (Br, Cr), 0, n)
+    gi = jnp.full((Br, kap), -1, jnp.int32)
+    gd = jnp.full((Br, kap), jnp.inf, jnp.float32)
+    f = jax.jit(lambda x, rw, a, b, Xs: _refine_rows(x, rw, rw, a, b, Xs,
+                                                     4096, None))
+    us = timed(f, xr, rws, gi, gd, X)
+    flops = KERNEL_INVENTORY["refine_merge"]["flops"](Br, Cr, d, kap)
+    rows.append((f"kernel/refine_merge(B={Br},C={Cr},d={d},kappa={kap})", us,
+                 f"gflops={flops / us / 1e3:.1f}"))
     return rows

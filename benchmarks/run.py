@@ -13,8 +13,9 @@ from benchmarks.common import emit
 
 SUITES = ["fig1_cooccurrence", "fig2_tau", "fig4_config", "fig5_quality",
           "fig6_scalability", "table2_large_k", "anns_recall",
-          "anns_ivf_bench", "engine_bench", "kernels_bench",
-          "kv_cluster_bench", "ablation_guided", "roofline_report"]
+          "anns_ivf_bench", "engine_bench", "graph_build_bench",
+          "kernels_bench", "kv_cluster_bench", "ablation_guided",
+          "roofline_report"]
 
 
 def main() -> None:

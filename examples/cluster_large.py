@@ -87,8 +87,16 @@ def main():
     d_last = float(final)
 
     if rem:
-        C = D / jnp.maximum(jnp.asarray(cnt), 1.0)[:, None]
-        rem_assign, _ = kops.assign_centroids(X[n_use:], C)
+        import numpy as np
+        # restrict the candidate set to non-empty clusters: an empty
+        # cluster's centroid sits at the origin after the division and must
+        # not capture a remainder row (same origin-centroid hazard the
+        # engine's probe source guards against; the leaver guard makes
+        # empties rare, but post-hoc assignment must not rely on that)
+        nonempty = np.flatnonzero(np.asarray(cnt) > 0)
+        C = (D / jnp.maximum(jnp.asarray(cnt), 1.0)[:, None])[nonempty]
+        rem_idx, _ = kops.assign_centroids(X[n_use:], C)
+        rem_assign = nonempty[np.asarray(rem_idx)]
         print(f"[remainder] {rem} rows assigned to their nearest centroid "
               f"({len(set(rem_assign.tolist()))} distinct clusters)")
 

@@ -24,8 +24,14 @@ n, d = 32768, 64
 X = gmm_blobs(key, n, d, 512)
 
 t0 = time.time()
-g = build_knn_graph(X, 16, xi=64, tau=8, key=key)   # ANNS wants higher tau
-print(f"[build] KNN graph (n={n}) in {time.time() - t0:.1f}s")
+# the whole tau-round build is one device-resident trace (one dispatch /
+# one host sync); diagnostics report per-round member-table overflow and
+# guided-pass moves
+g, diag = build_knn_graph(X, 16, xi=64, tau=8, key=key,   # ANNS: higher tau
+                          return_diagnostics=True)
+print(f"[build] KNN graph (n={n}) in {time.time() - t0:.1f}s, "
+      f"overflow/round={[int(v) for v in diag.overflow]}, "
+      f"guided moves/round={[int(v) for v in diag.guided_moves]}")
 
 nq = 256
 q = X[:nq] + 0.05 * jax.random.normal(jax.random.fold_in(key, 1), (nq, d))

@@ -5,6 +5,8 @@ from repro.core.closure import closure_kmeans
 from repro.core.engine import (CandidateSource, EngineConfig, dense_source,
                                graph_source, probe_source)
 from repro.core.gkmeans import GKMeansResult, gk_means
+from repro.core.graph_build import (BuildDiagnostics, GraphBuildConfig,
+                                    GraphBuilder, build_graph)
 from repro.core.knn_graph import (KnnGraph, build_knn_graph, graph_distances,
                                   merge_topk, random_graph)
 from repro.core.kv_cluster import (KVClusters, build_kv_clusters,
@@ -20,9 +22,10 @@ from repro.core.recall import (brute_force_knn, cooccurrence_rate, recall_at,
 from repro.core.two_means import pad_plan, two_means_tree
 
 __all__ = [
-    "BKMState", "CandidateSource", "ClusterStats", "EngineConfig",
-    "GKMeansResult", "KnnGraph",
-    "brute_force_knn", "build_knn_graph",
+    "BKMState", "BuildDiagnostics", "CandidateSource", "ClusterStats",
+    "EngineConfig", "GKMeansResult", "GraphBuildConfig", "GraphBuilder",
+    "KnnGraph",
+    "brute_force_knn", "build_graph", "build_knn_graph",
     "centroids", "closure_kmeans", "cluster_stats", "cooccurrence_rate",
     "delta_I", "delta_I_brute", "dense_source", "distortion", "gk_means",
     "graph_distances", "graph_search", "graph_source", "init_kmeanspp",

@@ -5,6 +5,13 @@ sample's candidate clusters are the clusters where its leaf-mates (across all
 trees) currently live — the same "active point / neighbourhood closure" idea,
 implemented on the static-shape 2M-tree substrate.  Assignment is the
 traditional nearest-candidate-centroid rule (not ΔI), matching the original.
+
+Since PR 4 the leaf-mate graph is a thin adapter over the device-resident
+``core.graph_build`` core: T unguided partition rounds with ``xi = leaf``
+are exactly T random equal-size trees, and the shared refinement step keeps
+each sample's ``trees * (leaf - 1)`` *nearest* leaf-mates across the trees
+(distance-sorted and deduped) — the whole candidate-graph build is one trace
+instead of T host-looped tree + member-table dispatches.
 """
 from __future__ import annotations
 
@@ -14,45 +21,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.knn_graph import members_table
+from repro.core.graph_build import GraphBuildConfig, build_graph
 from repro.core.objective import centroids, cluster_stats
 from repro.core.two_means import pad_plan, two_means_tree
 
 
 def _leafmate_graph(X: jax.Array, trees: int, leaf: int, key: jax.Array
                     ) -> jax.Array:
-    """(n, trees*(leaf-1)) ids of leaf-mates across `trees` random partitions."""
-    n = X.shape[0]
-    k0 = max(n // leaf, 1)
-    k0p = 1
-    while k0p < k0:
-        k0p *= 2
-    n2 = k0p * leaf
-    if n2 > n:
-        extra = jax.random.randint(jax.random.fold_in(key, 99),
-                                   (n2 - n,), 0, n, dtype=jnp.int32)
-        real = jnp.concatenate([jnp.arange(n, dtype=jnp.int32), extra])
-    else:
-        real = jnp.arange(n, dtype=jnp.int32)
-    Xp = X[real]
-
-    mates = []
-    for t in range(trees):
-        a = two_means_tree(Xp, k0p, jax.random.fold_in(key, t))
-        table, _ = members_table(a, k0p, leaf)                # (k0p, leaf)
-        rid = jnp.where(table >= 0, real[jnp.maximum(table, 0)], -1)
-        # row for sample i: first occurrence among padded rows is its own row
-        # (rows < n are the originals); invert via scatter of cluster ids.
-        cluster_of = jnp.zeros((n2,), jnp.int32).at[
-            jnp.maximum(table, 0).reshape(-1)].set(
-            jnp.repeat(jnp.arange(k0p, dtype=jnp.int32), leaf))
-        m = rid[cluster_of[:n]]                               # (n, leaf)
-        own = jnp.arange(n, dtype=jnp.int32)[:, None]
-        m = jnp.where(m == own, -1, m)
-        # compact: keep (leaf-1) slots, dropping one -1 (best effort: sort desc)
-        m = -jnp.sort(-m, axis=1)[:, : leaf - 1]
-        mates.append(m)
-    return jnp.concatenate(mates, axis=1)
+    """(n, trees*(leaf-1)) nearest leaf-mate ids across `trees` partitions."""
+    # random_init=False: lists hold ONLY leaf-mates (the closure algorithm's
+    # candidate set), not the KNN builders' random seeding.  Any leaf size
+    # works (the builder only needs a power-of-two cluster COUNT).
+    cfg = GraphBuildConfig(kappa=trees * (leaf - 1), source="partition",
+                           xi=leaf, tau=trees, guided=False,
+                           random_init=False)
+    graph, _ = build_graph(X, key, cfg)
+    return graph.ids
 
 
 def closure_kmeans(X: jax.Array, k: int, *, iters: int = 20, trees: int = 3,

@@ -28,6 +28,13 @@ Row counts must divide the mesh (shard_map needs equal shards): callers
 with ``n % R != 0`` cluster the first ``usable_rows(n, R)`` rows and handle
 the remainder out-of-band (``examples/cluster_large.py`` assigns them to
 their nearest centroid post-hoc).
+
+Graph construction shards with the same conventions:
+``sharded_graph_builder(mesh, cfg)`` returns a ``core.graph_build``
+``GraphBuilder`` whose whole tau-round build runs inside one shard_map
+trace — rows and graph rows sharded, candidate distances and merges local,
+O(1) host syncs per build, bit-exact against the single-device build with
+``GraphBuildConfig(shards=R)``.
 """
 from __future__ import annotations
 
@@ -138,3 +145,19 @@ def make_sharded_epoch(mesh: Mesh, *, data_axes: Tuple[str, ...] = DATA_AXES,
 def sharded_distortion(mesh: Mesh, data_axes: Tuple[str, ...] = DATA_AXES):
     """Back-compat shim: the ``distortion`` entry point of a ShardedEngine."""
     return ShardedEngine(mesh, data_axes=data_axes).distortion
+
+
+def sharded_graph_builder(mesh: Mesh, cfg=None, *,
+                          data_axes: Tuple[str, ...] = DATA_AXES):
+    """Mesh-resident KNN-graph builder (``core.graph_build.GraphBuilder``).
+
+    The graph-build twin of ``ShardedEngine``: ``builder.build(X, key)``
+    runs Alg. 3 (or NN-Descent, ``cfg.source='descent'``) with rows + graph
+    rows sharded over ``data_axes`` and the whole tau-round loop in ONE
+    shard_map trace.  The padded row count must divide the mesh
+    (``usable_rows`` helps for the descent source; the partition layout is a
+    power of two and always divides a power-of-two mesh).
+    """
+    from repro.core.graph_build import GraphBuildConfig, GraphBuilder
+    return GraphBuilder(cfg or GraphBuildConfig(), mesh=mesh,
+                        data_axes=data_axes)

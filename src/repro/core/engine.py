@@ -357,6 +357,17 @@ def epoch(X: jax.Array, state: BKMState, source: CandidateSource,
     return _epoch_impl(X, state, source, key, cfg)
 
 
+def epoch_inline(X: jax.Array, state: BKMState, source: CandidateSource,
+                 key: jax.Array, cfg: EngineConfig = EngineConfig()
+                 ) -> BKMState:
+    """``epoch`` without the jit wrapper — for composition inside an outer
+    trace.  The graph builder (``core.graph_build``) runs its guided pass
+    through this inside the device-resident tau-round scan; semantics are
+    identical to ``epoch`` (including the ``cfg.shards`` R-way emulation
+    used by the topology-parity tests)."""
+    return _epoch_impl(X, state, source, key, cfg)
+
+
 def stats_distortion(xsq_total, D, cnt, n) -> jax.Array:
     """Distortion in O(k·d) from the running statistics (paper Eqn. 2/4)."""
     dsq = jnp.sum(D * D, axis=-1)

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
+from repro.core.graph_build import BuildDiagnostics
 from repro.core.knn_graph import KnnGraph, build_knn_graph
 from repro.core.two_means import pad_plan, two_means_tree
 
@@ -35,6 +36,8 @@ class GKMeansResult:
     moves: List[int]           # per-epoch accepted moves
     graph: Optional[KnnGraph]
     seconds: dict = field(default_factory=dict)
+    # per-round Alg. 3 build observability (None when a graph was passed in)
+    graph_diag: Optional[BuildDiagnostics] = None
 
 
 def _tree_init(X: jax.Array, k: int, key: jax.Array) -> jax.Array:
@@ -76,10 +79,12 @@ def gk_means(
     kg, ki, kb = jax.random.split(key, 3)
 
     sec = {}
+    gdiag = None
     t0 = time.perf_counter()
     if graph is None:
-        graph = build_knn_graph(X, kappa, xi=xi, tau=tau, key=kg,
-                                guided=guided_graph)
+        graph, gdiag = build_knn_graph(X, kappa, xi=xi, tau=tau, key=kg,
+                                       guided=guided_graph,
+                                       return_diagnostics=True)
     sec["graph"] = time.perf_counter() - t0
 
     # init + engine run are dispatched back-to-back with no host sync in
@@ -106,4 +111,5 @@ def gk_means(
     epochs = int(epochs)
     history = [float(h) for h in hist[:epochs]]
     return GKMeansResult(state.assign, C, k2, float(final), history,
-                         [int(m) for m in moves[:epochs]], graph, sec)
+                         [int(m) for m in moves[:epochs]], graph, sec,
+                         gdiag)

@@ -1,18 +1,19 @@
 """KNN-graph construction by iteratively calling fast k-means (paper Alg. 3).
 
-Per round (x tau): partition the data into equal-capacity clusters of size ~xi
-with a randomized 2M tree, optionally improve the partition with one
-graph-guided BKM pass (the "intertwined evolving" step), then brute-force
-pairwise distances *within* each cluster and merge the results into every
-member's top-kappa list.
+Per round (x tau): partition the data into equal-capacity clusters of size
+~xi with a randomized 2M tree, optionally improve the partition with one
+graph-guided engine pass (the "intertwined evolving" step), then compare
+every row against its cluster co-members and merge the exact distances into
+its top-kappa list.
 
-TPU adaptations (DESIGN.md §2):
-  * clusters live in a fixed-capacity (k0, cap) member table (cap = 2*xi by
-    default); the BKM pass can drift sizes, members beyond cap are simply not
-    refined this round (rare, counted);
-  * the KNN-list update is a sort-based dedupe merge with static shapes;
-  * n is padded to k0 * xi with phantom copies of random rows; phantoms proxy
-    for their source row (`pad_src`) and are dropped from the result.
+Since PR 4 the whole loop lives in ``core.graph_build``: ``build_knn_graph``
+is a thin adapter over the device-resident ``GraphBuilder`` core (one trace
+and O(1) host syncs per build, sharded via ``GraphBuilder(mesh=...)``), and
+the within-cluster refinement hot path is the fused
+``kernels.refine_merge`` Pallas kernel.  This module keeps the shared
+graph primitives: the ``KnnGraph`` container, random initial graphs, exact
+edge distances, the sort-based ``merge_topk``, and the fixed-capacity
+``members_table``.
 """
 from __future__ import annotations
 
@@ -21,10 +22,6 @@ from typing import NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
-
-from repro.core import engine
-from repro.core.two_means import two_means_tree
-from repro.kernels import ops as kops
 
 INF = jnp.float32(jnp.inf)
 
@@ -39,7 +36,13 @@ class KnnGraph(NamedTuple):
 # ---------------------------------------------------------------------------
 
 def random_graph(key: jax.Array, n: int, kappa: int) -> jax.Array:
-    """Random neighbour ids, guaranteed != self."""
+    """Random neighbour ids, guaranteed != self.
+
+    n == 1 has no valid neighbour: every id is -1 (the empty-range
+    ``randint(0, n - 1)`` used to crash here).
+    """
+    if n <= 1:
+        return jnp.full((n, kappa), -1, jnp.int32)
     r = jax.random.randint(key, (n, kappa), 0, n - 1, dtype=jnp.int32)
     own = jnp.arange(n, dtype=jnp.int32)[:, None]
     return jnp.where(r >= own, r + 1, r)
@@ -48,7 +51,13 @@ def random_graph(key: jax.Array, n: int, kappa: int) -> jax.Array:
 @functools.partial(jax.jit, static_argnums=(2,))
 def graph_distances(X: jax.Array, ids: jax.Array, chunk: int = 4096
                     ) -> jax.Array:
-    """Exact squared distances along graph edges, chunked over rows."""
+    """Exact squared distances along graph edges, chunked over rows.
+
+    Callers pass ``chunk`` unconditionally: when it does not divide n (or
+    n <= chunk) the whole batch is computed in one piece — the
+    ``chunk if n % chunk == 0 else n`` fallback lives here, not at call
+    sites.
+    """
     n, kappa = ids.shape
 
     def body(args):
@@ -70,6 +79,8 @@ def merge_topk(g_ids: jax.Array, g_d: jax.Array, c_ids: jax.Array,
 
     All args (..., L*) — returns (..., kappa) sorted by distance.  Duplicate
     ids keep their best distance; invalid entries are marked id=-1/dist=inf.
+    (The graph builder's hot path uses the fused ``kernels.refine_merge``
+    instead; this three-argsort variant remains the general-purpose merge.)
     """
     ids = jnp.concatenate([g_ids, c_ids], axis=-1)
     d = jnp.concatenate([g_d, c_d], axis=-1)
@@ -101,7 +112,13 @@ def members_table(assign: jax.Array, k: int, cap: int
     """Ragged clusters -> fixed-capacity table.
 
     Returns (table (k, cap) int32 with -1 padding, overflow count ()).
-    Members beyond `cap` in a cluster are dropped (counted in overflow).
+
+    Capacity semantics: each cluster keeps its first ``cap`` members in
+    assignment-stable order; members beyond ``cap`` are dropped from the
+    table and counted in ``overflow``.  A dropped member is merely absent as
+    a *candidate* for its co-members that round — in the graph builder it
+    still refines its own list against the members that are present, and
+    ``BuildDiagnostics.overflow`` reports the per-round counts.
     """
     n = assign.shape[0]
     order = jnp.argsort(assign, stable=True).astype(jnp.int32)
@@ -118,113 +135,28 @@ def members_table(assign: jax.Array, k: int, cap: int
 
 
 # ---------------------------------------------------------------------------
-# refinement: within-cluster exhaustive comparison -> graph update
+# Alg. 3 top level — thin adapter over core.graph_build
 # ---------------------------------------------------------------------------
-
-@functools.partial(jax.jit, static_argnums=(4, 5))
-def refine_graph(X: jax.Array, table: jax.Array, real_id: jax.Array,
-                 graph: KnnGraph, kappa: int, chunk: int) -> KnnGraph:
-    """Paper Alg. 3 lines 8-14 on a fixed-capacity member table.
-
-    X: (n_pad, d) padded data; table: (k0, cap) row indices into X (-1 pad);
-    real_id: (n_pad,) maps padded rows to original sample ids.
-    graph rows are stored for REAL ids only: ids/dist are (n_real+1, .) with a
-    trash row at index n_real for invalid scatters.
-    """
-    k0, cap = table.shape
-    n_real = graph.ids.shape[0] - 1
-    assert k0 % chunk == 0, (k0, chunk)
-
-    def body(g, tchunk):
-        g_ids, g_d = g
-        valid = tchunk >= 0                                  # (c, cap)
-        rows = jnp.maximum(tchunk, 0)
-        Xm = X[rows]                                         # (c, cap, d)
-        d2 = kops.pairwise_sq(Xm)                            # (c, cap, cap)
-        rid = jnp.where(valid, real_id[rows], -1)            # (c, cap)
-        # mask: invalid columns, and same-real-id pairs (self + phantom dupes)
-        same = rid[:, :, None] == rid[:, None, :]
-        d2 = jnp.where(same | ~valid[:, None, :] | ~valid[:, :, None],
-                       INF, d2)
-        cand_ids = jnp.broadcast_to(rid[:, None, :], d2.shape)
-
-        # merge into each member's list
-        dest = jnp.where(valid, rid, n_real)                 # (c, cap)
-        old_ids = g_ids[dest]                                # (c, cap, kappa)
-        old_d = g_d[dest]
-        new_ids, new_d = merge_topk(old_ids, old_d, cand_ids, d2, kappa)
-        # duplicate real ids in one chunk (phantoms) write the same content;
-        # scatter order is irrelevant because inputs coincide.
-        g_ids = g_ids.at[dest.reshape(-1)].set(
-            new_ids.reshape(-1, kappa), mode="drop")
-        g_d = g_d.at[dest.reshape(-1)].set(
-            new_d.reshape(-1, kappa), mode="drop")
-        return (g_ids, g_d), 0
-
-    (g_ids, g_d), _ = jax.lax.scan(
-        body, (graph.ids, graph.dist),
-        table.reshape(k0 // chunk, chunk, cap))
-    return KnnGraph(g_ids, g_d)
-
-
-# ---------------------------------------------------------------------------
-# Alg. 3 top level
-# ---------------------------------------------------------------------------
-
-def _next_pow2(v: int) -> int:
-    p = 1
-    while p < v:
-        p *= 2
-    return p
-
 
 def build_knn_graph(X: jax.Array, kappa: int, *, xi: int = 64, tau: int = 8,
                     key: jax.Array, bkm_batch: int = 1024,
-                    cap_factor: int = 2, refine_chunk: int = 64,
-                    guided: bool = True) -> KnnGraph:
+                    cap_factor: int = 2, chunk: int = 1024,
+                    guided: bool = True, shards: int = 1,
+                    force: str | None = None,
+                    return_diagnostics: bool = False):
     """Construct an approximate KNN graph by iterated fast k-means (Alg. 3).
 
-    Returns KnnGraph with (n, kappa) ids/dists, ids sorted by distance.
+    Returns KnnGraph with (n, kappa) ids/dists, ids sorted by distance —
+    plus per-round ``BuildDiagnostics`` when ``return_diagnostics=True``.
+    The whole tau-round loop runs device-resident in one trace
+    (``core.graph_build.build_graph``); ``shards=R`` emulates an R-way
+    sharded visit order in the guided pass (bit-exact vs a
+    ``GraphBuilder(mesh=...)`` build on an R-device mesh).
     """
-    n, d = X.shape
-    assert xi & (xi - 1) == 0, "xi must be a power of two"
-    k0 = _next_pow2(max((n + xi - 1) // xi, 1))
-    n_pad = k0 * xi
-    cap = cap_factor * xi
-
-    kpad, kinit, kloop = jax.random.split(key, 3)
-    if n_pad > n:
-        extra = jax.random.randint(kpad, (n_pad - n,), 0, n, dtype=jnp.int32)
-        real_id = jnp.concatenate([jnp.arange(n, dtype=jnp.int32), extra])
-    else:
-        real_id = jnp.arange(n, dtype=jnp.int32)
-    Xp = X[real_id]
-
-    g_ids0 = random_graph(kinit, n, kappa)
-    g_d0 = graph_distances(X, g_ids0)
-    g_ids0, g_d0 = merge_topk(g_ids0, g_d0, g_ids0[:, :0], g_d0[:, :0], kappa)
-    # trash row at index n for dropped scatters
-    graph = KnnGraph(
-        jnp.concatenate([g_ids0, jnp.full((1, kappa), -1, jnp.int32)]),
-        jnp.concatenate([g_d0, jnp.full((1, kappa), INF)]))
-
-    for t in range(tau):
-        kt = jax.random.fold_in(kloop, t)
-        k1, k2 = jax.random.split(kt)
-        assign = two_means_tree(Xp, k0, k1)
-        if guided and t > 0:
-            # one graph-guided engine pass: the intertwined evolving step.
-            # neighbours are real ids (< n), which are also valid padded
-            # rows.  The graph is an ARRAY argument of the engine epoch, so
-            # the tau rounds (and repeated build calls) share one jit trace.
-            state = engine.init_state(Xp, assign, k0)
-            source = engine.graph_source(graph.ids[:n][real_id])
-            state = engine.epoch(Xp, state, source, k2,
-                                 engine.EngineConfig(
-                                     batch_size=min(bkm_batch, n_pad)))
-            assign = state.assign
-        table, _overflow = members_table(assign, k0, cap)
-        graph = refine_graph(Xp, table, real_id, graph, kappa,
-                             min(refine_chunk, k0))
-
-    return KnnGraph(graph.ids[:n], graph.dist[:n])
+    from repro.core.graph_build import GraphBuildConfig, build_graph
+    cfg = GraphBuildConfig(kappa=kappa, source="partition", xi=xi, tau=tau,
+                           cap_factor=cap_factor, bkm_batch=bkm_batch,
+                           guided=guided, chunk=chunk, shards=shards,
+                           force=force)
+    graph, diag = build_graph(X, key, cfg)
+    return (graph, diag) if return_diagnostics else graph

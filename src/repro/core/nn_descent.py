@@ -4,60 +4,37 @@ Vectorised static-shape variant: per round, each sample's candidates are a
 fixed-size sample of its neighbours' neighbours plus approximate reverse
 neighbours; exact distances are merged into the top-kappa lists.  This is the
 "KGraph" baseline of the paper's configuration test (Fig. 4, Table 2).
+
+Since PR 4 this is a thin adapter over ``core.graph_build``: the round loop
+is the shared ``GraphBuilder`` refinement step with ``source='descent'`` —
+the entire ``iters`` loop runs device-resident in one trace, uses the fused
+``kernels.refine_merge`` hot path, and shards over a mesh via
+``GraphBuilder(cfg, mesh=...)`` exactly like the Alg. 3 builder.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.knn_graph import (KnnGraph, graph_distances, merge_topk,
-                                  random_graph)
-
-
-@functools.partial(jax.jit, static_argnums=(2, 4))
-def _round(X: jax.Array, g: KnnGraph, sample: int, key: jax.Array,
-           chunk: int) -> KnnGraph:
-    n, kappa = g.ids.shape
-    ids = jnp.maximum(g.ids, 0)
-
-    # forward candidates: neighbours of neighbours, subsampled to `sample`
-    k1, k2, k3 = jax.random.split(key, 3)
-    pick1 = jax.random.randint(k1, (n, sample), 0, kappa)
-    pick2 = jax.random.randint(k2, (n, sample), 0, kappa)
-    mid = jnp.take_along_axis(ids, pick1, axis=1)             # (n, s)
-    fwd = ids[mid, pick2[..., None][..., 0]]                  # (n, s)
-
-    # approximate reverse neighbours: scatter each edge (i -> j) into a random
-    # slot of j's reverse list (collisions overwrite — a random subsample).
-    r_cap = sample
-    slot = jax.random.randint(k3, (n, kappa), 0, r_cap)
-    rev = jnp.full((n, r_cap), -1, jnp.int32)
-    src = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[:, None],
-                           (n, kappa))
-    rev = rev.at[ids.reshape(-1), slot.reshape(-1)].set(src.reshape(-1))
-
-    cand = jnp.concatenate([fwd, rev], axis=1)                # (n, 2s)
-    own = jnp.arange(n, dtype=jnp.int32)[:, None]
-    cand = jnp.where(cand == own, -1, cand)
-    cd = graph_distances(X, jnp.maximum(cand, 0), chunk)
-    cd = jnp.where(cand < 0, jnp.inf, cd)
-    new_ids, new_d = merge_topk(g.ids, g.dist, cand, cd, kappa)
-    return KnnGraph(new_ids, new_d)
+from repro.core.knn_graph import KnnGraph
 
 
 def nn_descent(X: jax.Array, kappa: int, *, iters: int = 10,
                sample: int | None = None, key: jax.Array,
                chunk: int = 4096) -> KnnGraph:
+    """Approximate KNN graph by NN-Descent; returns (n, kappa) ids/dists.
+
+    Tiny inputs are clamped: n == 1 yields an all-(-1, inf) graph (the
+    random init used to crash on the empty id range), and n <= kappa rows
+    simply carry -1 tails past their n - 1 possible distinct neighbours
+    (the id-dedupe guarantees no self references and no duplicates).
+    """
+    from repro.core.graph_build import GraphBuildConfig, build_graph
     n = X.shape[0]
-    sample = sample or 2 * kappa
-    kinit, kloop = jax.random.split(key)
-    ids = random_graph(kinit, n, kappa)
-    d = graph_distances(X, ids, chunk if n % chunk == 0 else n)
-    ids, d = merge_topk(ids, d, ids[:, :0], d[:, :0], kappa)
-    g = KnnGraph(ids, d)
-    for t in range(iters):
-        g = _round(X, g, sample, jax.random.fold_in(kloop, t),
-                   chunk if n % chunk == 0 else n)
-    return g
+    if n <= 1:
+        return KnnGraph(jnp.full((n, kappa), -1, jnp.int32),
+                        jnp.full((n, kappa), jnp.inf, jnp.float32))
+    cfg = GraphBuildConfig(kappa=kappa, source="descent", tau=iters,
+                           sample=(sample or 2 * kappa), chunk=chunk)
+    graph, _ = build_graph(X, key, cfg)
+    return graph

@@ -3,9 +3,19 @@
 TPU adaptation (DESIGN.md §2): instead of popping the largest cluster, the tree
 is built *level-synchronously*: every level bisects all current clusters in
 parallel.  Clusters are contiguous blocks of a permutation array, so each level
-is one gather + a vmapped 2-means + one sort — all static shapes.  The paper's
-"adjust to equal size" step is realised exactly by the median split on the
-two-means discriminant ``||x - c1||^2 - ||x - c2||^2``.
+is one gather + a segmented 2-means + one lexicographic sort — all static
+shapes.  The paper's "adjust to equal size" step is realised exactly by the
+median split on the two-means discriminant ``||x - c1||^2 - ||x - c2||^2``.
+
+The level loop is a ``lax.scan`` over a *flat* layout (``two_means_scan``):
+each level's clusters are the contiguous length-``m`` blocks of the
+permutation, identified by ``segment = position // m`` — every per-level step
+(centroid seeding, the equal-size refinement, the median split) is expressed
+with segment reductions and one stable multi-key ``lax.sort``, so the shapes
+are level-independent and the whole tree is ONE scan instead of ``log2 k``
+Python-unrolled trace copies.  This is what lets the KNN-graph builder
+(``core.graph_build``) run the tree inside its device-resident tau-round
+scan.
 
 Requires k to be a power of two and n divisible by k (see ``pad_plan``).
 """
@@ -33,40 +43,73 @@ def pad_plan(n: int, k: int) -> Tuple[int, int]:
     return n2, k2
 
 
-def _bisect_discriminant(Xc: jax.Array, key: jax.Array,
-                         refine_iters: int) -> jax.Array:
-    """Equal-size 2-means on one cluster; returns the split discriminant.
+def two_means_scan(X: jax.Array, k: int, key: jax.Array,
+                   refine_iters: int = 4) -> jax.Array:
+    """Equal-size 2M-tree partition of X (n, d) into k clusters; assign (n,).
 
-    Xc: (m, d).  Runs `refine_iters` rounds of {median-split, recompute means}
-    (a boost-2-means with the paper's equal-size adjustment applied every
-    round), then returns the final discriminant; the caller median-splits it.
+    The un-jitted level-scanned implementation — safe to call inside an outer
+    trace (the graph builder's tau-round scan does).  k must be a power of
+    two and divide n (use ``pad_plan`` otherwise).
     """
-    m = Xc.shape[0]
-    Xf = Xc.astype(jnp.float32)
-    k1, k2 = jax.random.split(key)
-    i1 = jax.random.randint(k1, (), 0, m)
-    i2 = (i1 + 1 + jax.random.randint(k2, (), 0, m - 1)) % m
-    c1, c2 = Xf[i1], Xf[i2]
+    n, d = X.shape
+    assert _is_pow2(k), f"k={k} must be a power of two (see pad_plan)"
+    assert n % k == 0, f"n={n} must be divisible by k={k} (see pad_plan)"
+    levels = k.bit_length() - 1
+    pos = jnp.arange(n, dtype=jnp.int32)
+    if levels == 0:
+        return jnp.zeros((n,), jnp.int32)
+    Xf = X.astype(jnp.float32)
 
-    def delta(c1, c2):
-        # ||x-c1||^2 - ||x-c2||^2 = 2 x.(c2-c1) + ||c1||^2 - ||c2||^2
-        return (2.0 * (Xf @ (c2 - c1))
-                + jnp.sum(c1 * c1) - jnp.sum(c2 * c2))
+    def level(perm, lvl):
+        # blocks at this level: contiguous runs of m slots, segment = pos // m
+        m = jnp.int32(n) // (jnp.int32(1) << lvl)
+        seg = pos // m
+        Xp = Xf[perm]                                        # (n, d)
+        tot = jax.ops.segment_sum(Xp, seg, num_segments=k)   # (k, d)
 
-    def body(_, carry):
-        c1, c2 = carry
-        dlt = delta(c1, c2)
-        # left = the m/2 samples with smallest delta (closest to c1)
-        order = jnp.argsort(dlt)
-        left = jnp.zeros((m,), jnp.float32).at[order[: m // 2]].set(1.0)
-        tot1 = jnp.maximum(jnp.sum(left), 1.0)
-        tot2 = jnp.maximum(m - jnp.sum(left), 1.0)
-        c1n = (left[:, None] * Xf).sum(0) / tot1
-        c2n = ((1.0 - left)[:, None] * Xf).sum(0) / tot2
-        return c1n, c2n
+        kl = jax.random.fold_in(key, lvl)
+        k1, k2 = jax.random.split(kl)
+        safe_m = jnp.maximum(m, 1)
+        i1 = jax.random.randint(k1, (k,), 0, safe_m)
+        i2 = (i1 + 1 + jax.random.randint(k2, (k,), 0,
+                                          jnp.maximum(m - 1, 1))) % safe_m
+        start = jnp.arange(k, dtype=jnp.int32) * m
+        c1 = Xp[jnp.clip(start + i1, 0, n - 1)]              # (k, d)
+        c2 = Xp[jnp.clip(start + i2, 0, n - 1)]
 
-    c1, c2 = jax.lax.fori_loop(0, refine_iters, body, (c1, c2))
-    return delta(c1, c2)
+        def delta(c1, c2):
+            # ||x-c1||^2 - ||x-c2||^2 = 2 x.(c2-c1) + ||c1||^2 - ||c2||^2
+            a = c2[seg] - c1[seg]                            # (n, d)
+            off = (jnp.sum(c1 * c1, -1) - jnp.sum(c2 * c2, -1))[seg]
+            return 2.0 * jnp.sum(Xp * a, -1) + off
+
+        def left_mask(dlt):
+            # left = the m/2 smallest-delta slots of each block (median split)
+            _, _, srt = jax.lax.sort((seg, dlt, pos), num_keys=2,
+                                     is_stable=True)
+            half = (pos % safe_m) < (m // 2)
+            return jnp.zeros((n,), bool).at[srt].set(half)
+
+        def refine(_, carry):
+            c1, c2 = carry
+            w = left_mask(delta(c1, c2)).astype(jnp.float32)
+            s1 = jax.ops.segment_sum(Xp * w[:, None], seg, num_segments=k)
+            n1 = jax.ops.segment_sum(w, seg, num_segments=k)
+            mf = m.astype(jnp.float32)
+            c1n = s1 / jnp.maximum(n1, 1.0)[:, None]
+            c2n = (tot - s1) / jnp.maximum(mf - n1, 1.0)[:, None]
+            return c1n, c2n
+
+        c1, c2 = jax.lax.fori_loop(0, refine_iters, refine, (c1, c2))
+        # final equal split: stable lexicographic (segment, delta) sort — the
+        # first/last m/2 slots of each block become the two children
+        _, _, perm = jax.lax.sort((seg, delta(c1, c2), perm), num_keys=2,
+                                  is_stable=True)
+        return perm, None
+
+    perm, _ = jax.lax.scan(level, pos, jnp.arange(levels, dtype=jnp.int32))
+    block = n // k
+    return jnp.zeros((n,), jnp.int32).at[perm].set(pos // block)
 
 
 @functools.partial(jax.jit, static_argnums=(1, 3))
@@ -75,24 +118,6 @@ def two_means_tree(X: jax.Array, k: int, key: jax.Array,
     """Partition X (n, d) into k equal-size clusters; returns assign (n,).
 
     k must be a power of two and divide n (use ``pad_plan`` otherwise).
+    Jitted wrapper of ``two_means_scan``.
     """
-    n, d = X.shape
-    assert _is_pow2(k), f"k={k} must be a power of two (see pad_plan)"
-    assert n % k == 0, f"n={n} must be divisible by k={k} (see pad_plan)"
-    levels = k.bit_length() - 1
-
-    perm = jnp.arange(n, dtype=jnp.int32)
-    for lvl in range(levels):
-        c = 1 << lvl
-        m = n // c
-        keys = jax.random.split(jax.random.fold_in(key, lvl), c)
-        Xp = X[perm].reshape(c, m, d)
-        dlt = jax.vmap(_bisect_discriminant, in_axes=(0, 0, None))(
-            Xp, keys, refine_iters)                       # (c, m)
-        order = jnp.argsort(dlt, axis=1).astype(jnp.int32)  # (c, m)
-        perm = jnp.take_along_axis(perm.reshape(c, m), order, axis=1).reshape(n)
-
-    block = n // k
-    assign = jnp.zeros((n,), jnp.int32).at[perm].set(
-        (jnp.arange(n, dtype=jnp.int32) // block))
-    return assign
+    return two_means_scan(X, k, key, refine_iters)

@@ -13,6 +13,7 @@ from repro.kernels import gather_score as _gs
 from repro.kernels import ivf_scan as _ivf
 from repro.kernels import pairwise_topk as _pt
 from repro.kernels import ref as _ref
+from repro.kernels import refine_merge as _rm
 
 
 def _on_tpu() -> bool:
@@ -53,6 +54,16 @@ def gather_score(x: jax.Array, u: jax.Array, cand: jax.Array, D: jax.Array,
     if force == "ref" or (force is None and not _on_tpu()):
         return _ref.gather_score(x, u, cand, D, cnt, mode=mode)
     return _gs.gather_score(x, u, cand, D, cnt, mode=mode,
+                            interpret=(force == "interpret"))
+
+
+def refine_merge(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
+                 old_ids: jax.Array, old_d: jax.Array, Xsrc: jax.Array, *,
+                 force: str | None = None):
+    """(B, C) candidate rows merged into (B, κ) top-κ lists, gather fused."""
+    if force == "ref" or (force is None and not _on_tpu()):
+        return _ref.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc)
+    return _rm.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc,
                             interpret=(force == "interpret"))
 
 

@@ -116,6 +116,55 @@ def gather_score(x: jax.Array, u: jax.Array, cand: jax.Array, D: jax.Array,
     return gain + loss_u[:, None]
 
 
+def refine_merge(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
+                 old_ids: jax.Array, old_d: jax.Array, Xsrc: jax.Array):
+    """Fused candidate-distance + top-κ merge oracle (graph-build hot loop).
+
+    x: (B, d) row vectors; rows: (B, C) int32 gather indices into Xsrc
+    (pre-clamped >= 0); cand_ids: (B, C) int32 neighbour ids with -1 =
+    invalid; old_ids/old_d: (B, κ) current lists (-1/inf padded);
+    Xsrc: (N, d) candidate vector source.
+
+    Returns (ids (B, κ) int32, d (B, κ) float32): exact squared distances to
+    the candidates merged into the old lists — ascending by distance,
+    id-deduped (duplicates keep their best distance), -1/inf padded.  The
+    selection is an iterative first-minimum loop with retire-all-copies on
+    the selected id — exactly the Pallas kernel's order, and the feature dim
+    is zero-padded to full 128-wide TPU lanes so every reduction runs over
+    the kernel's shapes (bitwise-matching outputs in interpret mode).
+    """
+    B, d = x.shape
+    C = rows.shape[1]
+    kappa = old_ids.shape[1]
+    d_pad = (-d) % 128
+    xf = x.astype(jnp.float32)
+    Y = Xsrc[rows].astype(jnp.float32)                     # (B, C, d)
+    if d_pad:
+        xf = jnp.pad(xf, ((0, 0), (0, d_pad)))
+        Y = jnp.pad(Y, ((0, 0), (0, 0), (0, d_pad)))
+    diff = Y - xf[:, None, :]
+    cd = jnp.sum(diff * diff, axis=-1)                     # (B, C)
+
+    L = kappa + C
+    ent_d = jnp.concatenate([old_d.astype(jnp.float32), cd], axis=-1)
+    ent_i = jnp.concatenate([old_ids, cand_ids], axis=-1).astype(jnp.int32)
+    ent_d = jnp.where(ent_i < 0, jnp.inf, ent_d)
+    col = jnp.arange(L, dtype=jnp.int32)
+    out_d, out_i = [], []
+    for j in range(kappa):
+        mv = jnp.min(ent_d, axis=-1)                       # (B,)
+        hit = ent_d == mv[:, None]
+        pos = jnp.min(jnp.where(hit, col, L), axis=-1)     # first minimum
+        at = col[None, :] == pos[:, None]
+        sid = jnp.sum(jnp.where(at, ent_i, 0), axis=-1)
+        valid = mv < jnp.inf
+        out_d.append(jnp.where(valid, mv, jnp.inf))
+        out_i.append(jnp.where(valid, sid, -1))
+        # retire the winner and every other copy of its id (dedupe)
+        ent_d = jnp.where((ent_i == sid[:, None]) | at, jnp.inf, ent_d)
+    return jnp.stack(out_i, axis=-1), jnp.stack(out_d, axis=-1)
+
+
 def assign_centroids(X: jax.Array, C: jax.Array):
     """Nearest-centroid assignment.
 

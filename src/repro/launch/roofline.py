@@ -60,6 +60,17 @@ KERNEL_INVENTORY = {
         hbm_bytes=lambda B, C, d: 4.0 * (B * d + B * (C + 1) * (d + 1)
                                          + B * C),
     ),
+    "refine_merge": dict(
+        desc="fused candidate-distance + top-κ merge (graph-build "
+             "refinement hot path): candidate rows stream HBM→VMEM by "
+             "scalar-prefetch indexing, the merge runs in-register — "
+             "neither the (B, C, d) gather nor the (B, C) distance "
+             "matrix reaches HBM",
+        flops=lambda B, C, d, kappa: (3.0 * B * C * d
+                                      + 4.0 * B * kappa * (kappa + C)),
+        hbm_bytes=lambda B, C, d, kappa: 4.0 * (B * d + B * C * d + B * C
+                                                + 4.0 * B * kappa),
+    ),
 }
 
 _DTYPE_BYTES = {

@@ -39,6 +39,14 @@ def test_closure_kmeans_quality(blobs):
     assert h[-1] <= hl[-1] * 1.25  # close to Lloyd (paper: good trade-off)
 
 
+def test_closure_kmeans_non_pow2_leaf(blobs):
+    """leaf need not be a power of two (only the tree's cluster COUNT is);
+    regression for the adapter rewrite — the builder pads n to k0 * leaf."""
+    a, _, h = closure_kmeans(blobs[:1024], 16, iters=4, leaf=24,
+                             key=jax.random.PRNGKey(5))
+    assert a.shape == (1024,) and h[-1] <= h[0]
+
+
 def test_nn_descent_recall(blobs, blob_gt):
     g = nn_descent(blobs, 16, iters=8, key=jax.random.PRNGKey(4))
     assert float(recall_top1(g.ids, blob_gt)) > 0.85

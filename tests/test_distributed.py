@@ -253,6 +253,56 @@ def test_sharded_run_parity_and_single_sync_4dev():
     assert "SHARDED_RUN_OK" in r.stdout, r.stderr[-3000:]
 
 
+# ---------------------------------------------------------------------------
+# sharded graph build: the whole tau-round loop in ONE shard_map trace —
+# bit-exact parity with the single-device build (`GraphBuildConfig.shards=R`
+# emulation), O(1) host syncs enforced by the transfer guard, both sources.
+# ---------------------------------------------------------------------------
+
+CODE_GRAPH_BUILD = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.data import gmm_blobs
+from repro.core import GraphBuildConfig, GraphBuilder, build_graph
+from repro.core.distributed import sharded_graph_builder
+
+key = jax.random.PRNGKey(0)
+n, d, R = 2048, 16, 4
+assert len(jax.devices()) == R
+X = gmm_blobs(key, n, d, 32)
+mesh = jax.make_mesh((R,), ("data",))
+
+# Alg. 3 partition source: bit-exact parity, one host sync per build
+cfg = GraphBuildConfig(kappa=8, xi=32, tau=3, chunk=256, shards=R)
+builder = sharded_graph_builder(mesh, cfg)
+g1, d1 = jax.device_get(build_graph(X, key, cfg))   # single-device, R-way
+jax.block_until_ready(builder.build(X, key)[0].ids)  # warm the program
+with jax.transfer_guard_device_to_host("disallow"):
+    out = builder.build(X, key)
+g2, d2 = jax.device_get(out)                         # the ONE sync
+np.testing.assert_array_equal(g1.ids, g2.ids)
+np.testing.assert_array_equal(g1.dist, g2.dist)
+np.testing.assert_array_equal(d1.overflow, d2.overflow)
+np.testing.assert_array_equal(d1.guided_moves, d2.guided_moves)
+assert int(d2.guided_moves[0]) == 0 and int(d2.guided_moves[1]) > 0
+
+# NN-Descent source through the same sharded core
+cfgd = GraphBuildConfig(kappa=8, source="descent", tau=3, chunk=256)
+gd1, _ = jax.device_get(build_graph(X, key, cfgd))
+gd2, _ = jax.device_get(GraphBuilder(cfgd, mesh=mesh).build(X, key))
+np.testing.assert_array_equal(gd1.ids, gd2.ids)
+np.testing.assert_array_equal(gd1.dist, gd2.dist)
+print("GRAPH_BUILD_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_graph_build_parity_and_single_sync_4dev():
+    """Acceptance: sharded build == single-device build bit-exactly on a
+    4-virtual-device mesh, O(1) host syncs per build, both sources."""
+    r = _run(CODE_GRAPH_BUILD, devices=4)
+    assert "GRAPH_BUILD_OK" in r.stdout, r.stderr[-3000:]
+
+
 @pytest.mark.slow
 def test_cluster_large_example_indivisible_n_4dev():
     """examples/cluster_large.py multi-device path: n % n_dev != 0 no longer

@@ -118,3 +118,76 @@ def test_gather_score_dispatch_cpu_uses_ref():
     np.testing.assert_array_equal(
         np.asarray(ops.gather_score(x, u, cand, D, cnt)),
         np.asarray(ref.gather_score(x, u, cand, D, cnt)))
+
+
+# ---------------------------------------------------------------------------
+# refine_merge: fused candidate-distance + top-κ merge (graph-build hot path)
+# ---------------------------------------------------------------------------
+
+def _refine_merge_case(B, d, C, kappa, N, seed):
+    key = jax.random.PRNGKey(seed)
+    Xsrc = jax.random.normal(key, (N, d)) * 3
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, d)) * 3
+    rows = jax.random.randint(jax.random.fold_in(key, 2), (B, C), 0, N)
+    mask = jax.random.bernoulli(jax.random.fold_in(key, 3), 0.8, (B, C))
+    cand_ids = jnp.where(mask, rows, -1)
+    old_ids = jax.random.randint(jax.random.fold_in(key, 4), (B, kappa),
+                                 -1, N)
+    old_d = jnp.abs(jax.random.normal(jax.random.fold_in(key, 5),
+                                      (B, kappa)))
+    old_d = jnp.where(old_ids < 0, jnp.inf, old_d)
+    return x, rows, cand_ids, old_ids, old_d, Xsrc
+
+
+@pytest.mark.parametrize("B,d,C,kappa,N", [(7, 24, 5, 4, 50),
+                                           (16, 128, 12, 8, 64),
+                                           (4, 60, 33, 16, 40),
+                                           (8, 16, 1, 3, 9)])
+def test_refine_merge_interpret_exact(B, d, C, kappa, N):
+    """Acceptance: the fused distance+merge kernel matches ref.py EXACTLY
+    (bitwise) in interpret mode — same lane-padded reductions, same
+    first-minimum/retire-all selection order."""
+    from repro.kernels import refine_merge as rm
+    args = _refine_merge_case(B, d, C, kappa, N, B * d + C)
+    want = ref.refine_merge(*args)
+    got = rm.refine_merge(*args, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_refine_merge_matches_merge_topk():
+    """ref.refine_merge IS the three-argsort merge_topk on exact distances
+    (validated pointwise; distinct random distances -> identical lists)."""
+    from repro.core.knn_graph import merge_topk
+    x, rows, cand_ids, old_ids, old_d, Xsrc = _refine_merge_case(
+        12, 24, 9, 6, 40, 7)
+    ids, d = ref.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc)
+    Y = Xsrc[rows]
+    cd = jnp.sum((Y - x[:, None, :]) ** 2, axis=-1)
+    cd = jnp.where(cand_ids < 0, jnp.inf, cd)
+    want_ids, want_d = merge_topk(old_ids, old_d, cand_ids, cd, 6)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want_ids))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(want_d),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_refine_merge_dedupes_and_sorts():
+    """Duplicate candidate ids keep their best distance; output ascending."""
+    x, rows, cand_ids, old_ids, old_d, Xsrc = _refine_merge_case(
+        6, 16, 12, 5, 8, 11)          # N=8 << C=12 -> many duplicate ids
+    ids, d = ref.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc)
+    ids_n, d_n = np.asarray(ids), np.asarray(d)
+    for r in range(6):
+        valid = ids_n[r][ids_n[r] >= 0]
+        assert len(valid) == len(set(valid.tolist()))
+        fin = d_n[r][np.isfinite(d_n[r])]
+        assert np.all(np.diff(fin) >= 0)
+        assert len(fin) >= len(valid)
+
+
+def test_refine_merge_dispatch_cpu_uses_ref():
+    args = _refine_merge_case(5, 16, 4, 3, 20, 2)
+    got = ops.refine_merge(*args)
+    want = ref.refine_merge(*args)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))

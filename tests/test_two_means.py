@@ -42,3 +42,30 @@ def test_deterministic_given_key(key):
     a1 = two_means_tree(X, 8, key)
     a2 = two_means_tree(X, 8, key)
     assert jnp.array_equal(a1, a2)
+
+
+def test_non_pow2_n_divisible_by_k(key):
+    """The flat level-scan only needs k | n, not n a power of two."""
+    n, k = 96 * 8, 8
+    X = gmm_blobs(key, n, 8, 8)
+    a = two_means_tree(X, k, key)
+    sizes = jnp.bincount(a, length=k)
+    assert int(sizes.min()) == int(sizes.max()) == n // k
+
+
+def test_two_means_scan_inside_outer_trace(key):
+    """two_means_scan composes into an outer jit/scan (the graph builder's
+    tau-round loop) — traced keys, one trace, same result as the wrapper."""
+    from repro.core.two_means import two_means_scan
+    X = gmm_blobs(key, 512, 8, 8)
+
+    @jax.jit
+    def outer(key):
+        return jax.lax.scan(
+            lambda c, t: (c, two_means_scan(X, 8, jax.random.fold_in(key, t))),
+            0, jnp.arange(2))[1]
+
+    a = outer(key)
+    assert a.shape == (2, 512)
+    want = two_means_tree(X, 8, jax.random.fold_in(key, 1))
+    assert jnp.array_equal(a[1], want)
