@@ -3,20 +3,39 @@
 The coarse quantizer is the paper's GK-means; the claim under test is that
 its clustering is good enough that probing a few percent of the database
 reaches ANN-grade recall@10, competitive with greedy KNN-graph search.
+
+Modes (the CI bench-smoke step runs ``--quick --mode both``):
+
+  single   the nprobe sweep (per-query and query-grouped scan layouts) plus
+           the graph-search baseline; pins recall@10 = 1.0 at ~0.4% scanned
+           (nprobe=1 on the quick synth workload — the PR 1 pin);
+  sharded  4 forced-host-device ``core.distributed.ShardedIvf`` serving in a
+           child process (``benchmarks.common.run_forced_host_child``):
+           bit-exact parity with single-device search and exactly 1
+           transfer-guard-verified host sync per query batch.
+
+Emits ``BENCH_anns_ivf.json``.
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
-import jax
-import jax.numpy as jnp
-
-from repro import index as ivf
-from repro.core import build_knn_graph, gk_means, graph_search
-from repro.data import gmm_blobs
+SHARDED_DEVICES = 4
+OUT_JSON = "BENCH_anns_ivf.json"
+SHARDED_JSON = "BENCH_anns_ivf_sharded.json"
 
 
-def run(quick: bool = True):
+def run_single(quick: bool = True):
+    import jax
+    import jax.numpy as jnp
+
+    from repro import index as ivf
+    from repro.core import build_knn_graph, gk_means, graph_search
+    from repro.data import gmm_blobs
+
     n, d, k = (32768, 64, 256) if quick else (1_000_000, 128, 4096)
     X = gmm_blobs(jax.random.PRNGKey(0), n, d, 512)
     nq, topk = 256, 10
@@ -38,6 +57,7 @@ def run(quick: bool = True):
     rows.append(("ivf/build", (time.perf_counter() - t0) * 1e6,
                  f"k={res.k} rows={index.n_rows}"))
 
+    rec = {"n": n, "d": d, "k": k, "topk": topk}
     for nprobe in (1, 2, 4, 8, 16, 32):
         f = lambda qq: ivf.search(index, qq, topk=topk, nprobe=nprobe)
         ids, _ = f(q)
@@ -46,8 +66,26 @@ def run(quick: bool = True):
         jax.block_until_ready(ids)
         us_q = (time.perf_counter() - t0) * 1e6 / nq
         frac = ivf.scan_fraction(index, q, nprobe=nprobe)
+        r = recall(ids)
         rows.append((f"ivf/nprobe={nprobe}", us_q,
-                     f"recall@10={recall(ids):.3f} scan={100 * frac:.1f}%"))
+                     f"recall@10={r:.3f} scan={100 * frac:.1f}%"))
+        if nprobe == 1:
+            rec["recall_at_10_nprobe1"] = r
+            rec["scan_frac_nprobe1"] = frac
+
+    # query-grouped scan layout: same probes, tile loads amortized per group
+    for nprobe, G in ((8, 8), (16, 8)):
+        f = lambda qq: ivf.search(index, qq, topk=topk, nprobe=nprobe,
+                                  qgroup=G)
+        gids, _ = f(q)
+        t0 = time.perf_counter()
+        gids, _ = f(q)
+        jax.block_until_ready(gids)
+        us_q = (time.perf_counter() - t0) * 1e6 / nq
+        rows.append((f"ivf/grouped_nprobe={nprobe}_G={G}", us_q,
+                     f"recall@10={recall(gids):.3f}"))
+        if nprobe == 8:
+            rec["recall_at_10_grouped_nprobe8"] = recall(gids)
 
     g = build_knn_graph(X, 16, xi=64, tau=3, key=jax.random.PRNGKey(2))
     for ef, iters in ((32, 24), (64, 48), (96, 64)):
@@ -60,9 +98,118 @@ def run(quick: bool = True):
         us_q = (time.perf_counter() - t0) * 1e6 / nq
         rows.append((f"graph/ef={ef}", us_q,
                      f"recall@10={recall(ids):.3f}"))
-    return rows
+    return rec, rows
+
+
+def _sharded_child(quick: bool):
+    """ShardedIvf serving on forced host devices + bit-exact parity check."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import index as ivf
+    from repro.core import gk_means
+    from repro.core.distributed import ShardedIvf
+    from repro.data import gmm_blobs
+
+    n, d, k = (8192, 32, 64) if quick else (131072, 64, 512)
+    R = len(jax.devices())
+    X = gmm_blobs(jax.random.PRNGKey(0), n, d, 128)
+    nq, topk, nprobe = 128, 10, 8
+    q = X[:nq] + 0.05 * jax.random.normal(jax.random.PRNGKey(9), (nq, d))
+    d2 = (jnp.sum(q * q, -1)[:, None] + jnp.sum(X * X, -1)[None]
+          - 2.0 * (q @ X.T))
+    gt = jnp.argsort(d2, axis=1)[:, :topk]
+
+    res = gk_means(X, k, kappa=16, xi=64, tau=3, iters=6,
+                   key=jax.random.PRNGKey(1))
+    index = ivf.build_ivf(X, res, block_rows=64)
+    mesh = jax.make_mesh((R,), ("data",))
+    sivf = ShardedIvf(mesh, index)
+
+    i1, d1 = jax.device_get(ivf.search(index, q, topk=topk, nprobe=nprobe))
+    jax.block_until_ready(sivf.search(q, topk=topk, nprobe=nprobe))  # warm
+
+    # ONE host sync per query batch: the dispatch makes no device->host
+    # transfer; the single device_get below is the only sync
+    t0 = time.perf_counter()
+    with jax.transfer_guard_device_to_host("disallow"):
+        out = sivf.search(q, topk=topk, nprobe=nprobe)
+    i2, d2s = jax.device_get(out)                        # the ONE sync
+    t_sharded = time.perf_counter() - t0
+
+    np.testing.assert_array_equal(i1, i2)
+    np.testing.assert_array_equal(d1, d2s)
+    hits = (i2[:, :, None] == np.asarray(gt)[:, None, :]).any(-1)
+    rec10 = float(hits.mean())
+
+    rec = {
+        "n": n, "d": d, "k": k, "devices": R, "nq": nq, "nprobe": nprobe,
+        "sharded_search_s": t_sharded,
+        "us_per_query_sharded": t_sharded * 1e6 / nq,
+        "recall_at_10_sharded": rec10,
+        "syncs_per_query_batch": 1,
+        "parity_bitexact_vs_single_device": True,
+    }
+    with open(SHARDED_JSON, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
+    """Sharded mode via a child process with forced host devices (the parent
+    JAX runtime is already initialised with the real device count)."""
+    try:
+        from benchmarks.common import run_forced_host_child
+    except ImportError:       # run directly: benchmarks/ itself is sys.path
+        from common import run_forced_host_child
+    run_forced_host_child(__file__, quick, devices)
+    with open(SHARDED_JSON) as f:
+        rec = json.load(f)
+    os.remove(SHARDED_JSON)
+    return rec, [
+        ("ivf/sharded_search", rec["sharded_search_s"] * 1e6,
+         f"us_per_query={rec['us_per_query_sharded']:.1f};syncs=1;"
+         f"devices={rec['devices']};parity=bitexact;"
+         f"recall@10={rec['recall_at_10_sharded']:.3f}"),
+    ]
+
+
+def run(quick: bool = True):
+    """Both modes — the benchmarks.run harness entry point."""
+    single, rows = run_single(quick)
+    sharded, rows2 = run_sharded(quick)
+    with open(OUT_JSON, "w") as f:
+        json.dump({"single": single, "sharded": sharded}, f, indent=1)
+    return rows + rows2
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--quick", dest="quick", action="store_true",
+                      default=True)
+    size.add_argument("--full", dest="quick", action="store_false")
+    ap.add_argument("--mode", default="both",
+                    choices=["single", "sharded", "both"])
+    ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    args = ap.parse_args()
+    if args.child:
+        _sharded_child(args.quick)
+        return
+    out = {}
+    rows = []
+    if args.mode in ("single", "both"):
+        out["single"], r = run_single(args.quick)
+        rows += r
+    if args.mode in ("sharded", "both"):
+        out["sharded"], r = run_sharded(args.quick)
+        rows += r
+    with open(OUT_JSON, "w") as f:
+        json.dump(out, f, indent=1)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
 
 
 if __name__ == "__main__":
-    from benchmarks.common import emit
-    emit(run(quick=True))
+    main()

@@ -35,6 +35,16 @@ Graph construction shards with the same conventions:
 trace — rows and graph rows sharded, candidate distances and merges local,
 O(1) host syncs per build, bit-exact against the single-device build with
 ``GraphBuildConfig(shards=R)``.
+
+IVF serving shards by CELL rather than by row: ``ShardedIvf`` re-packs an
+``IvfIndex``'s inverted lists into equal per-shard slabs
+(``index.ivf.shard_lists``), keeps queries and centroids replicated, and
+runs probe -> local list scan -> one all-gather of per-shard local top-k ->
+in-trace merge inside ONE shard_map trace per query batch.  The local scans
+return RAW partial distances and the merge is the kernels' own stable
+first-minimum selection, so the sharded search is bit-exact with the
+single-device ``index.probe.search`` (no ``n % R`` constraint: slab padding
+rows carry id -1 and can never surface).
 """
 from __future__ import annotations
 
@@ -43,7 +53,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from repro.core.engine import (CandidateSource, EngineConfig, dense_source,
@@ -145,6 +155,98 @@ def make_sharded_epoch(mesh: Mesh, *, data_axes: Tuple[str, ...] = DATA_AXES,
 def sharded_distortion(mesh: Mesh, data_axes: Tuple[str, ...] = DATA_AXES):
     """Back-compat shim: the ``distortion`` entry point of a ShardedEngine."""
     return ShardedEngine(mesh, data_axes=data_axes).distortion
+
+
+class ShardedIvf:
+    """Mesh-resident IVF index serving: one shard_map trace per query batch.
+
+    Wraps an ``index.IvfIndex`` for multi-device serving with the engine's
+    mesh conventions: the packed inverted lists are sharded by cell over
+    ``data_axes`` (``index.ivf.shard_lists`` equal-slab layout), queries and
+    the coarse quantizer stay replicated, and ``search`` runs the whole
+    probe -> local fused scan -> all-gather(local top-k) -> merge path in
+    one jitted shard_map program — one dispatch and one host sync per query
+    batch (the caller's ``device_get``).
+
+    Parity: every packed row lives on exactly one shard and local scans
+    return raw partial distances, merged with the same stable first-minimum
+    selection the scan kernels use, so results are bit-exact with the
+    single-device ``index.probe.search(index, Q, ...)`` (tests pin this on 4
+    virtual devices under a device->host transfer guard).
+    """
+
+    def __init__(self, mesh: Mesh, index, *,
+                 data_axes: Tuple[str, ...] = DATA_AXES):
+        from repro.index.ivf import shard_lists
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.shards = math.prod(mesh.shape[a] for a in self.data_axes)
+        # keep only what serving needs (coarse quantizer + static layout
+        # scalars), NOT the unsharded index — holding index.vecs alive would
+        # double resident database memory for the replica's lifetime
+        self.k = index.k
+        self.block_rows = index.block_rows
+        self.max_list_tiles = index.max_list_tiles
+        row, rep = (NamedSharding(mesh, P(self.data_axes)),
+                    NamedSharding(mesh, P()))
+        self.centroids = jax.device_put(index.centroids, rep)
+        # place the slabs on the mesh NOW: leaving them on the default
+        # device would make every search() dispatch re-distribute the whole
+        # packed database to satisfy the shard_map in_specs
+        p = shard_lists(index, self.shards)
+        self.parts = p._replace(vecs=jax.device_put(p.vecs, row),
+                                ids=jax.device_put(p.ids, row),
+                                starts=jax.device_put(p.starts, row),
+                                caps=jax.device_put(p.caps, row))
+        self._progs = {}
+
+    def search(self, Q: jax.Array, *, topk: int = 10, nprobe: int = 8):
+        """Top-k over the sharded lists -> (ids (q, topk), d2 (q, topk))."""
+        assert nprobe >= 1, nprobe
+        nprobe = min(nprobe, self.k)
+        if self.max_list_tiles == 0:      # every list empty: nothing to scan
+            from repro.index.probe import _no_candidates
+            return _no_candidates(Q.shape[0], topk)
+        p = self.parts
+        return self._prog(topk, nprobe)(Q, p.vecs, p.ids, p.starts, p.caps,
+                                        self.centroids)
+
+    def _prog(self, topk: int, nprobe: int):
+        key = (topk, nprobe)
+        if key in self._progs:
+            return self._progs[key]
+        from repro.index.probe import build_tile_map, merge_shard_topk
+        from repro.kernels import ops as kops
+        from repro.kernels.ref import finalize_d2
+        bl = self.block_rows
+        max_tiles = self.max_list_tiles
+        null_loc = self.parts.rows_loc // bl - 1    # last local tile: holes
+        axes = self.data_axes
+        R = self.shards
+
+        def body(Q, svecs, sids, sstarts, scaps, C):
+            # replicated probe: every shard computes the same cell ids
+            cids, _ = kops.probe_centroids(Q, C, nprobe)
+            tm = build_tile_map(cids, sstarts, scaps, max_tiles=max_tiles,
+                                block_rows=bl, null_tile=null_loc)
+            lid, lod = kops.ivf_scan(Q, svecs, sids, tm, block_rows=bl,
+                                     topk=topk, raw=True)
+            agi, agd = jax.lax.all_gather((lid, lod), axes)  # (R, q, topk)
+            ids, od = merge_shard_topk(agi.reshape(R, *lid.shape),
+                                       agd.reshape(R, *lod.shape), topk)
+            return finalize_d2(ids, od, Q)
+
+        row, rep = P(self.data_axes), P()
+        prog = jax.jit(shard_map(
+            body, mesh=self.mesh,
+            in_specs=(rep, row, row, row, row, rep), out_specs=(rep, rep),
+            check_rep=False))
+        self._progs[key] = prog
+        return prog
+
+    def __repr__(self):
+        return (f"ShardedIvf(shards={self.shards}, k={self.k}, "
+                f"rows_loc={self.parts.rows_loc})")
 
 
 def sharded_graph_builder(mesh: Mesh, cfg=None, *,

@@ -6,13 +6,16 @@ inverted lists, `search` probes the top-p cells per query and streams only
 those lists through the fused `ivf_scan` kernel, and `store` persists the
 whole index so serving restarts don't re-cluster.
 """
-from repro.index.ivf import IvfIndex, add, build_ivf, remove, repack
-from repro.index.probe import (build_tile_map, exhaustive_search,
+from repro.index.ivf import (IvfIndex, ShardedLists, add, build_ivf, remove,
+                             repack, shard_lists)
+from repro.index.probe import (build_group_map, build_tile_map,
+                               exhaustive_search, merge_shard_topk,
                                scan_fraction, search)
 from repro.index.store import load_index, save_index
 
 __all__ = [
-    "IvfIndex", "add", "build_ivf", "build_tile_map", "exhaustive_search",
-    "load_index", "remove", "repack", "save_index", "scan_fraction",
-    "search",
+    "IvfIndex", "ShardedLists", "add", "build_group_map", "build_ivf",
+    "build_tile_map", "exhaustive_search", "load_index", "merge_shard_topk",
+    "remove", "repack", "save_index", "scan_fraction", "search",
+    "shard_lists",
 ]

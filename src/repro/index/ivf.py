@@ -18,7 +18,7 @@ proportional to live data.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Optional
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -183,6 +183,70 @@ def add(index: IvfIndex, X_new: jax.Array,
         out = _pack(X_all, id_all, a_all, np.asarray(index.centroids),
                     index.k, index.block_rows, index.repack_threshold)
     return out
+
+
+class ShardedLists(NamedTuple):
+    """Per-shard re-pack of an index's inverted lists (cell-sharded).
+
+    The stacked arrays shard over their leading axis with ``P(data_axes)``
+    (shard_map equal-shard layout): each shard owns a contiguous slab of
+    ``rows_loc`` packed rows (its cells' lists back-to-back, hole-padded to
+    the common size, plus the trailing local null tile) and a full (k,)
+    start/cap table whose unowned cells have ``caps == 0`` — so the shard's
+    local `build_tile_map` sends unowned probes straight to its null tile.
+    """
+    vecs: jax.Array       # (R * rows_loc, d)
+    ids: jax.Array        # (R * rows_loc,) int32, -1 = hole
+    starts: jax.Array     # (R * k,) int32 LOCAL row offsets (0 if unowned)
+    caps: jax.Array       # (R * k,) int32 local caps, 0 for unowned cells
+    owner: np.ndarray     # (k,) shard owning each cell
+    rows_loc: int         # packed rows per shard incl. the local null tile
+    shards: int
+
+
+def shard_lists(index: IvfIndex, shards: int) -> ShardedLists:
+    """Partition the packed lists across `shards` by cell.
+
+    Cells are assigned greedily (descending capacity, ties by cell id) to
+    the least-loaded shard, so slab padding — the rows a shard holds beyond
+    the largest shard's live capacity, never surfaced because their ids are
+    -1 — stays small even when ``k % shards != 0`` or list sizes are skewed.
+    """
+    assert shards >= 1, shards
+    bl = index.block_rows
+    d = index.dim
+    k = index.k
+    ids = np.asarray(index.ids)
+    vecs = np.asarray(index.vecs)
+    starts = np.asarray(index.starts)
+    caps = np.asarray(index.caps)
+
+    owner = np.zeros((k,), dtype=np.int64)
+    load = np.zeros((shards,), dtype=np.int64)
+    for c in np.lexsort((np.arange(k), -caps)):
+        r = int(np.argmin(load))
+        owner[c] = r
+        load[r] += int(caps[c])
+    rows_loc = int(load.max()) + bl                   # + local null tile
+
+    svecs = np.zeros((shards * rows_loc, d), dtype=np.float32)
+    sids = np.full((shards * rows_loc,), -1, dtype=np.int32)
+    sstarts = np.zeros((shards * k,), dtype=np.int32)
+    scaps = np.zeros((shards * k,), dtype=np.int32)
+    fill = np.zeros((shards,), dtype=np.int64)
+    for c in range(k):
+        r = int(owner[c])
+        s, cap = int(starts[c]), int(caps[c])
+        dst = r * rows_loc + int(fill[r])
+        svecs[dst:dst + cap] = vecs[s:s + cap]
+        sids[dst:dst + cap] = ids[s:s + cap]
+        sstarts[r * k + c] = int(fill[r])
+        scaps[r * k + c] = cap
+        fill[r] += cap
+    return ShardedLists(vecs=jnp.asarray(svecs), ids=jnp.asarray(sids),
+                        starts=jnp.asarray(sstarts),
+                        caps=jnp.asarray(scaps), owner=owner,
+                        rows_loc=rows_loc, shards=shards)
 
 
 def remove(index: IvfIndex, rm_ids) -> IvfIndex:

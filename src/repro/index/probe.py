@@ -3,6 +3,19 @@
 The recall/latency knob is `nprobe` (cluster-closure-style multi-probe): each
 query scans the `nprobe` nearest cells' lists instead of just the nearest,
 trading a linear increase in scanned rows for recall.
+
+Two scan layouts share the same probe front-end:
+
+  * per-query (default): one grid row per query streams that query's probed
+    tiles — simplest, and the layout the mesh-sharded path
+    (`core.distributed.ShardedIvf`) runs per shard;
+  * query-grouped (`qgroup=G`): queries are permuted into probe-locality
+    groups of G and each group walks its deduped union tile list, so a list
+    tile probed by several queries of the group is streamed from HBM once
+    instead of once per query (`build_group_map` + `kops.ivf_scan_grouped`).
+    Returns the same neighbour ids as per-query whenever distances are
+    distinct; candidates at EXACTLY equal distance resolve in ascending
+    tile order here vs probe order there.
 """
 from __future__ import annotations
 
@@ -11,10 +24,10 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.index.ivf import IvfIndex
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 
 
 @functools.partial(jax.jit, static_argnames=("max_tiles", "block_rows",
@@ -35,27 +48,120 @@ def build_tile_map(cids: jax.Array, starts: jax.Array, caps: jax.Array,
     return tiles.reshape(q, -1).astype(jnp.int32)
 
 
+@functools.partial(jax.jit, static_argnames=("group", "null_tile"))
+def build_group_map(tile_map: jax.Array, *, group: int, null_tile: int):
+    """Per-query tile map -> probe-locality query groups with union tiles.
+
+    Sorts queries by their first probed tile (nearest cell), takes groups of
+    `group` consecutive queries, and dedupes each group's probed tiles into
+    one sorted union list (real tiles ascending, null-tile padding trailing,
+    so repeated padding slots cost no re-fetch in the grouped kernel).
+
+    Returns (order (ngroups*group,) int32 — original query index per grouped
+    row, q (out of range, so scatters drop it — negative sentinels would
+    wrap) at ragged-tail padding rows; union (ngroups, group*T) int32;
+    qmask (ngroups*group, group*T) int32 membership, 0 on padding rows).
+    """
+    q, T = tile_map.shape
+    G = group
+    npad = (-q) % G
+    order = jnp.argsort(tile_map[:, 0], stable=True).astype(jnp.int32)
+    valid = jnp.ones((q,), bool)
+    if npad:
+        order = jnp.concatenate(
+            [order, jnp.full((npad,), q, jnp.int32)])
+        valid = jnp.concatenate([valid, jnp.zeros((npad,), bool)])
+    ngroups = (q + npad) // G
+    U = G * T
+
+    tq = tile_map[jnp.clip(order, 0, q - 1)]               # (qg, T)
+    tq = jnp.where(valid[:, None], tq, null_tile)          # padding rows
+    tqg = tq.reshape(ngroups, G, T)
+
+    # dedupe each group's tiles: null sorts (and dupes get re-marked) last
+    big = jnp.int32(jnp.iinfo(jnp.int32).max)
+    s = jnp.sort(jnp.where(tqg.reshape(ngroups, U) == null_tile, big,
+                           tqg.reshape(ngroups, U)), axis=-1)
+    dup = jnp.concatenate([jnp.zeros_like(s[:, :1], bool),
+                           s[:, 1:] == s[:, :-1]], axis=-1)
+    s = jnp.sort(jnp.where(dup, big, s), axis=-1)
+    union = jnp.where(s == big, null_tile, s).astype(jnp.int32)
+
+    hit = (tqg[:, :, None, :] == union[:, None, :, None]).any(-1)
+    hit &= (union != null_tile)[:, None, :]                # (ngroups, G, U)
+    return order, union, hit.reshape(ngroups * G, U).astype(jnp.int32)
+
+
+def _no_candidates(q: int, topk: int):
+    """The empty-index result: zero-width scans can't run (and a 0-tile grid
+    would return unwritten kernel buffers), so short-circuit to -1/+inf."""
+    return (jnp.full((q, topk), -1, jnp.int32),
+            jnp.full((q, topk), jnp.inf, jnp.float32))
+
+
+def _search_grouped(index: IvfIndex, Q: jax.Array, tm: jax.Array, *,
+                    topk: int, qgroup: int, force: Optional[str]):
+    order, union, qmask = build_group_map(tm, group=qgroup,
+                                          null_tile=index.null_tile)
+    Qg = Q[jnp.clip(order, 0, Q.shape[0] - 1)]
+    gi, gd = kops.ivf_scan_grouped(Qg, index.vecs, index.ids, union, qmask,
+                                   block_rows=index.block_rows, topk=topk,
+                                   force=force)
+    # scatter back to the original query order; out-of-range padding drops
+    ids = jnp.full((Q.shape[0], topk), -1, jnp.int32)
+    d2 = jnp.full((Q.shape[0], topk), jnp.inf, jnp.float32)
+    return (ids.at[order].set(gi, mode="drop"),
+            d2.at[order].set(gd, mode="drop"))
+
+
 def search(index: IvfIndex, Q: jax.Array, *, topk: int = 10,
-           nprobe: int = 8, force: Optional[str] = None):
+           nprobe: int = 8, force: Optional[str] = None,
+           qgroup: Optional[int] = None):
     """Top-k search. Q: (q, d) -> (ids (q, topk) int32, d2 (q, topk) f32).
 
     ids are the original vector ids (-1 past the candidate count); d2 is
     exact squared L2 to the returned vectors.  `force` follows the kernel
-    dispatch convention (None | 'pallas' | 'ref' | 'interpret').
+    dispatch convention (None | 'pallas' | 'ref' | 'interpret').  `nprobe`
+    clamps to the cell count (probing more cells than exist is exhaustive).
+    `qgroup=G` runs the query-grouped scan layout (see module docstring).
     """
-    assert nprobe <= index.k, (nprobe, index.k)
+    assert nprobe >= 1, nprobe
+    nprobe = min(nprobe, index.k)
+    if index.max_list_tiles == 0:         # every list empty: nothing to scan
+        return _no_candidates(Q.shape[0], topk)
     cids, _ = kops.probe_centroids(Q, index.centroids, nprobe, force=force)
     tm = build_tile_map(cids, index.starts, index.caps,
                         max_tiles=index.max_list_tiles,
                         block_rows=index.block_rows,
                         null_tile=index.null_tile)
+    if qgroup is not None and qgroup > 1:
+        return _search_grouped(index, Q, tm, topk=topk, qgroup=qgroup,
+                               force=force)
     return kops.ivf_scan(Q, index.vecs, index.ids, tm,
                          block_rows=index.block_rows, topk=topk, force=force)
+
+
+def merge_shard_topk(ids: jax.Array, part: jax.Array, topk: int):
+    """Merge per-shard local top-k lists into the global top-k.
+
+    ids/part: (R, q, t) all-gathered shard results, `part` the RAW partial
+    distances (`ivf_scan(..., raw=True)`, +inf at invalid slots).  Packed
+    rows live on exactly one shard, so no id-dedupe is needed; the selection
+    is `kernels.ref.stable_topk` — the same first-minimum tie-break the scan
+    kernels use, over candidates in shard order.  Returns (ids (q, topk),
+    part (q, topk)) still in raw form.
+    """
+    R, q, t = ids.shape
+    ent_i = ids.transpose(1, 0, 2).reshape(q, R * t)
+    ent_d = part.transpose(1, 0, 2).reshape(q, R * t)
+    d, i = kref.stable_topk(ent_d, ent_i, topk)
+    return i, d
 
 
 def scan_fraction(index: IvfIndex, Q: jax.Array, *, nprobe: int = 8,
                   force: Optional[str] = None) -> float:
     """Mean fraction of packed database rows streamed per query."""
+    nprobe = min(nprobe, index.k)
     cids, _ = kops.probe_centroids(Q, index.centroids, nprobe, force=force)
     scanned = jnp.sum(index.caps[cids], axis=-1)           # (q,)
     return float(jnp.mean(scanned) / max(index.capacity_rows, 1))
@@ -63,5 +169,18 @@ def scan_fraction(index: IvfIndex, Q: jax.Array, *, nprobe: int = 8,
 
 def exhaustive_search(index: IvfIndex, Q: jax.Array, *, topk: int = 10,
                       force: Optional[str] = None):
-    """Ground-truth scan of every list (nprobe = k) — for recall eval."""
-    return search(index, Q, topk=topk, nprobe=index.k, force=force)
+    """Ground-truth scan of every packed tile — for recall eval.
+
+    Enumerates the packed buffer's tiles directly instead of routing through
+    ``nprobe = k`` (which paid an O(q*k) probe plus a k-wide top-p selection
+    just to name every cell, and whose trace grew with k).  The scan itself
+    is the same fused kernel, so this also pins the scan's padding handling
+    against brute force (tests/test_ivf.py).
+    """
+    ntiles = index.capacity_rows // index.block_rows
+    if ntiles == 0:                       # every list empty: nothing to scan
+        return _no_candidates(Q.shape[0], topk)
+    tm = jnp.broadcast_to(jnp.arange(ntiles, dtype=jnp.int32),
+                          (Q.shape[0], ntiles))
+    return kops.ivf_scan(Q, index.vecs, index.ids, tm,
+                         block_rows=index.block_rows, topk=topk, force=force)

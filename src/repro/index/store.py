@@ -66,7 +66,14 @@ def load_index(path: str, *, mmap: bool = False) -> IvfIndex:
     """
     if path.endswith(".npz"):
         with np.load(path, allow_pickle=False) as z:
-            meta = json.loads(str(z["meta"]))
+            # flat path validates its magic; npz must reject foreign
+            # archives the same way (missing meta included)
+            try:
+                meta = json.loads(str(z["meta"]))
+            except KeyError as e:
+                raise ValueError(f"not a repro IVF index: {path}") from e
+            if meta.get("magic") != _MAGIC:
+                raise ValueError(f"not a repro IVF index: {path}")
             arrays = {name: z[name] for name in _ARRAYS}
     else:
         with open(path, "rb") as f:

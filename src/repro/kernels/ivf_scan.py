@@ -21,6 +21,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import ref as _ref
 from repro.kernels.centroid_assign import _select_topk
 
 
@@ -54,10 +55,10 @@ def _kernel(tile_map_ref, q_ref, v_ref, id_ref, oid_ref, od_ref, *,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_rows", "topk", "interpret"))
+                   static_argnames=("block_rows", "topk", "interpret", "raw"))
 def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
              tile_map: jax.Array, *, block_rows: int, topk: int = 10,
-             interpret: bool = False):
+             interpret: bool = False, raw: bool = False):
     """Scan each query's probed tiles of the packed database.
 
     Q: (q, d) queries; vecs: (n_pad, d) packed vectors (n_pad a multiple of
@@ -67,6 +68,9 @@ def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
 
     Returns (ids (q, topk) int32 with -1 beyond the candidate count,
     d2 (q, topk) float32 ascending, +inf beyond the candidate count).
+    ``raw=True`` skips the final ``+ ||q||^2`` / clamp and returns the
+    kernel's partial distances (+inf at invalid slots) — mesh shards merge
+    on these so cross-shard selection is bit-identical to a single scan.
     """
     nq, d = Q.shape
     n_pad = vecs.shape[0]
@@ -96,8 +100,95 @@ def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
         ],
         interpret=interpret,
     )(tile_map.astype(jnp.int32), Q, vecs, pids.astype(jnp.int32))
-    qsq = jnp.sum(Q.astype(jnp.float32) ** 2, axis=-1)
-    d2 = jnp.maximum(od + qsq[:, None], 0.0)
-    # padding candidates carry id -1 (selected only when fewer than topk
-    # real candidates exist); force their distance to +inf for callers.
-    return oid, jnp.where(oid < 0, jnp.inf, d2)
+    if raw:
+        return oid, jnp.where(oid < 0, jnp.inf, od)
+    return _ref.finalize_d2(oid, od, Q)
+
+
+def _grouped_kernel(union_ref, qg_ref, v_ref, id_ref, m_ref, oid_ref, od_ref,
+                    *, topk: int):
+    s = pl.program_id(1)
+    qg = qg_ref[...].astype(jnp.float32)        # (G, d)
+    v = v_ref[...].astype(jnp.float32)          # (bl, d)
+    ids = id_ref[...]                           # (bl,) int32, -1 = padding
+    probed = m_ref[...]                         # (G, 1) int32 membership
+
+    dots = jax.lax.dot_general(
+        qg, v, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (G, bl)
+    vsq = jnp.sum(v * v, axis=-1)               # (bl,)
+    part = vsq[None, :] - 2.0 * dots            # (G, bl): d2 minus ||q||^2
+    # a query only sees this tile's rows if it probed the tile; padding rows
+    # and unprobed tiles become id=-1/inf so the select treats them as holes
+    idsb = jnp.where((probed > 0) & (ids[None, :] >= 0), ids[None, :], -1)
+    part = jnp.where(idsb < 0, jnp.inf, part)
+
+    @pl.when(s == 0)
+    def _init():
+        d0, i0 = _select_topk(part, idsb, topk)
+        od_ref[...] = d0
+        oid_ref[...] = i0
+
+    @pl.when(s > 0)
+    def _update():
+        d = jnp.concatenate([od_ref[...], part], axis=-1)
+        i = jnp.concatenate([oid_ref[...], idsb], axis=-1)
+        d1, i1 = _select_topk(d, i, topk)
+        od_ref[...] = d1
+        oid_ref[...] = i1
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "topk", "interpret"))
+def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
+                     union_tiles: jax.Array, qmask: jax.Array, *,
+                     block_rows: int, topk: int = 10,
+                     interpret: bool = False):
+    """Query-grouped scan: stream each probed tile once per query GROUP.
+
+    The per-query grid re-fetches a hot list tile for every query that
+    probes it; this grid batches G probe-local queries per group and walks
+    the group's deduped union tile list instead, so a tile shared by the
+    whole group is loaded once (and the trailing null-tile padding slots,
+    sorted to be consecutive, are not re-fetched between steps).
+
+    Qg: (ngroups * G, d) queries permuted into groups (`index.probe.
+    build_group_map` produces the layout); union_tiles: (ngroups, U) int32
+    deduped tile indices (null-tile padded); qmask: (ngroups * G, U) int32
+    nonzero where the query probed that union slot.
+
+    Returns (ids, d2) of shape (ngroups * G, topk) in the grouped order —
+    same output convention as `ivf_scan`.
+    """
+    nqg, d = Qg.shape
+    ngroups, U = union_tiles.shape
+    assert nqg % ngroups == 0, (nqg, ngroups)
+    G = nqg // ngroups
+    assert qmask.shape == (nqg, U), (qmask.shape, nqg, U)
+    assert vecs.shape[0] % block_rows == 0, (vecs.shape, block_rows)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(ngroups, U),
+        in_specs=[
+            pl.BlockSpec((G, d), lambda g, s, ut: (g, 0)),
+            pl.BlockSpec((block_rows, d), lambda g, s, ut: (ut[g, s], 0)),
+            pl.BlockSpec((block_rows,), lambda g, s, ut: (ut[g, s],)),
+            pl.BlockSpec((G, 1), lambda g, s, ut: (g, s)),
+        ],
+        out_specs=[
+            pl.BlockSpec((G, topk), lambda g, s, ut: (g, 0)),
+            pl.BlockSpec((G, topk), lambda g, s, ut: (g, 0)),
+        ],
+    )
+    oid, od = pl.pallas_call(
+        functools.partial(_grouped_kernel, topk=topk),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nqg, topk), jnp.int32),
+            jax.ShapeDtypeStruct((nqg, topk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(union_tiles.astype(jnp.int32), Qg, vecs, pids.astype(jnp.int32),
+      qmask.astype(jnp.int32))
+    return _ref.finalize_d2(oid, od, Qg)

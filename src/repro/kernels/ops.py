@@ -69,10 +69,24 @@ def refine_merge(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
 
 def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
              tile_map: jax.Array, *, block_rows: int, topk: int = 10,
-             force: str | None = None):
+             force: str | None = None, raw: bool = False):
     """Per-query scan of probed packed-list tiles -> (ids, d2) top-k."""
     if force == "ref" or (force is None and not _on_tpu()):
         return _ref.ivf_scan(Q, vecs, pids, tile_map,
-                             block_rows=block_rows, topk=topk)
+                             block_rows=block_rows, topk=topk, raw=raw)
     return _ivf.ivf_scan(Q, vecs, pids, tile_map, block_rows=block_rows,
-                         topk=topk, interpret=(force == "interpret"))
+                         topk=topk, interpret=(force == "interpret"),
+                         raw=raw)
+
+
+def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
+                     union_tiles: jax.Array, qmask: jax.Array, *,
+                     block_rows: int, topk: int = 10,
+                     force: str | None = None):
+    """Query-grouped list scan: each union tile streamed once per group."""
+    if force == "ref" or (force is None and not _on_tpu()):
+        return _ref.ivf_scan_grouped(Qg, vecs, pids, union_tiles, qmask,
+                                     block_rows=block_rows, topk=topk)
+    return _ivf.ivf_scan_grouped(Qg, vecs, pids, union_tiles, qmask,
+                                 block_rows=block_rows, topk=topk,
+                                 interpret=(force == "interpret"))

@@ -1,6 +1,8 @@
 """Pure-jnp oracles for the Pallas kernels (the correctness reference)."""
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -36,11 +38,16 @@ def stable_topk(d: jax.Array, ids: jax.Array, k: int):
     return jnp.stack(out_d, axis=-1), jnp.stack(out_i, axis=-1)
 
 
+@functools.partial(jax.jit, static_argnames=("p",))
 def probe_centroids(X: jax.Array, C: jax.Array, p: int):
     """Top-p nearest centroids per sample.
 
     X: (n, d), C: (k, d) -> (ids (n, p) int32 ascending by distance,
     d2 (n, p) float32 with the ||x||^2 term included).
+
+    Jitted so the scores match the mesh-sharded serving path bitwise: the
+    sharded IVF trace computes this replicated probe inside jit, and
+    XLA:CPU's jitted fusion rounds differently than op-by-op eager mode.
     """
     Xf = X.astype(jnp.float32)
     Cf = C.astype(jnp.float32)
@@ -52,12 +59,37 @@ def probe_centroids(X: jax.Array, C: jax.Array, p: int):
     return ids, jnp.maximum(d + xsq[:, None], 0.0)
 
 
+def finalize_d2(ids: jax.Array, od: jax.Array, Q: jax.Array):
+    """Raw partial scan distances -> exact squared L2 for callers.
+
+    ids: (q, t) selected ids (-1 = empty slot); od: (q, t) partials
+    (``||v||^2 - 2 q.v``, +inf at empty slots); Q: (q, d).  EVERY scan exit
+    path — per-query kernel/ref, grouped kernel/ref, the sharded merge —
+    must apply this one transform in this op order: the cross-topology
+    bit-exactness guarantees rest on the selected partials going through
+    identical arithmetic everywhere.
+    """
+    qsq = jnp.sum(Q.astype(jnp.float32) ** 2, axis=-1)
+    d2 = jnp.maximum(od + qsq[:, None], 0.0)
+    # empty slots carry id -1 (fewer candidates than topk); their distance
+    # is +inf for callers
+    return ids, jnp.where(ids < 0, jnp.inf, d2)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "topk", "raw"))
 def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
-             tile_map: jax.Array, *, block_rows: int, topk: int = 10):
+             tile_map: jax.Array, *, block_rows: int, topk: int = 10,
+             raw: bool = False):
     """Inverted-list scan oracle over the packed layout.
 
     Gathers every probed tile's rows per query (same traversal order as the
     Pallas kernel) and selects top-k with the same stable tie-break.
+    ``raw=True`` returns the partial distances (``||v||^2 - 2 q.v``, without
+    the ``||q||^2`` term or the >=0 clamp, +inf at invalid slots) — the form
+    mesh shards merge on before the final monotone transform, so cross-shard
+    selection is bit-identical to a single-device scan.  Jitted for the same
+    cross-topology bitwise reason as ``probe_centroids``: the per-candidate
+    scores must round identically inside the sharded trace and out here.
     """
     nq = Q.shape[0]
     Qf = Q.astype(jnp.float32)
@@ -70,9 +102,63 @@ def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
     dots = jnp.einsum("qd,qld->ql", Qf, cv)
     part = jnp.where(cids < 0, jnp.inf, vsq - 2.0 * dots)
     d, ids = stable_topk(part, cids, topk)
-    qsq = jnp.sum(Qf * Qf, axis=-1)
-    d2 = jnp.maximum(d + qsq[:, None], 0.0)
-    return ids, jnp.where(ids < 0, jnp.inf, d2)
+    if raw:
+        return ids, jnp.where(ids < 0, jnp.inf, d)
+    return finalize_d2(ids, d, Q)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "topk"))
+def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
+                     union_tiles: jax.Array, qmask: jax.Array, *,
+                     block_rows: int, topk: int = 10):
+    """Query-grouped inverted-list scan oracle (the batched kernel's twin).
+
+    Qg: (ngroups * G, d) queries already permuted into probe-locality groups;
+    union_tiles: (ngroups, U) int32 deduped tile indices per group (padding
+    slots point at the all-hole null tile); qmask: (ngroups * G, U) nonzero
+    where query i of the group probed union slot s.  Each group streams each
+    union tile ONCE and scores all G member queries against it; a query only
+    accumulates candidates from tiles it actually probed (mask -> id=-1/inf,
+    exactly as the kernel does).
+
+    To stay bitwise-equal to the Pallas kernel in interpret mode the per-tile
+    scores go through the same (G, d) x (bl, d) ``dot_general`` the kernel
+    issues (a lax.map over union slots, not one big einsum) — and the whole
+    oracle is jitted, because XLA:CPU fuses the dot with the following
+    subtract differently under jit than op-by-op, and interpret-mode Pallas
+    bodies execute inside the enclosing jit trace.
+    """
+    ngroups, U = union_tiles.shape
+    G = Qg.shape[0] // ngroups
+    Qf = Qg.astype(jnp.float32).reshape(ngroups, G, -1)
+    mask = qmask.reshape(ngroups, G, U)
+
+    def group_scores(args):
+        qf, tiles = args                                    # (G, d), (U,)
+
+        def slot_scores(t):
+            pos = t * block_rows + jnp.arange(block_rows, dtype=jnp.int32)
+            cv = vecs[pos].astype(jnp.float32)              # (bl, d)
+            dots = jax.lax.dot_general(
+                qf, cv, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32)         # (G, bl)
+            vsq = jnp.sum(cv * cv, axis=-1)                 # (bl,)
+            return vsq[None, :] - 2.0 * dots, pids[pos]
+
+        return jax.lax.map(slot_scores, tiles)              # (U, G, bl)
+
+    part, cids = jax.lax.map(group_scores, (Qf, union_tiles))
+    part = part.transpose(0, 2, 1, 3).reshape(ngroups, G, U * block_rows)
+    cids = cids.reshape(ngroups, U * block_rows)
+    # mask out candidates from tiles a query did not probe, and padding
+    # rows, as id=-1/inf — identically to the kernel
+    ok = (jnp.repeat(mask, block_rows, axis=-1)             # (ngroups, G, U*bl)
+          & (cids[:, None, :] >= 0))
+    ids = jnp.where(ok, cids[:, None, :], -1)
+    part = jnp.where(ids < 0, jnp.inf, part)
+    d, ids = stable_topk(part.reshape(ngroups * G, -1),
+                         ids.reshape(ngroups * G, -1), topk)
+    return finalize_d2(ids, d, Qg)
 
 
 def gather_score(x: jax.Array, u: jax.Array, cand: jax.Array, D: jax.Array,

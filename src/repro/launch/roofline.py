@@ -52,6 +52,16 @@ KERNEL_INVENTORY = {
         hbm_bytes=lambda q, rows, d, topk: 4.0 * (q * d + q * rows * d
                                                   + 2 * q * topk),
     ),
+    "ivf_scan_grouped": dict(
+        desc="query-grouped inverted-list scan: G probe-local queries share "
+             "each streamed list tile, so tile HBM traffic amortizes by the "
+             "group's probe overlap (per-call: q queries, `rows` deduped "
+             "union rows per group of G)",
+        flops=lambda q, rows, d, topk, G: 2.0 * q * rows * d,
+        hbm_bytes=lambda q, rows, d, topk, G: 4.0 * (q * d
+                                                     + (q / G) * rows * d
+                                                     + 2 * q * topk),
+    ),
     "gather_score": dict(
         desc="fused candidate-row gather + ΔI/distance scoring in VMEM "
              "(engine move step); the (B, C, d) gathered tensor never "

@@ -2,12 +2,19 @@
 
 Builds (or loads) an index over synthetic data, then sweeps `nprobe` to map
 the recall-vs-throughput frontier — the serving-side mirror of
-`launch/serve.py`'s prefill/decode loop.
+`launch/serve.py`'s prefill/decode loop.  `--qgroup G` serves through the
+query-grouped scan layout (each list tile streamed once per group of G
+probe-local queries).  Multi-device serving goes through
+`core.distributed.ShardedIvf` (lists sharded by cell, one shard_map trace
+and one host sync per query batch — see README "Serving the index");
+`benchmarks/anns_ivf_bench.py --mode sharded` drives it on forced host
+devices.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_index --n 32768 --d 64 --k 256
   PYTHONPATH=src python -m repro.launch.serve_index --save /tmp/ix.ivf
   PYTHONPATH=src python -m repro.launch.serve_index --load /tmp/ix.ivf
+  PYTHONPATH=src python -m repro.launch.serve_index --qgroup 8
 """
 from __future__ import annotations
 
@@ -51,7 +58,8 @@ def build(args) -> tuple[ivf.IvfIndex, jax.Array]:
 
 
 def serve_sweep(index: ivf.IvfIndex, X: jax.Array, *, nq: int, topk: int,
-                probes, batch: int, rounds: int, seed: int):
+                probes, batch: int, rounds: int, seed: int,
+                qgroup: int | None = None):
     key = jax.random.PRNGKey(seed)
     batch = min(batch, nq)
     nq -= nq % batch  # whole batches only: one compile footprint per sweep
@@ -64,15 +72,18 @@ def serve_sweep(index: ivf.IvfIndex, X: jax.Array, *, nq: int, topk: int,
           f"{'p50_ms':>8} {'p90_ms':>8} {'p99_ms':>8} {'QPS':>10}")
     rows = []
     for p in probes:
-        ids, _ = ivf.search(index, Q, topk=topk, nprobe=p)        # for recall
-        w, _ = ivf.search(index, Q[:batch], topk=topk, nprobe=p)  # warm batch
+        ids, _ = ivf.search(index, Q, topk=topk, nprobe=p,
+                            qgroup=qgroup)                        # for recall
+        w, _ = ivf.search(index, Q[:batch], topk=topk, nprobe=p,
+                          qgroup=qgroup)                          # warm batch
         jax.block_until_ready((ids, w))
         lat = []
         for r in range(rounds):
             for b0 in range(0, nq, batch):
                 qb = Q[b0:b0 + batch]
                 t0 = time.perf_counter()
-                out, _ = ivf.search(index, qb, topk=topk, nprobe=p)
+                out, _ = ivf.search(index, qb, topk=topk, nprobe=p,
+                                    qgroup=qgroup)
                 jax.block_until_ready(out)
                 lat.append(time.perf_counter() - t0)
         lat = np.sort(np.array(lat)) * 1e3                         # ms/batch
@@ -107,12 +118,15 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--save", default=None, help="write index after build")
     ap.add_argument("--load", default=None, help="serve a saved index")
+    ap.add_argument("--qgroup", type=int, default=None,
+                    help="query-grouped scan layout: queries per group")
     args = ap.parse_args()
 
     index, X = build(args)
     probes = [int(p) for p in args.probes.split(",") if int(p) <= index.k]
     serve_sweep(index, X, nq=args.nq, topk=args.topk, probes=probes,
-                batch=args.batch, rounds=args.rounds, seed=args.seed + 9)
+                batch=args.batch, rounds=args.rounds, seed=args.seed + 9,
+                qgroup=args.qgroup)
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """IVF index subsystem: kernel exactness (interpret vs. oracle), CSR pack
 invariants under build/add/remove, persistence round-trips, and end-to-end
 recall of the probe path."""
+import json
 import os
 
 import jax
@@ -110,6 +111,198 @@ def test_ivf_scan_short_candidates(key):
 
 
 # ---------------------------------------------------------------------------
+# query-grouped scan layout: kernel bitwise-exactness and search parity
+# ---------------------------------------------------------------------------
+
+def _group_inputs(index, Q, nprobe, qgroup):
+    cids, _ = ref.probe_centroids(Q, index.centroids, nprobe)
+    tm = ivf.build_tile_map(cids, index.starts, index.caps,
+                            max_tiles=index.max_list_tiles,
+                            block_rows=index.block_rows,
+                            null_tile=index.null_tile)
+    order, union, qmask = ivf.build_group_map(tm, group=qgroup,
+                                              null_tile=index.null_tile)
+    Qg = Q[jnp.clip(order, 0, Q.shape[0] - 1)]
+    return tm, order, union, qmask, Qg
+
+
+@pytest.mark.parametrize("nq,G,nprobe,topk", [(32, 4, 4, 10),
+                                              (33, 8, 3, 5),
+                                              (7, 3, 2, 40)])
+def test_ivf_scan_grouped_interpret_bitwise_vs_ref(key, nq, G, nprobe, topk):
+    """Acceptance: the batched kernel is BITWISE-equal to its oracle —
+    ids and distances — including ragged q % G tails."""
+    X, index = small_index(key, n=512, d=16, k=8, block_rows=16)
+    Q = X[:nq] + 0.1 * jax.random.normal(jax.random.fold_in(key, 11),
+                                         (nq, X.shape[1]))
+    _, order, union, qmask, Qg = _group_inputs(index, Q, nprobe, G)
+    ki, kd = iv.ivf_scan_grouped(Qg, index.vecs, index.ids, union, qmask,
+                                 block_rows=index.block_rows, topk=topk,
+                                 interpret=True)
+    ri, rd = ref.ivf_scan_grouped(Qg, index.vecs, index.ids, union, qmask,
+                                  block_rows=index.block_rows, topk=topk)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(kd), np.asarray(rd))
+
+
+def test_group_map_partitions_probed_tiles(key):
+    """Union+mask reproduce each query's probed tile set exactly; padding
+    rows are fully masked off."""
+    X, index = small_index(key, n=512, d=16, k=8, block_rows=16)
+    nq, G = 13, 4
+    Q = X[:nq]
+    tm, order, union, qmask = _group_inputs(index, Q, 3, G)[:4]
+    tm, order = np.asarray(tm), np.asarray(order)
+    union, qmask = np.asarray(union), np.asarray(qmask)
+    null = index.null_tile
+    for row, qi in enumerate(order):
+        g = row // G
+        got = sorted(union[g][qmask[row] > 0])
+        if qi >= nq:                       # ragged-tail padding row
+            assert got == []
+            continue
+        assert got == sorted(set(tm[qi]) - {null})
+    # real tiles are deduped and ascending, null padding trails
+    for g in range(union.shape[0]):
+        real = union[g][union[g] != null]
+        assert np.all(np.diff(real) > 0)
+        tail = union[g][len(real):]
+        assert np.all(tail == null)
+
+
+def test_grouped_search_matches_per_query(key):
+    """qgroup search returns identical neighbour ids (distances to float
+    rounding) for every grouping width, including G > q."""
+    X, index = small_index(key, n=1024, d=16, k=16, block_rows=32)
+    nq = 33
+    Q = X[:nq] + 0.1 * jax.random.normal(jax.random.fold_in(key, 12),
+                                         (nq, X.shape[1]))
+    i0, d0 = ivf.search(index, Q, topk=10, nprobe=4, force="ref")
+    for G in (2, 4, 8, 64):
+        i1, d1 = ivf.search(index, Q, topk=10, nprobe=4, force="ref",
+                            qgroup=G)
+        np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1),
+                                      err_msg=f"G={G}")
+        np.testing.assert_allclose(np.asarray(d1), np.asarray(d0),
+                                   rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# query-path edge cases
+# ---------------------------------------------------------------------------
+
+def _empty_cell_index(key, n=256, d=8, k=8, block_rows=8):
+    """An index where cell 0 has no members (and so zero capacity)."""
+    X = gmm_blobs(key, n, d, 4)
+    C = gmm_blobs(jax.random.fold_in(key, 1), k, d, 4)
+    a, _ = ref.assign_centroids(X, C)
+    a = np.asarray(a).copy()
+    a[a == 0] = 1                       # evacuate cell 0
+    index = ivf.build_ivf(X, FakeResult(jnp.asarray(a), C, k),
+                          block_rows=block_rows)
+    assert index.list_sizes()[0] == 0 and int(np.asarray(index.caps)[0]) == 0
+    return X, index
+
+
+def test_probe_empty_cell(key):
+    """Probing an empty cell contributes nothing — no -1/padding ids leak."""
+    X, index = _empty_cell_index(key)
+    C0 = np.asarray(index.centroids)[0]
+    Q = jnp.asarray(C0[None] + 0.01 * np.ones_like(C0))   # lands on cell 0
+    cids, _ = ref.probe_centroids(Q, index.centroids, 2)
+    assert 0 in np.asarray(cids)                          # it IS probed
+    ids, d2 = ivf.search(index, Q, topk=5, nprobe=2, force="ref")
+    ids = np.asarray(ids)
+    assert np.all(ids[np.isfinite(np.asarray(d2))] >= 0)
+    # grouped layout hits the same edge
+    gi, _ = ivf.search(index, Q, topk=5, nprobe=2, force="ref", qgroup=2)
+    np.testing.assert_array_equal(ids, np.asarray(gi))
+
+
+def test_search_single_query(key):
+    """q=1 works in both layouts and matches exhaustive on its candidates."""
+    X, index = small_index(key, n=256, d=8, k=4, block_rows=8)
+    Q = X[:1]
+    i0, d0 = ivf.search(index, Q, topk=3, nprobe=4, force="ref")
+    assert i0.shape == (1, 3) and int(i0[0, 0]) == 0
+    i1, _ = ivf.search(index, Q, topk=3, nprobe=4, force="ref", qgroup=4)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+
+
+def test_topk_exceeds_scanned_candidates(key):
+    """topk larger than every scanned candidate: tail is -1/+inf and real
+    prefix ranks ascending."""
+    X, index = small_index(key, n=64, d=8, k=4, block_rows=8)
+    Q = X[:3]
+    ids, d2 = ivf.search(index, Q, topk=60, nprobe=1, force="ref")
+    ids, d2 = np.asarray(ids), np.asarray(d2)
+    cids, _ = ref.probe_centroids(Q, index.centroids, 1)
+    sizes = index.list_sizes()[np.asarray(cids)[:, 0]]
+    for r in range(3):
+        assert np.all(ids[r, sizes[r]:] == -1)
+        assert np.all(np.isinf(d2[r, sizes[r]:]))
+        assert np.all(np.diff(d2[r, : sizes[r]]) >= 0)
+    gids, gd2 = ivf.search(index, Q, topk=60, nprobe=1, force="ref",
+                           qgroup=2)
+    np.testing.assert_array_equal(ids, np.asarray(gids))
+
+
+def test_nprobe_clamps_to_k(key):
+    """nprobe > k no longer trips an assert: it clamps to exhaustive."""
+    X, index = small_index(key, n=256, d=8, k=4, block_rows=8)
+    Q = X[:8]
+    i_over, d_over = ivf.search(index, Q, topk=5, nprobe=999, force="ref")
+    i_full, d_full = ivf.search(index, Q, topk=5, nprobe=4, force="ref")
+    np.testing.assert_array_equal(np.asarray(i_over), np.asarray(i_full))
+    np.testing.assert_array_equal(np.asarray(d_over), np.asarray(d_full))
+    assert ivf.scan_fraction(index, Q, nprobe=999, force="ref") <= 1.0
+
+
+def test_exhaustive_search_matches_brute_force(key):
+    """Regression (satellite): exhaustive_search equals brute force — ids
+    and distances — instead of trusting the nprobe=k probe round-trip."""
+    X, index = small_index(key, n=512, d=16, k=8, block_rows=16)
+    nq = 32
+    Q = X[:nq] + 0.1 * jax.random.normal(jax.random.fold_in(key, 3),
+                                         (nq, X.shape[1]))
+    ids, d2 = ivf.exhaustive_search(index, Q, topk=10, force="ref")
+    sc = (jnp.sum(X * X, -1)[None] - 2.0 * (Q @ X.T))      # partial form
+    gt = jnp.argsort(sc, axis=1)[:, :10]
+    gd = jnp.maximum(jnp.take_along_axis(sc, gt, 1)
+                     + jnp.sum(Q * Q, -1)[:, None], 0.0)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(gt))
+    np.testing.assert_allclose(np.asarray(d2), np.asarray(gd),
+                               rtol=1e-4, atol=1e-3)
+    # the old routing survives as a cross-check: probing every cell agrees
+    i2, _ = ivf.search(index, Q, topk=10, nprobe=index.k, force="ref")
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(i2))
+
+
+def test_exhaustive_search_all_lists_empty(key):
+    """Zero-capacity index (every cell empty) returns -1/+inf, not a crash."""
+    X = gmm_blobs(key, 16, 8, 2)
+    C = gmm_blobs(jax.random.fold_in(key, 1), 4, 8, 2)
+    empty = ivf.build_ivf(X[:0], FakeResult(jnp.zeros((0,), jnp.int32), C, 4),
+                          block_rows=8)
+    ids, d2 = ivf.exhaustive_search(empty, X[:3], topk=4, force="ref")
+    assert np.all(np.asarray(ids) == -1) and np.all(np.isinf(np.asarray(d2)))
+
+
+def test_search_all_lists_empty(key):
+    """search (every layout) on a zero-capacity index: -1/+inf, no crash and
+    no unwritten 0-tile kernel buffers."""
+    X = gmm_blobs(key, 16, 8, 2)
+    C = gmm_blobs(jax.random.fold_in(key, 1), 4, 8, 2)
+    empty = ivf.build_ivf(X[:0], FakeResult(jnp.zeros((0,), jnp.int32), C, 4),
+                          block_rows=8)
+    for kw in ({}, {"qgroup": 2}):
+        ids, d2 = ivf.search(empty, X[:3], topk=4, nprobe=2, force="ref",
+                             **kw)
+        assert np.all(np.asarray(ids) == -1), kw
+        assert np.all(np.isinf(np.asarray(d2))), kw
+
+
+# ---------------------------------------------------------------------------
 # pack / add / remove invariants
 # ---------------------------------------------------------------------------
 
@@ -205,6 +398,27 @@ def test_save_load_roundtrip(key, tmp_path, fname):
     i1, d1 = ivf.search(loaded, q, topk=5, nprobe=4, force="ref")
     np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
     np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+def test_load_rejects_foreign_files(key, tmp_path):
+    """Both formats validate the magic — a foreign npz/binary raises a
+    ValueError instead of building a garbage index."""
+    p_npz = os.path.join(tmp_path, "foreign.npz")
+    np.savez_compressed(p_npz, meta=json.dumps({"magic": "other"}),
+                        **{n: np.zeros(2) for n in
+                           ("centroids", "vecs", "ids", "starts", "caps")})
+    with pytest.raises(ValueError, match="not a repro IVF index"):
+        ivf.load_index(p_npz)
+    # an npz without a meta entry at all raises the same ValueError
+    p_raw = os.path.join(tmp_path, "raw.npz")
+    np.savez_compressed(p_raw, a=np.zeros(3))
+    with pytest.raises(ValueError, match="not a repro IVF index"):
+        ivf.load_index(p_raw)
+    p_bin = os.path.join(tmp_path, "foreign.ivf")
+    with open(p_bin, "wb") as f:
+        f.write(b"\x10" + b"\x00" * 64)
+    with pytest.raises(ValueError, match="not a repro IVF index"):
+        ivf.load_index(p_bin)
 
 
 def test_load_mmap_zero_copy(key, tmp_path):

@@ -1,0 +1,142 @@
+"""Property-based IVF index invariants (hypothesis, with the tests/_hyp.py
+deterministic fallback): random add/remove/repack sequences must preserve the
+tile-aligned CSR layout, keep live ids unique and stable across repacks, and
+leave search results unchanged by a no-op repack."""
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image has no hypothesis wheel
+    from _hyp import given, settings, strategies as st
+
+from repro import index as ivf
+from repro.data import gmm_blobs
+from repro.kernels import ref
+
+
+class FakeResult:
+    def __init__(self, assign, centroids, k):
+        self.assign, self.centroids, self.k = assign, centroids, k
+
+
+N, D, K, BL = 192, 8, 6, 8
+
+
+def _build(seed: int):
+    key = jax.random.PRNGKey(seed)
+    X = gmm_blobs(key, N, D, 4)
+    C = gmm_blobs(jax.random.fold_in(key, 1), K, D, 4)
+    a, _ = ref.assign_centroids(X, C)
+    return X, ivf.build_ivf(X, FakeResult(a, C, K), block_rows=BL)
+
+
+def _check_csr(index, live_ids):
+    """The layout invariants every mutation must preserve."""
+    ids = np.asarray(index.ids)
+    starts = np.asarray(index.starts)
+    caps = np.asarray(index.caps)
+    bl = index.block_rows
+    assert np.all(starts % bl == 0) and np.all(caps % bl == 0)
+    assert np.all(np.diff(starts) == caps[:-1])
+    assert starts[0] == 0
+    assert starts[-1] + caps[-1] == index.capacity_rows
+    assert index.n_rows == index.capacity_rows + bl
+    assert np.all(ids[index.capacity_rows:] == -1)        # null tile: holes
+    live = ids[ids >= 0]
+    assert len(live) == len(set(live.tolist()))           # ids unique
+    assert set(live.tolist()) == live_ids                 # ids as expected
+    # every live row sits inside exactly one list's range
+    covered = np.zeros(index.n_rows, bool)
+    for s, c in zip(starts, caps):
+        assert not covered[s:s + c].any()
+        covered[s:s + c] = True
+    assert np.all(covered[: index.capacity_rows])
+
+
+@settings(deadline=None, max_examples=8)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_random_mutation_sequences_preserve_invariants(seed):
+    rng = random.Random(seed)
+    X, index = _build(seed % 7)
+    live = set(range(N))
+    next_id = N
+    pool = np.asarray(gmm_blobs(jax.random.PRNGKey(seed + 1), 64, D, 4))
+    for _ in range(6):
+        op = rng.choice(("add", "remove", "repack"))
+        if op == "add":
+            m = rng.randint(1, 8)
+            rows = pool[rng.randrange(0, 64 - m):][:m]
+            new_ids = np.arange(next_id, next_id + m, dtype=np.int32)
+            index = ivf.add(index, rows, new_ids)
+            live |= set(new_ids.tolist())
+            next_id += m
+        elif op == "remove" and live:
+            m = min(rng.randint(1, 24), len(live))
+            gone = rng.sample(sorted(live), m)
+            index = ivf.remove(index, np.asarray(gone))
+            live -= set(gone)
+        else:
+            index = ivf.repack(index)
+        _check_csr(index, live)
+        assert index.size == len(live)
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_repack_is_noop_for_search(seed):
+    """A repack (holes squeezed out, rows shuffled into new positions) never
+    changes what search returns: same ids, same distances."""
+    rng = random.Random(seed)
+    X, index = _build(seed % 5)
+    # punch random holes so the repack actually moves rows
+    gone = rng.sample(range(N), rng.randint(0, N // 3))
+    if gone:
+        index = ivf.remove(index, np.asarray(gone))
+    Q = jnp.asarray(np.asarray(X)[:8]) + 0.05
+    i0, d0 = ivf.search(index, Q, topk=5, nprobe=3, force="ref")
+    packed = ivf.repack(index)
+    _check_csr(packed, set(range(N)) - set(gone))
+    i1, d1 = ivf.search(packed, Q, topk=5, nprobe=3, force="ref")
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+    # after a repack the only holes left are per-list tile-alignment padding
+    sizes = packed.list_sizes()
+    caps = np.asarray(packed.caps)
+    bl = packed.block_rows
+    np.testing.assert_array_equal(caps, (sizes + bl - 1) // bl * bl)
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_shard_lists_covers_every_row_once(seed):
+    """Cell-sharded slabs hold exactly the live rows, each on one shard, and
+    slab padding rows are all holes (never surfaceable)."""
+    rng = random.Random(seed)
+    X, index = _build(seed % 3)
+    gone = rng.sample(range(N), rng.randint(0, N // 4))
+    if gone:
+        index = ivf.remove(index, np.asarray(gone))
+    R = rng.choice((2, 3, 4, 5))
+    parts = ivf.shard_lists(index, R)
+    sids = np.asarray(parts.ids)
+    assert parts.vecs.shape[0] == R * parts.rows_loc
+    assert parts.rows_loc % index.block_rows == 0
+    live = sorted(sids[sids >= 0].tolist())
+    expect = np.asarray(index.ids)
+    assert live == sorted(expect[expect >= 0].tolist())
+    # per-shard tables tile into the local slab, unowned cells have cap 0
+    starts = np.asarray(parts.starts).reshape(R, index.k)
+    caps = np.asarray(parts.caps).reshape(R, index.k)
+    gcaps = np.asarray(index.caps)
+    for r in range(R):
+        owned = parts.owner == r
+        assert np.all(caps[r, owned] == gcaps[owned])
+        assert np.all(caps[r, ~owned] == 0)
+        assert np.all(starts[r] + caps[r] <= parts.rows_loc - index.block_rows)
+        # the local null tile (last tile of the slab) is all holes
+        assert np.all(sids[(r + 1) * parts.rows_loc - index.block_rows:
+                           (r + 1) * parts.rows_loc] == -1)
