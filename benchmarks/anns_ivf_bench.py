@@ -14,13 +14,14 @@ Modes (the CI bench-smoke step runs ``--quick --mode both``):
            bit-exact parity with single-device search and exactly 1
            transfer-guard-verified host sync per query batch.
 
-Emits ``BENCH_anns_ivf.json``.
+Emits ``BENCH_anns_ivf.json`` and ``BENCH_anns_ivf_sharded.json``
+(``repro.bench.v1`` run records; the sharded search runs with
+``telemetry=True`` — scanned-rows/scan-fraction counters ride the same
+single ``obs.sync_counter``-verified host sync).
 """
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 SHARDED_DEVICES = 4
@@ -35,6 +36,7 @@ def run_single(quick: bool = True):
     from repro import index as ivf
     from repro.core import build_knn_graph, gk_means, graph_search
     from repro.data import gmm_blobs
+    from repro.obs import run_record, write_json
 
     n, d, k = (32768, 64, 256) if quick else (1_000_000, 128, 4096)
     X = gmm_blobs(jax.random.PRNGKey(0), n, d, 512)
@@ -57,7 +59,7 @@ def run_single(quick: bool = True):
     rows.append(("ivf/build", (time.perf_counter() - t0) * 1e6,
                  f"k={res.k} rows={index.n_rows}"))
 
-    rec = {"n": n, "d": d, "k": k, "topk": topk}
+    metrics = {}
     for nprobe in (1, 2, 4, 8, 16, 32):
         f = lambda qq: ivf.search(index, qq, topk=topk, nprobe=nprobe)
         ids, _ = f(q)
@@ -70,8 +72,8 @@ def run_single(quick: bool = True):
         rows.append((f"ivf/nprobe={nprobe}", us_q,
                      f"recall@10={r:.3f} scan={100 * frac:.1f}%"))
         if nprobe == 1:
-            rec["recall_at_10_nprobe1"] = r
-            rec["scan_frac_nprobe1"] = frac
+            metrics["recall_at_10_nprobe1"] = r
+            metrics["scan_frac_nprobe1"] = float(frac)
 
     # query-grouped scan layout: same probes, tile loads amortized per group
     for nprobe, G in ((8, 8), (16, 8)):
@@ -85,7 +87,7 @@ def run_single(quick: bool = True):
         rows.append((f"ivf/grouped_nprobe={nprobe}_G={G}", us_q,
                      f"recall@10={recall(gids):.3f}"))
         if nprobe == 8:
-            rec["recall_at_10_grouped_nprobe8"] = recall(gids)
+            metrics["recall_at_10_grouped_nprobe8"] = recall(gids)
 
     g = build_knn_graph(X, 16, xi=64, tau=3, key=jax.random.PRNGKey(2))
     for ef, iters in ((32, 24), (64, 48), (96, 64)):
@@ -98,7 +100,14 @@ def run_single(quick: bool = True):
         us_q = (time.perf_counter() - t0) * 1e6 / nq
         rows.append((f"graph/ef={ef}", us_q,
                      f"recall@10={recall(ids):.3f}"))
-    return rec, rows
+
+    write_json(OUT_JSON, run_record(
+        "anns_ivf",
+        shapes={"n": n, "d": d, "k": k, "topk": topk, "nq": nq},
+        config={"block_rows": 128},
+        metrics=metrics,
+    ))
+    return rows
 
 
 def _sharded_child(quick: bool):
@@ -111,6 +120,8 @@ def _sharded_child(quick: bool):
     from repro.core import gk_means
     from repro.core.distributed import ShardedIvf
     from repro.data import gmm_blobs
+    from repro.obs import run_record, sync_counter, write_json
+    from repro.obs import telemetry as obs_tel
 
     n, d, k = (8192, 32, 64) if quick else (131072, 64, 512)
     R = len(jax.devices())
@@ -128,31 +139,41 @@ def _sharded_child(quick: bool):
     sivf = ShardedIvf(mesh, index)
 
     i1, d1 = jax.device_get(ivf.search(index, q, topk=topk, nprobe=nprobe))
-    jax.block_until_ready(sivf.search(q, topk=topk, nprobe=nprobe))  # warm
+    jax.block_until_ready(sivf.search(q, topk=topk, nprobe=nprobe,
+                                      telemetry=True))   # warm
 
-    # ONE host sync per query batch: the dispatch makes no device->host
-    # transfer; the single device_get below is the only sync
+    # ONE host sync per query batch, with scanned-rows telemetry riding it:
+    # the dispatch makes no device->host transfer; the single sc.get below
+    # is the only sync
     t0 = time.perf_counter()
-    with jax.transfer_guard_device_to_host("disallow"):
-        out = sivf.search(q, topk=topk, nprobe=nprobe)
-    i2, d2s = jax.device_get(out)                        # the ONE sync
+    with sync_counter() as sc:
+        out = sivf.search(q, topk=topk, nprobe=nprobe, telemetry=True)
+        i2, d2s, tel = sc.get(out)                       # the ONE sync
     t_sharded = time.perf_counter() - t0
+    assert sc.syncs == 1, sc.syncs
 
     np.testing.assert_array_equal(i1, i2)
     np.testing.assert_array_equal(d1, d2s)
     hits = (i2[:, :, None] == np.asarray(gt)[:, None, :]).any(-1)
     rec10 = float(hits.mean())
 
-    rec = {
-        "n": n, "d": d, "k": k, "devices": R, "nq": nq, "nprobe": nprobe,
-        "sharded_search_s": t_sharded,
-        "us_per_query_sharded": t_sharded * 1e6 / nq,
-        "recall_at_10_sharded": rec10,
-        "syncs_per_query_batch": 1,
-        "parity_bitexact_vs_single_device": True,
-    }
-    with open(SHARDED_JSON, "w") as f:
-        json.dump(rec, f, indent=1)
+    rec = run_record(
+        "anns_ivf_sharded",
+        shapes={"n": n, "d": d, "k": k, "devices": R, "nq": nq},
+        config={"nprobe": nprobe, "topk": topk, "block_rows": 64,
+                "telemetry": True},
+        metrics={
+            "sharded_search_s": t_sharded,
+            "us_per_query_sharded": t_sharded * 1e6 / nq,
+            "recall_at_10_sharded": rec10,
+            "syncs_per_query_batch": sc.syncs,
+            "parity_bitexact_vs_single_device": True,
+        },
+        telemetry=obs_tel.to_dict(
+            tel, slots=["scanned_rows", "scanned_rows_max_shard",
+                        "scan_frac"]),
+    )
+    write_json(SHARDED_JSON, rec)
 
 
 def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
@@ -162,25 +183,24 @@ def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
         from benchmarks.common import run_forced_host_child
     except ImportError:       # run directly: benchmarks/ itself is sys.path
         from common import run_forced_host_child
+    from repro.obs import load_records
     run_forced_host_child(__file__, quick, devices)
-    with open(SHARDED_JSON) as f:
-        rec = json.load(f)
-    os.remove(SHARDED_JSON)
-    return rec, [
-        ("ivf/sharded_search", rec["sharded_search_s"] * 1e6,
-         f"us_per_query={rec['us_per_query_sharded']:.1f};syncs=1;"
-         f"devices={rec['devices']};parity=bitexact;"
-         f"recall@10={rec['recall_at_10_sharded']:.3f}"),
+    rec = load_records(SHARDED_JSON)[0]
+    m = rec["metrics"]
+    scan_frac = rec.get("telemetry", {}).get("scan_frac", [-1.0])[0]
+    return [
+        ("ivf/sharded_search", m["sharded_search_s"] * 1e6,
+         f"us_per_query={m['us_per_query_sharded']:.1f};"
+         f"syncs={m['syncs_per_query_batch']};telemetry=on;"
+         f"devices={rec['shapes']['devices']};parity=bitexact;"
+         f"recall@10={m['recall_at_10_sharded']:.3f};"
+         f"scan={100 * scan_frac:.1f}%"),
     ]
 
 
 def run(quick: bool = True):
     """Both modes — the benchmarks.run harness entry point."""
-    single, rows = run_single(quick)
-    sharded, rows2 = run_sharded(quick)
-    with open(OUT_JSON, "w") as f:
-        json.dump({"single": single, "sharded": sharded}, f, indent=1)
-    return rows + rows2
+    return run_single(quick) + run_sharded(quick)
 
 
 def main():
@@ -196,16 +216,11 @@ def main():
     if args.child:
         _sharded_child(args.quick)
         return
-    out = {}
     rows = []
     if args.mode in ("single", "both"):
-        out["single"], r = run_single(args.quick)
-        rows += r
+        rows += run_single(args.quick)
     if args.mode in ("sharded", "both"):
-        out["sharded"], r = run_sharded(args.quick)
-        rows += r
-    with open(OUT_JSON, "w") as f:
-        json.dump(out, f, indent=1)
+        rows += run_sharded(args.quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -5,6 +5,11 @@ the O(n·d) distortion on the host after every epoch (one sync per epoch).
 ``engine.run`` keeps the whole loop device-resident — per-epoch distortion in
 O(k·d) from the running stats, early stop in-trace, ONE host sync per run.
 
+Both timed device-resident runs enable ``cfg.telemetry``: the per-epoch
+telemetry rows come back in the SAME single ``device_get`` as the results
+(``obs.sync_counter`` runtime-verifies the count stays 1), and land in the
+emitted record's ``telemetry`` section.
+
 Two modes:
 
   single   the single-device ``engine.run`` vs a host-driven epoch loop
@@ -15,16 +20,17 @@ Two modes:
            ``--xla_force_host_platform_device_count`` so it works on a
            single-CPU box (emits ``BENCH_sharded_run.json``).
 
+Both JSON files are ``repro.bench.v1`` run records (``repro.obs.emit``).
 CLI (the CI smoke step): ``python benchmarks/engine_bench.py --quick``
 runs both modes and prints the CSV rows.
 """
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 SHARDED_DEVICES = 4
+OUT_JSON = "BENCH_engine.json"
 SHARDED_JSON = "BENCH_sharded_run.json"
 
 
@@ -50,6 +56,8 @@ def run_single(quick: bool = True):
     import jax
     from repro.core import build_knn_graph, engine, two_means_tree
     from repro.data import gmm_blobs
+    from repro.obs import run_record, sync_counter, write_json
+    from repro.obs import telemetry as obs_tel
 
     n, d, k, iters = (16384, 32, 256, 10) if quick else (262144, 64, 4096, 10)
     bs = 1024
@@ -59,8 +67,11 @@ def run_single(quick: bool = True):
     a0 = two_means_tree(X, k, key)
     source = engine.graph_source(g.ids)
 
-    # warm both compile paths (same static configs as the timed runs)
-    cfg = engine.EngineConfig(batch_size=bs, iters=iters, min_move_frac=-1.0)
+    # warm both compile paths (same static configs as the timed runs);
+    # the timed device-resident run has telemetry ON — the satellite claim
+    # is that the sync count is UNCHANGED (still 1) with it enabled
+    cfg = engine.EngineConfig(batch_size=bs, iters=iters, min_move_frac=-1.0,
+                              telemetry=True)
     _host_driven(X, a0, k, source, key, 1, bs)
     jax.block_until_ready(
         engine.run(X, engine.init_state(X, a0, k), source, key, cfg)[0])
@@ -70,30 +81,37 @@ def run_single(quick: bool = True):
     t_host = time.perf_counter() - t0
 
     t0 = time.perf_counter()
-    out = engine.run(X, engine.init_state(X, a0, k), source, key, cfg)
-    st, hist, _, epochs, final = jax.device_get(out)   # the ONE sync
+    with sync_counter() as sc:
+        out = engine.run(X, engine.init_state(X, a0, k), source, key, cfg)
+        st, hist, _, epochs, final, tel = sc.get(out)    # the ONE sync
     t_run = time.perf_counter() - t0
+    assert sc.syncs == 1, sc.syncs
 
-    rec = {
-        "n": n, "d": d, "k": k, "iters": iters, "batch_size": bs,
-        "host_driven_s": t_host, "engine_run_s": t_run,
-        "epochs_per_sec_host": iters / t_host,
-        "epochs_per_sec_engine": iters / t_run,
-        "speedup": t_host / t_run,
-        "host_syncs_host_driven": iters,
-        "host_syncs_engine_run": 1,
-        "final_distortion_host": hist_host[-1],
-        "final_distortion_engine": float(final),
-    }
-    with open("BENCH_engine.json", "w") as f:
-        json.dump(rec, f, indent=1)
+    rec = run_record(
+        "engine",
+        shapes={"n": n, "d": d, "k": k, "kappa": 16},
+        config={"iters": iters, "batch_size": bs, "min_move_frac": -1.0,
+                "telemetry": True},
+        metrics={
+            "host_driven_s": t_host, "engine_run_s": t_run,
+            "epochs_per_sec_host": iters / t_host,
+            "epochs_per_sec_engine": iters / t_run,
+            "speedup": t_host / t_run,
+            "host_syncs_host_driven": iters,
+            "host_syncs_engine_run": sc.syncs,
+            "final_distortion_host": hist_host[-1],
+            "final_distortion_engine": float(final),
+        },
+        telemetry=obs_tel.to_dict(tel, rows=int(epochs)),
+    )
+    write_json(OUT_JSON, rec)
 
     return [
         ("engine/host_driven", t_host * 1e6,
          f"epochs_per_s={iters / t_host:.2f};syncs={iters};"
          f"final={hist_host[-1]:.4f}"),
         ("engine/device_resident_run", t_run * 1e6,
-         f"epochs_per_s={iters / t_run:.2f};syncs=1;"
+         f"epochs_per_s={iters / t_run:.2f};syncs={sc.syncs};telemetry=on;"
          f"final={float(final):.4f};speedup={t_host / t_run:.2f}x"),
     ]
 
@@ -105,6 +123,8 @@ def _sharded_child(quick: bool):
     from repro.core import build_knn_graph, engine, two_means_tree
     from repro.core.distributed import ShardedEngine
     from repro.data import gmm_blobs
+    from repro.obs import run_record, sync_counter, write_json
+    from repro.obs import telemetry as obs_tel
 
     n, d, k, iters = (8192, 32, 256, 8) if quick else (262144, 64, 4096, 10)
     R = len(jax.devices())
@@ -117,7 +137,8 @@ def _sharded_child(quick: bool):
     st = engine.init_state(X, a0, k)
 
     mesh = jax.make_mesh((R,), ("data",))
-    cfg = engine.EngineConfig(batch_size=bs, iters=iters, min_move_frac=-1.0)
+    cfg = engine.EngineConfig(batch_size=bs, iters=iters, min_move_frac=-1.0,
+                              telemetry=True)
     eng = ShardedEngine(mesh, cfg)
 
     # warm every compile path
@@ -134,25 +155,33 @@ def _sharded_child(quick: bool):
         hist_host.append(float(eng.distortion(X, assign, D, cnt)))  # sync
     t_host = time.perf_counter() - t0
 
+    # whole-mesh run with telemetry ON, still exactly one host sync
     t0 = time.perf_counter()
-    out = eng.run(X, G, st.assign, st.D, st.cnt, key)
-    assign_r, D_r, cnt_r, hist, mhist, epochs, final = jax.device_get(out)
-    t_run = time.perf_counter() - t0                     # the ONE sync
+    with sync_counter() as sc:
+        out = eng.run(X, G, st.assign, st.D, st.cnt, key)
+        (assign_r, D_r, cnt_r, hist, mhist, epochs, final,
+         tel) = sc.get(out)                              # the ONE sync
+    t_run = time.perf_counter() - t0
+    assert sc.syncs == 1, sc.syncs
 
-    rec = {
-        "n": n, "d": d, "k": k, "iters": iters, "devices": R,
-        "batch_size_per_shard": bs,
-        "host_driven_s": t_host, "sharded_run_s": t_run,
-        "epochs_per_sec_host": iters / t_host,
-        "epochs_per_sec_sharded_run": iters / t_run,
-        "speedup": t_host / t_run,
-        "host_syncs_host_driven": iters,
-        "host_syncs_sharded_run": 1,
-        "final_distortion_host": hist_host[-1],
-        "final_distortion_sharded_run": float(final),
-    }
-    with open(SHARDED_JSON, "w") as f:
-        json.dump(rec, f, indent=1)
+    rec = run_record(
+        "engine_sharded",
+        shapes={"n": n, "d": d, "k": k, "kappa": 16, "devices": R},
+        config={"iters": iters, "batch_size_per_shard": bs,
+                "min_move_frac": -1.0, "telemetry": True},
+        metrics={
+            "host_driven_s": t_host, "sharded_run_s": t_run,
+            "epochs_per_sec_host": iters / t_host,
+            "epochs_per_sec_sharded_run": iters / t_run,
+            "speedup": t_host / t_run,
+            "host_syncs_host_driven": iters,
+            "host_syncs_sharded_run": sc.syncs,
+            "final_distortion_host": hist_host[-1],
+            "final_distortion_sharded_run": float(final),
+        },
+        telemetry=obs_tel.to_dict(tel, rows=int(epochs)),
+    )
+    write_json(SHARDED_JSON, rec)
 
 
 def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
@@ -162,20 +191,22 @@ def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
         from benchmarks.common import run_forced_host_child
     except ImportError:       # run directly: benchmarks/ itself is sys.path
         from common import run_forced_host_child
+    from repro.obs import load_records
     run_forced_host_child(__file__, quick, devices)
-    with open(SHARDED_JSON) as f:
-        rec = json.load(f)
+    rec = load_records(SHARDED_JSON)[0]
+    m, R = rec["metrics"], rec["shapes"]["devices"]
     return [
-        ("engine/sharded_host_driven", rec["host_driven_s"] * 1e6,
-         f"epochs_per_s={rec['epochs_per_sec_host']:.2f};"
-         f"syncs={rec['host_syncs_host_driven']};"
-         f"devices={rec['devices']};"
-         f"final={rec['final_distortion_host']:.4f}"),
-        ("engine/sharded_device_resident_run", rec["sharded_run_s"] * 1e6,
-         f"epochs_per_s={rec['epochs_per_sec_sharded_run']:.2f};syncs=1;"
-         f"devices={rec['devices']};"
-         f"final={rec['final_distortion_sharded_run']:.4f};"
-         f"speedup={rec['speedup']:.2f}x"),
+        ("engine/sharded_host_driven", m["host_driven_s"] * 1e6,
+         f"epochs_per_s={m['epochs_per_sec_host']:.2f};"
+         f"syncs={m['host_syncs_host_driven']};"
+         f"devices={R};"
+         f"final={m['final_distortion_host']:.4f}"),
+        ("engine/sharded_device_resident_run", m["sharded_run_s"] * 1e6,
+         f"epochs_per_s={m['epochs_per_sec_sharded_run']:.2f};"
+         f"syncs={m['host_syncs_sharded_run']};telemetry=on;"
+         f"devices={R};"
+         f"final={m['final_distortion_sharded_run']:.4f};"
+         f"speedup={m['speedup']:.2f}x"),
     ]
 
 

@@ -19,8 +19,8 @@ def _gk_total(X, k, kappa, key, iters=8):
     st = engine.init_state(X, a0, k)
     cfg = engine.EngineConfig(batch_size=1024, iters=iters,
                               min_move_frac=-1.0)
-    st, _, _, _, final = engine.run(X, st, engine.graph_source(g.ids), key,
-                                    cfg)
+    st, _, _, _, final, _ = engine.run(X, st, engine.graph_source(g.ids),
+                                       key, cfg)
     jax.block_until_ready(st.assign)
     return time.perf_counter() - t0, float(final)
 

@@ -15,14 +15,15 @@ Modes:
            forced host devices (child process), asserting bit-exact parity
            with the single-device ``shards=R`` emulation.
 
-Emits ``BENCH_graph_build.json``.  CLI (the CI smoke step):
+Emits ``BENCH_graph_build.json`` (a ``repro.bench.v1`` run record; the
+device-resident build runs with ``cfg.telemetry`` ON and its per-round rows
+land in the record's ``telemetry`` section, still in ONE host sync —
+``obs.sync_counter``-verified).  CLI (the CI smoke step):
 ``python benchmarks/graph_build_bench.py --quick``.
 """
 from __future__ import annotations
 
 import argparse
-import json
-import os
 import time
 
 SHARDED_DEVICES = 4
@@ -43,12 +44,14 @@ def run_single(quick: bool = True):
     from repro.core.graph_build import _refine_rows
     from repro.core.knn_graph import members_table
     from repro.data import gmm_blobs
+    from repro.obs import run_record, sync_counter, write_json
+    from repro.obs import telemetry as obs_tel
 
     n, d, kappa, xi, tau = _bench_case(quick)
     key = jax.random.PRNGKey(0)
     X = gmm_blobs(key, n, d, 256)
     gt = brute_force_knn(X, kappa, chunk=2048)
-    cfg = GraphBuildConfig(kappa=kappa, xi=xi, tau=tau)
+    cfg = GraphBuildConfig(kappa=kappa, xi=xi, tau=tau, telemetry=True)
 
     # ---- host-driven baseline: the pre-PR4 dispatch shape (tree, guided
     # epoch, member table + refine dispatched separately per round) --------
@@ -98,12 +101,14 @@ def run_single(quick: bool = True):
     t_host = time.perf_counter() - t0
 
     # dispatch under a device->host transfer guard: the "1 host sync" claim
-    # written below is runtime-verified, not declared
+    # written below is runtime-verified, not declared — with per-round
+    # telemetry riding the same sync
     t0 = time.perf_counter()
-    with jax.transfer_guard_device_to_host("disallow"):
+    with sync_counter() as sc:
         out = build_graph(X, key, cfg)
-    graph, diag = jax.device_get(out)                       # the ONE sync
+        graph, diag = sc.get(out)                           # the ONE sync
     t_dev = time.perf_counter() - t0
+    assert sc.syncs == 1, sc.syncs
 
     rec_dev = float(recall_at(graph.ids, gt, kappa))
     rec_host = float(recall_at(h_ids, gt, kappa))
@@ -118,23 +123,30 @@ def run_single(quick: bool = True):
     t_nnd = time.perf_counter() - t0
     rec_nnd = float(recall_at(gd.ids, gt, kappa))
 
-    rec = {
-        "n": n, "d": d, "kappa": kappa, "xi": xi, "tau": tau,
-        "nn_descent_iters": nnd_iters,
-        "host_driven_s": t_host, "device_resident_s": t_dev,
-        "nn_descent_s": t_nnd,
-        "epochs_per_sec_host": tau / t_host,
-        "epochs_per_sec_device": tau / t_dev,
-        "dispatches_host_driven": host_dispatches,
-        "dispatches_device_resident": 1,
-        "host_syncs_device_resident": 1,
-        "recall_at_kappa": rec_dev,
-        "recall_at_kappa_host_driven": rec_host,
-        "recall_at_kappa_nn_descent": rec_nnd,
-        "overflow_per_round": [int(v) for v in diag.overflow],
-        "guided_moves_per_round": [int(v) for v in diag.guided_moves],
-    }
-    return rec, [
+    rec = run_record(
+        "graph_build",
+        shapes={"n": n, "d": d, "kappa": kappa, "xi": xi, "tau": tau,
+                "nn_descent_iters": nnd_iters},
+        config={"telemetry": True},
+        metrics={
+            "host_driven_s": t_host, "device_resident_s": t_dev,
+            "nn_descent_s": t_nnd,
+            "epochs_per_sec_host": tau / t_host,
+            "epochs_per_sec_device": tau / t_dev,
+            "dispatches_host_driven": host_dispatches,
+            "dispatches_device_resident": 1,
+            "host_syncs_device_resident": sc.syncs,
+            "recall_at_kappa": rec_dev,
+            "recall_at_kappa_host_driven": rec_host,
+            "recall_at_kappa_nn_descent": rec_nnd,
+        },
+        telemetry=obs_tel.to_dict(
+            diag.telemetry,
+            slots=["overflow", "guided_moves", "graph_updates",
+                   "graph_mean_dist"]),
+    )
+    write_json(OUT_JSON, rec)
+    return [
         ("graph_build/host_driven", t_host * 1e6,
          f"epochs_per_s={tau / t_host:.2f};dispatches={host_dispatches};"
          f"recall@{kappa}={rec_host:.3f}"),
@@ -152,12 +164,15 @@ def _sharded_child(quick: bool):
     import numpy as np
     from repro.core import GraphBuildConfig, GraphBuilder, build_graph
     from repro.data import gmm_blobs
+    from repro.obs import run_record, sync_counter, write_json
+    from repro.obs import telemetry as obs_tel
 
     n, d, kappa, xi, tau = _bench_case(quick)
     R = len(jax.devices())
     key = jax.random.PRNGKey(0)
     X = gmm_blobs(key, n, d, 256)
-    cfg = GraphBuildConfig(kappa=kappa, xi=xi, tau=tau, shards=R)
+    cfg = GraphBuildConfig(kappa=kappa, xi=xi, tau=tau, shards=R,
+                           telemetry=True)
     mesh = jax.make_mesh((R,), ("data",))
     builder = GraphBuilder(cfg, mesh=mesh)
 
@@ -165,25 +180,37 @@ def _sharded_child(quick: bool):
     jax.block_until_ready(builder.build(X, key)[0].ids)  # warm
 
     t0 = time.perf_counter()
-    with jax.transfer_guard_device_to_host("disallow"):
+    with sync_counter() as sc:
         out = builder.build(X, key)
-    g2, d2 = jax.device_get(out)                         # the ONE sync
+        g2, d2 = sc.get(out)                             # the ONE sync
     t_sharded = time.perf_counter() - t0
+    assert sc.syncs == 1, sc.syncs
 
     np.testing.assert_array_equal(g1.ids, g2.ids)
     np.testing.assert_array_equal(g1.dist, g2.dist)
     np.testing.assert_array_equal(d1.overflow, d2.overflow)
     np.testing.assert_array_equal(d1.guided_moves, d2.guided_moves)
+    np.testing.assert_array_equal(d1.telemetry.i32, d2.telemetry.i32)
+    np.testing.assert_allclose(d1.telemetry.f32, d2.telemetry.f32,
+                               rtol=1e-5)
 
-    rec = {
-        "n": n, "d": d, "kappa": kappa, "xi": xi, "tau": tau, "devices": R,
-        "sharded_build_s": t_sharded,
-        "epochs_per_sec_sharded": tau / t_sharded,
-        "host_syncs_sharded_build": 1,
-        "parity_bitexact_vs_single_device": True,
-    }
-    with open(SHARDED_JSON, "w") as f:
-        json.dump(rec, f, indent=1)
+    rec = run_record(
+        "graph_build_sharded",
+        shapes={"n": n, "d": d, "kappa": kappa, "xi": xi, "tau": tau,
+                "devices": R},
+        config={"telemetry": True},
+        metrics={
+            "sharded_build_s": t_sharded,
+            "epochs_per_sec_sharded": tau / t_sharded,
+            "host_syncs_sharded_build": sc.syncs,
+            "parity_bitexact_vs_single_device": True,
+        },
+        telemetry=obs_tel.to_dict(
+            d2.telemetry,
+            slots=["overflow", "guided_moves", "graph_updates",
+                   "graph_mean_dist"]),
+    )
+    write_json(SHARDED_JSON, rec)
 
 
 def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
@@ -193,24 +220,21 @@ def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
         from benchmarks.common import run_forced_host_child
     except ImportError:       # run directly: benchmarks/ itself is sys.path
         from common import run_forced_host_child
+    from repro.obs import load_records
     run_forced_host_child(__file__, quick, devices)
-    with open(SHARDED_JSON) as f:
-        rec = json.load(f)
-    os.remove(SHARDED_JSON)
-    return rec, [
-        ("graph_build/sharded_device_resident", rec["sharded_build_s"] * 1e6,
-         f"epochs_per_s={rec['epochs_per_sec_sharded']:.2f};syncs=1;"
-         f"devices={rec['devices']};parity=bitexact"),
+    rec = load_records(SHARDED_JSON)[0]
+    m = rec["metrics"]
+    return [
+        ("graph_build/sharded_device_resident", m["sharded_build_s"] * 1e6,
+         f"epochs_per_s={m['epochs_per_sec_sharded']:.2f};"
+         f"syncs={m['host_syncs_sharded_build']};telemetry=on;"
+         f"devices={rec['shapes']['devices']};parity=bitexact"),
     ]
 
 
 def run(quick: bool = True):
     """Both modes — the benchmarks.run harness entry point."""
-    single, rows = run_single(quick)
-    sharded, rows2 = run_sharded(quick)
-    with open(OUT_JSON, "w") as f:
-        json.dump({"single": single, "sharded": sharded}, f, indent=1)
-    return rows + rows2
+    return run_single(quick) + run_sharded(quick)
 
 
 def main():
@@ -226,16 +250,11 @@ def main():
     if args.child:
         _sharded_child(args.quick)
         return
-    out = {}
     rows = []
     if args.mode in ("single", "both"):
-        out["single"], r = run_single(args.quick)
-        rows += r
+        rows += run_single(args.quick)
     if args.mode in ("sharded", "both"):
-        out["sharded"], r = run_sharded(args.quick)
-        rows += r
-    with open(OUT_JSON, "w") as f:
-        json.dump(out, f, indent=1)
+        rows += run_sharded(args.quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -1,35 +1,53 @@
 """Kernel micro-benchmarks: hot-spot ops vs their jnp references (CPU runs
-the reference path; on TPU the same harness times the Pallas kernels)."""
+the reference path; on TPU the same harness times the Pallas kernels).
+
+Emits ``BENCH_kernels.json`` — a ``repro.bench.v1`` run record whose
+``metrics["kernels"]`` entries carry the measured microseconds AND the shape
+arguments of the matching ``launch.roofline.KERNEL_INVENTORY`` entry, so
+``launch/obs_report.py`` can join measured time against the analytic
+flops/HBM model without re-deriving shapes.
+"""
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+import argparse
 
-from benchmarks.common import timed
-from repro.data import gmm_blobs
-from repro.kernels import ops
-from repro.launch.roofline import KERNEL_INVENTORY
+OUT_JSON = "BENCH_kernels.json"
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, entries=None):
+    """Time the kernels; append structured entries to ``entries`` if given."""
+    import jax
+    import jax.numpy as jnp
+
+    try:
+        from benchmarks.common import timed
+    except ImportError:       # run directly: benchmarks/ itself is sys.path
+        from common import timed
+    from repro.data import gmm_blobs
+    from repro.kernels import ops
+    from repro.launch.roofline import KERNEL_INVENTORY
+
     rows = []
+
+    def add(kernel, us, shape):
+        flops = KERNEL_INVENTORY[kernel]["flops"](*shape.values())
+        dims = ",".join(f"{k}={v}" for k, v in shape.items())
+        rows.append((f"kernel/{kernel}({dims})", us,
+                     f"gflops={flops / us / 1e3:.1f}"))
+        if entries is not None:
+            entries.append({"kernel": kernel, "us": us, "shape": dict(shape)})
+
     key = jax.random.PRNGKey(0)
     B, m, d = (256, 64, 128) if quick else (2048, 64, 512)
     Xb = gmm_blobs(key, B * m, d, 8).reshape(B, m, d)
     f = jax.jit(lambda x: ops.pairwise_sq(x))
-    us = timed(f, Xb)
-    flops = 2.0 * B * m * m * d
-    rows.append((f"kernel/pairwise_sq(B={B},m={m},d={d})", us,
-                 f"gflops={flops / us / 1e3:.1f}"))
+    add("pairwise_sq", timed(f, Xb), {"B": B, "m": m, "d": d})
 
     n, k = (65536, 4096) if quick else (1_000_000, 10_000)
     X = gmm_blobs(key, n, d, 8)
     C = gmm_blobs(jax.random.fold_in(key, 1), k, d, 8)
     f = jax.jit(lambda x, c: ops.assign_centroids(x, c)[0])
-    us = timed(f, X, C)
-    flops = KERNEL_INVENTORY["assign_centroids"]["flops"](n, k, d)
-    rows.append((f"kernel/assign_centroids(n={n},k={k},d={d})", us,
-                 f"gflops={flops / us / 1e3:.1f}"))
+    add("assign_centroids", timed(f, X, C), {"n": n, "k": k, "d": d})
 
     # engine move-step scoring: gather + ΔI without the (B, C, d) tensor
     Bg, Cg = (8192, 16) if quick else (65536, 50)
@@ -40,10 +58,8 @@ def run(quick: bool = True):
     D = gmm_blobs(jax.random.fold_in(kk, 3), k, d, 8)
     cnt = jnp.ones((k,), jnp.float32) * 4
     f = jax.jit(lambda *a: ops.gather_score(*a))
-    us = timed(f, xg, u, cand, D, cnt)
-    flops = KERNEL_INVENTORY["gather_score"]["flops"](Bg, Cg, d)
-    rows.append((f"kernel/gather_score(B={Bg},C={Cg},d={d})", us,
-                 f"gflops={flops / us / 1e3:.1f}"))
+    add("gather_score", timed(f, xg, u, cand, D, cnt),
+        {"B": Bg, "C": Cg, "d": d})
 
     # graph-build refinement: fused candidate-distance + top-κ merge, timed
     # through the chunked production entry point (the raw ref path would
@@ -57,8 +73,37 @@ def run(quick: bool = True):
     gd = jnp.full((Br, kap), jnp.inf, jnp.float32)
     f = jax.jit(lambda x, rw, a, b, Xs: _refine_rows(x, rw, rw, a, b, Xs,
                                                      4096, None))
-    us = timed(f, xr, rws, gi, gd, X)
-    flops = KERNEL_INVENTORY["refine_merge"]["flops"](Br, Cr, d, kap)
-    rows.append((f"kernel/refine_merge(B={Br},C={Cr},d={d},kappa={kap})", us,
-                 f"gflops={flops / us / 1e3:.1f}"))
+    add("refine_merge", timed(f, xr, rws, gi, gd, X),
+        {"B": Br, "C": Cr, "d": d, "kappa": kap})
     return rows
+
+
+def run_and_emit(quick: bool = True):
+    """Time the kernels and write the ``BENCH_kernels.json`` run record."""
+    from repro.obs import run_record, write_json
+    entries = []
+    rows = run(quick, entries=entries)
+    write_json(OUT_JSON, run_record(
+        "kernels",
+        shapes={"quick": quick},
+        config={},
+        metrics={"kernels": entries},
+    ))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    size = ap.add_mutually_exclusive_group()
+    size.add_argument("--quick", dest="quick", action="store_true",
+                      default=True)
+    size.add_argument("--full", dest="quick", action="store_false")
+    args = ap.parse_args()
+    rows = run_and_emit(args.quick)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

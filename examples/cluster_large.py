@@ -7,9 +7,14 @@ the regime where traditional k-means is hopeless and GK-means shines.
 Both topologies run the epoch loop fully device-resident — ``engine.run`` on
 one device, ``ShardedEngine.run`` SPMD across a multi-device mesh — so either
 way the whole loop (per-epoch distortion + ``min_move_frac`` early stop) costs
-ONE host sync.  When n is not divisible by the device count (shard_map needs
-equal shards), the first ``usable_rows(n, R)`` rows are clustered and the
-remainder is assigned to its nearest centroid post-hoc, with a warning.
+ONE host sync, runtime-verified by ``obs.sync_counter`` with per-epoch
+telemetry riding the same sync.  When n is not divisible by the device count
+(shard_map needs equal shards), the first ``usable_rows(n, R)`` rows are
+clustered and the remainder is assigned to its nearest centroid post-hoc.
+
+Diagnostics (the truncation/remainder accounting, graph-build round
+diagnostics, per-epoch telemetry) land in a structured ``repro.bench.v1``
+run record — printed as JSONL, or written to ``--emit PATH``.
 """
 import argparse
 import math
@@ -22,6 +27,8 @@ from repro.core import build_knn_graph, engine, two_means_tree
 from repro.core.distributed import ShardedEngine, usable_rows
 from repro.kernels import ops as kops
 from repro.data import gmm_blobs
+from repro.obs import emit, sync_counter
+from repro.obs import telemetry as obs_tel
 
 
 def main():
@@ -30,6 +37,8 @@ def main():
     ap.add_argument("--k", type=int, default=8192)
     ap.add_argument("--d", type=int, default=64)
     ap.add_argument("--iters", type=int, default=8)
+    ap.add_argument("--emit", default=None, metavar="PATH",
+                    help="write the run record to PATH instead of stdout")
     args = ap.parse_args()
 
     key = jax.random.PRNGKey(0)
@@ -53,39 +62,47 @@ def main():
     Xc = X[:n_use]
 
     t0 = time.time()
-    g = build_knn_graph(Xc, 16, xi=64, tau=4, key=key)
-    print(f"[graph] built in {time.time() - t0:.1f}s")
+    g, gdiag = build_knn_graph(Xc, 16, xi=64, tau=4, key=key,
+                               return_diagnostics=True, telemetry=True)
+    t_graph = time.time() - t0
+    print(f"[graph] built in {t_graph:.1f}s")
 
     t0 = time.time()
     a0 = two_means_tree(Xc, args.k, key)
-    print(f"[init] 2M tree ({args.k} clusters) in {time.time() - t0:.1f}s")
+    t_init = time.time() - t0
+    print(f"[init] 2M tree ({args.k} clusters) in {t_init:.1f}s")
 
     st = engine.init_state(Xc, a0, args.k)
     xsq = jnp.sum(jnp.square(Xc.astype(jnp.float32)))
     d_init = float(engine.stats_distortion(xsq, st.D, st.cnt, n_use))
     print(f"[init] distortion {d_init:.4f}")
     cfg = engine.EngineConfig(batch_size=1024, iters=args.iters,
-                              min_move_frac=1e-4)
+                              min_move_frac=1e-4, telemetry=True)
     t0 = time.time()
     if n_dev > 1:
         mesh = jax.make_mesh((n_dev,), ("data",))
         eng = ShardedEngine(mesh, cfg)
         G = jnp.maximum(g.ids, 0)
-        assign, D, cnt, hist, moves, epochs, final = jax.device_get(
-            eng.run(Xc, G, st.assign, st.D, st.cnt, key))
+        with sync_counter() as sc:
+            out = eng.run(Xc, G, st.assign, st.D, st.cnt, key)
+            (assign, D, cnt, hist, moves, epochs, final,
+             tel) = sc.get(out)                           # the ONE sync
         where = f"{n_dev} devices"
     else:
-        st, hist, moves, epochs, final = jax.device_get(
-            engine.run(Xc, st, engine.graph_source(g.ids), key, cfg))
+        with sync_counter() as sc:
+            out = engine.run(Xc, st, engine.graph_source(g.ids), key, cfg)
+            st, hist, moves, epochs, final, tel = sc.get(out)
         D, cnt = st.D, st.cnt
         where = "1 device"
     dt = time.time() - t0
+    assert sc.syncs == 1, sc.syncs
     for t in range(int(epochs)):
         print(f"[iter {t}] moves={int(moves[t])} dist={hist[t]:.4f}")
     print(f"[run] {int(epochs)} device-resident epochs in {dt:.1f}s "
           f"({where}, one host sync)")
     d_last = float(final)
 
+    rem_distinct = 0
     if rem:
         import numpy as np
         # restrict the candidate set to non-empty clusters: an empty
@@ -97,11 +114,40 @@ def main():
         C = (D / jnp.maximum(jnp.asarray(cnt), 1.0)[:, None])[nonempty]
         rem_idx, _ = kops.assign_centroids(X[n_use:], C)
         rem_assign = nonempty[np.asarray(rem_idx)]
+        rem_distinct = len(set(rem_assign.tolist()))
         print(f"[remainder] {rem} rows assigned to their nearest centroid "
-              f"({len(set(rem_assign.tolist()))} distinct clusters)")
+              f"({rem_distinct} distinct clusters)")
 
     assert d_last < d_init, (d_init, d_last)
     print(f"[done] distortion {d_init:.4f} -> {d_last:.4f} (converging)")
+
+    # the structured run record: truncation accounting + graph-build round
+    # diagnostics + per-epoch telemetry, one schema with the benchmarks
+    rec = emit.run_record(
+        "cluster_large",
+        shapes={"n": args.n, "n_clustered": n_use, "remainder_rows": rem,
+                "d": args.d, "k": args.k, "devices": n_dev},
+        config={"iters": args.iters, "batch_size": 1024,
+                "min_move_frac": 1e-4, "telemetry": True},
+        metrics={
+            "graph_build_s": t_graph, "init_s": t_init, "run_s": dt,
+            "epochs": int(epochs), "host_syncs_run": sc.syncs,
+            "distortion_init": d_init, "distortion_final": d_last,
+            "remainder_distinct_clusters": rem_distinct,
+            "graph_overflow_per_round": [int(v) for v in gdiag.overflow],
+            "graph_guided_moves_per_round": [int(v)
+                                             for v in gdiag.guided_moves],
+        },
+        telemetry=obs_tel.to_dict(
+            jax.device_get(tel), rows=int(epochs),
+            slots=["moves", "proposed", "empty_clusters", "distortion",
+                   "hit_rate"]),
+    )
+    if args.emit:
+        emit.write_json(args.emit, rec)
+        print(f"[emit] run record -> {args.emit}")
+    else:
+        emit.emit_stdout([rec])
 
 
 if __name__ == "__main__":

@@ -38,5 +38,6 @@ def run_bkm(X: jax.Array, assign0: jax.Array, k: int, *, iters: int,
     # fixed-length for the figure scripts)
     cfg = EngineConfig(batch_size=min(batch_size, X.shape[0]), mode=mode,
                        eps=eps, iters=iters, min_move_frac=-1.0)
-    state, hist, _, _, _ = run(X, init_state(X, assign0, k), source, key, cfg)
+    state, hist, _, _, _, _ = run(X, init_state(X, assign0, k), source, key,
+                                  cfg)
     return state, hist

@@ -61,7 +61,7 @@ def closure_kmeans(X: jax.Array, k: int, *, iters: int = 20, trees: int = 3,
     state = engine.init_state(X, assign, k2)
     cfg = engine.EngineConfig(batch_size=min(batch_size, n), mode="lloyd",
                               iters=iters, min_move_frac=-1.0)
-    state, hist, _, _, _ = engine.run(X, state, engine.graph_source(ids),
-                                      kb, cfg)
+    state, hist, _, _, _, _ = engine.run(X, state, engine.graph_source(ids),
+                                         kb, cfg)
     C = centroids(cluster_stats(X, state.assign, k2))
     return state.assign, C, [float(h) for h in jax.device_get(hist)]

@@ -78,9 +78,11 @@ class ShardedEngine:
       ``epoch(X, G, assign, D, cnt, key)``  -> (assign, D, cnt, moves)
           one pass (``engine.sharded_epoch_body``);
       ``run(X, G, assign, D, cnt, key)``    -> (assign, D, cnt, hist, mhist,
-          epochs, final) — the whole ``cfg.iters`` epoch loop, per-epoch
+          epochs, final, tel) — the whole ``cfg.iters`` epoch loop, per-epoch
           stats distortion and the ``min_move_frac`` early stop inside ONE
-          trace (``engine.sharded_run_body``): one host sync per run;
+          trace (``engine.sharded_run_body``): one host sync per run.
+          ``tel`` is a replicated per-epoch ``obs.telemetry.Telemetry`` when
+          ``cfg.telemetry`` and None otherwise — it rides the same sync;
       ``distortion(X, assign, D, cnt)``     -> () global mean distortion
           (O(n·d) recompute, for host-driven loops and checks).
 
@@ -109,8 +111,11 @@ class ShardedEngine:
             return dense_source()
 
         def epoch_fn(X, G, assign, D, cnt, key):
-            return sharded_epoch_body(X, source(G), assign, D, cnt, key,
-                                      cfg=cfg, data_axes=self.data_axes)
+            # keep the public epoch API a 4-tuple: drop the telemetry-only
+            # `prop` counter (run() is where telemetry surfaces)
+            out = sharded_epoch_body(X, source(G), assign, D, cnt, key,
+                                     cfg=cfg, data_axes=self.data_axes)
+            return out[:4]
 
         def run_fn(X, G, assign, D, cnt, key):
             return sharded_run_body(X, source(G), assign, D, cnt, key,
@@ -127,9 +132,12 @@ class ShardedEngine:
         self.epoch = jax.jit(shard_map(
             epoch_fn, mesh=mesh, in_specs=(row, row, row, rep, rep, rep),
             out_specs=(row, rep, rep, rep), check_rep=False))
+        # trailing rep spec covers `tel` — P() over the disabled path's None
+        # (an empty pytree) is a no-op, so one spec list serves both modes
         self.run = jax.jit(shard_map(
             run_fn, mesh=mesh, in_specs=(row, row, row, rep, rep, rep),
-            out_specs=(row, rep, rep, rep, rep, rep, rep), check_rep=False))
+            out_specs=(row, rep, rep, rep, rep, rep, rep, rep),
+            check_rep=False))
         self.distortion = jax.jit(shard_map(
             dist_fn, mesh=mesh, in_specs=(row, row, rep, rep),
             out_specs=rep, check_rep=False))
@@ -187,6 +195,7 @@ class ShardedIvf:
         self.k = index.k
         self.block_rows = index.block_rows
         self.max_list_tiles = index.max_list_tiles
+        self.capacity_rows = index.capacity_rows  # scan_frac denominator
         row, rep = (NamedSharding(mesh, P(self.data_axes)),
                     NamedSharding(mesh, P()))
         self.centroids = jax.device_put(index.centroids, rep)
@@ -200,46 +209,90 @@ class ShardedIvf:
                                 caps=jax.device_put(p.caps, row))
         self._progs = {}
 
-    def search(self, Q: jax.Array, *, topk: int = 10, nprobe: int = 8):
-        """Top-k over the sharded lists -> (ids (q, topk), d2 (q, topk))."""
+    def search(self, Q: jax.Array, *, topk: int = 10, nprobe: int = 8,
+               qgroup=None, telemetry: bool = False):
+        """Top-k over the sharded lists -> (ids (q, topk), d2 (q, topk)).
+
+        ``qgroup=G`` runs the query-grouped scan layout per shard (each
+        shard groups by ITS local tile locality; results are scattered back
+        to original query order before the cross-shard merge, so the merged
+        output is replicated and matches per-query ids whenever distances
+        are distinct).  ``telemetry=True`` appends a 1-row
+        ``obs.telemetry.Telemetry`` third output (scanned_rows,
+        scanned_rows_max_shard, scan_frac) accumulated in-trace — it rides
+        the same single host sync as the ids.
+        """
         assert nprobe >= 1, nprobe
         nprobe = min(nprobe, self.k)
         if self.max_list_tiles == 0:      # every list empty: nothing to scan
             from repro.index.probe import _no_candidates
-            return _no_candidates(Q.shape[0], topk)
+            from repro.obs import telemetry as obs_tel
+            out = _no_candidates(Q.shape[0], topk)
+            return out + (obs_tel.init(1),) if telemetry else out
         p = self.parts
-        return self._prog(topk, nprobe)(Q, p.vecs, p.ids, p.starts, p.caps,
-                                        self.centroids)
+        prog = self._prog(topk, nprobe, qgroup, telemetry)
+        return prog(Q, p.vecs, p.ids, p.starts, p.caps, self.centroids)
 
-    def _prog(self, topk: int, nprobe: int):
-        key = (topk, nprobe)
+    def _prog(self, topk: int, nprobe: int, qgroup, telemetry: bool):
+        key = (topk, nprobe, qgroup, telemetry)
         if key in self._progs:
             return self._progs[key]
-        from repro.index.probe import build_tile_map, merge_shard_topk
+        from repro.index.probe import (build_group_map, build_tile_map,
+                                       merge_shard_topk)
         from repro.kernels import ops as kops
         from repro.kernels.ref import finalize_d2
+        from repro.obs import telemetry as obs_tel
         bl = self.block_rows
         max_tiles = self.max_list_tiles
         null_loc = self.parts.rows_loc // bl - 1    # last local tile: holes
         axes = self.data_axes
         R = self.shards
+        cap = max(self.capacity_rows, 1)
+        grouped = qgroup is not None and qgroup > 1
 
         def body(Q, svecs, sids, sstarts, scaps, C):
+            q = Q.shape[0]
             # replicated probe: every shard computes the same cell ids
             cids, _ = kops.probe_centroids(Q, C, nprobe)
             tm = build_tile_map(cids, sstarts, scaps, max_tiles=max_tiles,
                                 block_rows=bl, null_tile=null_loc)
-            lid, lod = kops.ivf_scan(Q, svecs, sids, tm, block_rows=bl,
-                                     topk=topk, raw=True)
+            if grouped:
+                # shard-local grouping (order depends on LOCAL tile ids);
+                # scatter raw results back to the original query order so
+                # the all-gathered tensors are replicated across shards
+                order, union, qmask = build_group_map(tm, group=qgroup,
+                                                      null_tile=null_loc)
+                Qg = Q[jnp.clip(order, 0, q - 1)]
+                gi, gd = kops.ivf_scan_grouped(Qg, svecs, sids, union, qmask,
+                                               block_rows=bl, topk=topk,
+                                               raw=True)
+                lid = jnp.full((q, topk), -1, jnp.int32
+                               ).at[order].set(gi, mode="drop")
+                lod = jnp.full((q, topk), jnp.inf, jnp.float32
+                               ).at[order].set(gd, mode="drop")
+            else:
+                lid, lod = kops.ivf_scan(Q, svecs, sids, tm, block_rows=bl,
+                                         topk=topk, raw=True)
             agi, agd = jax.lax.all_gather((lid, lod), axes)  # (R, q, topk)
             ids, od = merge_shard_topk(agi.reshape(R, *lid.shape),
                                        agd.reshape(R, *lod.shape), topk)
-            return finalize_d2(ids, od, Q)
+            out = finalize_d2(ids, od, Q)
+            if not telemetry:
+                return out
+            scanned_loc = jnp.sum(scaps[cids], dtype=jnp.int32)
+            total = jax.lax.psum(scanned_loc, axes)
+            worst = jax.lax.pmax(scanned_loc, axes)
+            tel = obs_tel.record(
+                obs_tel.init(1), 0, scanned_rows=total,
+                scanned_rows_max_shard=worst,
+                scan_frac=total.astype(jnp.float32) / (q * cap))
+            return out + (tel,)
 
         row, rep = P(self.data_axes), P()
+        out_specs = (rep, rep, rep) if telemetry else (rep, rep)
         prog = jax.jit(shard_map(
             body, mesh=self.mesh,
-            in_specs=(rep, row, row, row, row, rep), out_specs=(rep, rep),
+            in_specs=(rep, row, row, row, row, rep), out_specs=out_specs,
             check_rep=False))
         self._progs[key] = prog
         return prog

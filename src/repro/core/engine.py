@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops as kops
+from repro.obs import telemetry as obs_tel
 
 
 class BKMState(NamedTuple):
@@ -115,6 +116,7 @@ class EngineConfig(NamedTuple):
     payload_bf16: bool = False    # sparse payload in bf16 (halves wire bytes)
     shards: int = 1             # single-device emulation of an R-way order
     force: Optional[str] = None  # kernel dispatch override (None|'ref'|...)
+    telemetry: bool = False     # in-trace per-epoch Telemetry (obs.telemetry)
 
 
 # ---------------------------------------------------------------------------
@@ -237,6 +239,10 @@ def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
     else:
         moved, want_v = score(xb, u, idx)
 
+    # proposed moves BEFORE the leaver guard (telemetry: the guard's vetoes
+    # are `proposed - moves`); None when disabled so it compiles away.
+    prop = jnp.sum(moved, dtype=jnp.int32) if cfg.telemetry else None
+
     if comm is not None and cfg.sparse_updates:
         # gather every replica's proposed moves, then apply the leaver guard
         # + scatter locally — identical on all replicas, O(R*B*d) wire bytes
@@ -312,7 +318,7 @@ def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
 
     assign = assign.at[idx].set(v.astype(jnp.int32))
     moves = moves + jnp.sum(moved, dtype=jnp.int32)
-    return assign, D, cnt, moves
+    return assign, D, cnt, moves, prop
 
 
 # ---------------------------------------------------------------------------
@@ -320,7 +326,9 @@ def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
 # ---------------------------------------------------------------------------
 
 def _epoch_impl(X, state: BKMState, source: CandidateSource, key,
-                cfg: EngineConfig) -> BKMState:
+                cfg: EngineConfig):
+    """One epoch; returns (BKMState, prop) where prop is the epoch's total
+    pre-guard proposed moves (None unless ``cfg.telemetry``)."""
     n = X.shape[0]
     R = cfg.shards
     n_loc = n // R
@@ -333,15 +341,19 @@ def _epoch_impl(X, state: BKMState, source: CandidateSource, key,
                                    * n_loc)[:, None]
     lookup = state.assign      # candidate lookup: epoch-start snapshot
     state = state._replace(moves=jnp.zeros((), jnp.int32))
+    prop0 = jnp.zeros((), jnp.int32) if cfg.telemetry else None
 
-    def body(i, st):
+    def body(i, carry):
+        st, prop = carry
         idx = jax.lax.dynamic_slice(orders, (0, i * bs), (R, bs)).reshape(-1)
-        assign, D, cnt, moves = _move_step(
+        assign, D, cnt, moves, p = _move_step(
             X, st.assign, st.D, st.cnt, st.moves, idx, lookup, source, cfg,
             None)
-        return BKMState(assign, D, cnt, moves)
+        if prop is not None:
+            prop = prop + p
+        return BKMState(assign, D, cnt, moves), prop
 
-    return jax.lax.fori_loop(0, nb, body, state)
+    return jax.lax.fori_loop(0, nb, body, (state, prop0))
 
 
 @functools.partial(jax.jit, static_argnums=(4,))
@@ -354,7 +366,7 @@ def epoch(X: jax.Array, state: BKMState, source: CandidateSource,
     epoch-start assignment (refreshing it per batch is a HBM round-trip per
     step; staleness within one epoch matches the sharded semantics).
     """
-    return _epoch_impl(X, state, source, key, cfg)
+    return _epoch_impl(X, state, source, key, cfg)[0]
 
 
 def epoch_inline(X: jax.Array, state: BKMState, source: CandidateSource,
@@ -365,7 +377,7 @@ def epoch_inline(X: jax.Array, state: BKMState, source: CandidateSource,
     through this inside the device-resident tau-round scan; semantics are
     identical to ``epoch`` (including the ``cfg.shards`` R-way emulation
     used by the topology-parity tests)."""
-    return _epoch_impl(X, state, source, key, cfg)
+    return _epoch_impl(X, state, source, key, cfg)[0]
 
 
 def stats_distortion(xsq_total, D, cnt, n) -> jax.Array:
@@ -375,35 +387,50 @@ def stats_distortion(xsq_total, D, cnt, n) -> jax.Array:
     return (xsq_total - objective) / n
 
 
+def _epoch_telemetry(tel, t, st, prop, dist):
+    """File one epoch's engine slots at row t (None tel passes through)."""
+    if tel is None:
+        return None
+    hit = st.moves.astype(jnp.float32) / jnp.maximum(
+        prop.astype(jnp.float32), 1.0)
+    return obs_tel.record(tel, t, moves=st.moves, proposed=prop,
+                          empty_clusters=jnp.sum(st.cnt <= 0.0,
+                                                 dtype=jnp.int32),
+                          distortion=dist, hit_rate=hit)
+
+
 def _run_impl(X, state, source, key, cfg):
     n = X.shape[0]
     xsq_total = jnp.sum(jnp.square(X.astype(jnp.float32)))   # hoisted once
     hist0 = jnp.full((cfg.iters,), jnp.nan, jnp.float32)
     mhist0 = jnp.zeros((cfg.iters,), jnp.int32)
+    tel0 = obs_tel.init(cfg.iters) if cfg.telemetry else None
     thresh = cfg.min_move_frac * n
     if cfg.iters == 0:     # static: a 0-length hist cannot be .at[t]-traced
         return (state, hist0, mhist0, jnp.zeros((), jnp.int32),
-                stats_distortion(xsq_total, state.D, state.cnt, n))
+                stats_distortion(xsq_total, state.D, state.cnt, n), tel0)
 
     def cond(carry):
-        t, _, _, _, done = carry
+        t, _, _, _, _, done = carry
         return (t < cfg.iters) & ~done
 
     def body(carry):
-        t, st, hist, mhist, _ = carry
-        st = _epoch_impl(X, st, source, jax.random.fold_in(key, t), cfg)
+        t, st, hist, mhist, tel, _ = carry
+        st, prop = _epoch_impl(X, st, source, jax.random.fold_in(key, t),
+                               cfg)
         dist = stats_distortion(xsq_total, st.D, st.cnt, n)
         hist = hist.at[t].set(dist)
         mhist = mhist.at[t].set(st.moves)
+        tel = _epoch_telemetry(tel, t, st, prop, dist)
         done = st.moves <= thresh
-        return t + 1, st, hist, mhist, done
+        return t + 1, st, hist, mhist, tel, done
 
-    t, st, hist, mhist, _ = jax.lax.while_loop(
+    t, st, hist, mhist, tel, _ = jax.lax.while_loop(
         cond, body,
-        (jnp.zeros((), jnp.int32), state, hist0, mhist0,
+        (jnp.zeros((), jnp.int32), state, hist0, mhist0, tel0,
          jnp.zeros((), bool)))
     final = stats_distortion(xsq_total, st.D, st.cnt, n)
-    return st, hist, mhist, t, final
+    return st, hist, mhist, t, final, tel
 
 
 _run_donate = jax.jit(_run_impl, static_argnums=(4,), donate_argnums=(1,))
@@ -412,15 +439,20 @@ _run_plain = jax.jit(_run_impl, static_argnums=(4,))
 
 def run(X: jax.Array, state: BKMState, source: CandidateSource,
         key: jax.Array, cfg: EngineConfig
-        ) -> Tuple[BKMState, jax.Array, jax.Array, jax.Array, jax.Array]:
+        ) -> Tuple[BKMState, jax.Array, jax.Array, jax.Array, jax.Array,
+                   Optional[obs_tel.Telemetry]]:
     """Device-resident multi-epoch run (state buffers donated on accelerators).
 
     Returns (state, hist (iters,) f32 per-epoch distortion (NaN past the
     early stop), mhist (iters,) int32 per-epoch accepted moves, epochs ()
-    int32 actually executed, final () f32 distortion).  The whole loop —
-    including the ``min_move_frac`` early stop and the per-epoch distortion
-    — runs inside one trace: callers pay one host sync per run, not one per
-    epoch.
+    int32 actually executed, final () f32 distortion, tel).  ``tel`` is a
+    per-epoch ``obs.telemetry.Telemetry`` when ``cfg.telemetry`` (slots:
+    moves, proposed, empty_clusters, distortion, hit_rate — rows past the
+    early stop stay 0) and None otherwise; being accumulated inside the
+    while_loop it returns in the SAME host sync as the state.  The whole
+    loop — including the ``min_move_frac`` early stop and the per-epoch
+    distortion — runs inside one trace: callers pay one host sync per run,
+    not one per epoch.
     """
     f = _run_plain if jax.default_backend() == "cpu" else _run_donate
     return f(X, state, source, key, cfg)
@@ -429,7 +461,7 @@ def run(X: jax.Array, state: BKMState, source: CandidateSource,
 def run_inline(X: jax.Array, state: BKMState, source: CandidateSource,
                key: jax.Array, cfg: EngineConfig
                ) -> Tuple[BKMState, jax.Array, jax.Array, jax.Array,
-                          jax.Array]:
+                          jax.Array, Optional[obs_tel.Telemetry]]:
     """``run`` without buffer donation — safe under vmap / an outer trace.
 
     Same return signature as ``run``; use this when the multi-epoch loop is
@@ -447,7 +479,9 @@ def sharded_epoch_body(X, source: CandidateSource, assign, D, cnt, key, *,
                        cfg: EngineConfig, data_axes: Tuple[str, ...]):
     """One epoch inside shard_map: X/G/assign row-sharded, (D, cnt) replicated.
 
-    Returns (assign, D, cnt, moves).  Shares ``_move_step`` with the
+    Returns (assign, D, cnt, moves, prop) — ``moves``/``prop`` are psum'd
+    global accepted/pre-guard-proposed counts (``prop`` is None unless
+    ``cfg.telemetry``).  Shares ``_move_step`` with the
     single-device ``epoch`` — the per-shard visit order and the collective
     hooks are the only topology-specific pieces.
 
@@ -467,15 +501,21 @@ def sharded_epoch_body(X, source: CandidateSource, assign, D, cnt, key, *,
     lookup = _all_gather(assign, comm)
     order = jax.random.permutation(key, n_loc).astype(jnp.int32)
 
-    def body(i, carry):
-        assign_l, D, cnt, moves = carry
-        idx = jax.lax.dynamic_slice(order, (i * bs,), (bs,))
-        return _move_step(X, assign_l, D, cnt, moves, idx, lookup, source,
-                          cfg, comm)
+    prop0 = jnp.zeros((), jnp.int32) if cfg.telemetry else None
 
-    assign, D, cnt, moves = jax.lax.fori_loop(
-        0, nb, body, (assign, D, cnt, jnp.zeros((), jnp.int32)))
-    return assign, D, cnt, _psum(moves, comm)
+    def body(i, carry):
+        assign_l, D, cnt, moves, prop = carry
+        idx = jax.lax.dynamic_slice(order, (i * bs,), (bs,))
+        assign_l, D, cnt, moves, p = _move_step(
+            X, assign_l, D, cnt, moves, idx, lookup, source, cfg, comm)
+        if prop is not None:
+            prop = prop + p
+        return assign_l, D, cnt, moves, prop
+
+    assign, D, cnt, moves, prop = jax.lax.fori_loop(
+        0, nb, body, (assign, D, cnt, jnp.zeros((), jnp.int32), prop0))
+    return (assign, D, cnt, _psum(moves, comm),
+            None if prop is None else _psum(prop, comm))
 
 
 def sharded_run_body(X, source: CandidateSource, assign, D, cnt, key, *,
@@ -491,7 +531,10 @@ def sharded_run_body(X, source: CandidateSource, assign, D, cnt, key, *,
 
     Returns (assign (n_loc,), D, cnt, hist (iters,) f32 — NaN past the early
     stop, mhist (iters,) int32 global accepted moves, epochs () int32,
-    final () f32 distortion).  ``core.distributed.ShardedEngine`` wraps this
+    final () f32 distortion, tel).  ``tel`` is a replicated per-epoch
+    ``Telemetry`` when ``cfg.telemetry`` (globals via psum — identical on
+    all shards) and None otherwise; it rides the same single host sync.
+    ``core.distributed.ShardedEngine`` wraps this
     in shard_map; parity with the single-device ``run(..., shards=R)``
     emulation is bit-exact in ``sparse_updates`` mode (same per-epoch
     ``fold_in`` key schedule, same visit order, same scatter arithmetic).
@@ -501,29 +544,33 @@ def sharded_run_body(X, source: CandidateSource, assign, D, cnt, key, *,
     xsq_total = _psum(jnp.sum(jnp.square(X.astype(jnp.float32))), comm)
     hist0 = jnp.full((cfg.iters,), jnp.nan, jnp.float32)
     mhist0 = jnp.zeros((cfg.iters,), jnp.int32)
+    tel0 = obs_tel.init(cfg.iters) if cfg.telemetry else None
     thresh = cfg.min_move_frac * n
     if cfg.iters == 0:     # static: a 0-length hist cannot be .at[t]-traced
         return (assign, D, cnt, hist0, mhist0, jnp.zeros((), jnp.int32),
-                stats_distortion(xsq_total, D, cnt, n))
+                stats_distortion(xsq_total, D, cnt, n), tel0)
 
     def cond(carry):
-        t, _, _, _, _, _, done = carry
+        t, _, _, _, _, _, _, done = carry
         return (t < cfg.iters) & ~done
 
     def body(carry):
-        t, assign_l, D_, cnt_, hist, mhist, _ = carry
-        assign_l, D_, cnt_, moves = sharded_epoch_body(
+        t, assign_l, D_, cnt_, hist, mhist, tel, _ = carry
+        assign_l, D_, cnt_, moves, prop = sharded_epoch_body(
             X, source, assign_l, D_, cnt_, jax.random.fold_in(key, t),
             cfg=cfg, data_axes=data_axes)
         dist = stats_distortion(xsq_total, D_, cnt_, n)
         hist = hist.at[t].set(dist)
         mhist = mhist.at[t].set(moves)
+        if tel is not None:
+            st = BKMState(assign_l, D_, cnt_, moves)
+            tel = _epoch_telemetry(tel, t, st, prop, dist)
         done = moves.astype(jnp.float32) <= thresh
-        return t + 1, assign_l, D_, cnt_, hist, mhist, done
+        return t + 1, assign_l, D_, cnt_, hist, mhist, tel, done
 
-    t, assign, D, cnt, hist, mhist, _ = jax.lax.while_loop(
+    t, assign, D, cnt, hist, mhist, tel, _ = jax.lax.while_loop(
         cond, body,
-        (jnp.zeros((), jnp.int32), assign, D, cnt, hist0, mhist0,
+        (jnp.zeros((), jnp.int32), assign, D, cnt, hist0, mhist0, tel0,
          jnp.zeros((), bool)))
     final = stats_distortion(xsq_total, D, cnt, n)
-    return assign, D, cnt, hist, mhist, t, final
+    return assign, D, cnt, hist, mhist, t, final, tel

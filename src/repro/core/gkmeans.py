@@ -38,6 +38,9 @@ class GKMeansResult:
     seconds: dict = field(default_factory=dict)
     # per-round Alg. 3 build observability (None when a graph was passed in)
     graph_diag: Optional[BuildDiagnostics] = None
+    # per-epoch engine Telemetry (None unless gk_means(telemetry=True));
+    # rows past the early stop are zero — truncate with `epochs` like history
+    telemetry: Optional["object"] = None
 
 
 def _tree_init(X: jax.Array, k: int, key: jax.Array) -> jax.Array:
@@ -68,6 +71,7 @@ def gk_means(
     mode: str = "bkm",            # 'bkm' (paper) or 'lloyd' (§5.2 variant)
     min_move_frac: float = 1e-4,  # early stop when epoch moves fall below
     guided_graph: bool = True,
+    telemetry: bool = False,      # in-trace per-epoch engine Telemetry
 ) -> GKMeansResult:
     """Cluster X (n, d) into k clusters (k is rounded up to a power of two).
 
@@ -98,18 +102,20 @@ def gk_means(
     source = engine.graph_source(graph.ids)
     state = engine.init_state(X, assign, k2)
     cfg = engine.EngineConfig(batch_size=min(batch_size, n), mode=mode,
-                              iters=iters, min_move_frac=min_move_frac)
-    state, hist_d, moves_d, epochs_d, final_d = engine.run(X, state, source,
-                                                           kb, cfg)
+                              iters=iters, min_move_frac=min_move_frac,
+                              telemetry=telemetry)
+    state, hist_d, moves_d, epochs_d, final_d, tel_d = engine.run(
+        X, state, source, kb, cfg)
     C = state.D / jnp.maximum(state.cnt, 1.0)[:, None]
 
-    # the run's ONE host sync: everything below is numpy
-    state, hist, moves, epochs, final, C = jax.device_get(
-        (state, hist_d, moves_d, epochs_d, final_d, C))
+    # the run's ONE host sync: everything below is numpy (the telemetry
+    # rides the same sync — it was accumulated inside the run's while_loop)
+    state, hist, moves, epochs, final, C, tel = jax.device_get(
+        (state, hist_d, moves_d, epochs_d, final_d, C, tel_d))
     sec["iter"] = time.perf_counter() - t0
 
     epochs = int(epochs)
     history = [float(h) for h in hist[:epochs]]
     return GKMeansResult(state.assign, C, k2, float(final), history,
                          [int(m) for m in moves[:epochs]], graph, sec,
-                         gdiag)
+                         gdiag, tel)

@@ -53,6 +53,7 @@ from repro.core import engine
 from repro.core.knn_graph import KnnGraph, members_table, merge_topk
 from repro.core.two_means import two_means_scan
 from repro.kernels import ops as kops
+from repro.obs import telemetry as obs_tel
 
 
 # beyond this list width the sort-based merge_topk beats the fused kernel's
@@ -67,10 +68,17 @@ class BuildDiagnostics(NamedTuple):
     (``cap_factor * xi``) this round; they were not offered as candidates.
     guided_moves: (tau,) int32 — moves accepted by the graph-guided engine
     pass (0 for ``source='descent'`` or ``guided=False``).
+    telemetry: per-round ``obs.telemetry.Telemetry`` (tau rows) when the
+    build ran with ``GraphBuildConfig(telemetry=True)`` — the same two
+    counters as named slots plus ``graph_updates`` (neighbour-list entries
+    changed per round) and ``graph_mean_dist`` (mean finite neighbour
+    distance); None otherwise.  Accumulated inside the build's round scan,
+    so it arrives in the build's one host sync.
     """
 
     overflow: jax.Array
     guided_moves: jax.Array
+    telemetry: Optional[obs_tel.Telemetry] = None
 
 
 class GraphBuildConfig(NamedTuple):
@@ -90,6 +98,7 @@ class GraphBuildConfig(NamedTuple):
     random_init: bool = True    # seed lists with κ random candidates (the
     #                             KNN builders' random init; closure k-means
     #                             turns it off to keep pure leaf-mate lists)
+    telemetry: bool = False     # per-round Telemetry in BuildDiagnostics
 
 
 def _next_pow2(v: int) -> int:
@@ -202,7 +211,7 @@ def _partition_round(X_full, X_loc, row_ids, real_id, own_real, g_ids, g_d,
             from repro.core.objective import cluster_stats
             stats = cluster_stats(X_full, assign, k0)      # replicated
             local = assign[row_ids]
-            local, _, _, moves = engine.sharded_epoch_body(
+            local, _, _, moves, _ = engine.sharded_epoch_body(
                 X_loc, source, local, stats.D, stats.cnt, k2, cfg=ecfg,
                 data_axes=data_axes)
             guided_assign = engine._all_gather(local, comm)
@@ -275,23 +284,44 @@ def _build_rounds(X_loc, row_ids, real_id, key, *, cfg, n, k0, comm,
     sample = cfg.sample or 2 * cfg.kappa
 
     def round_body(carry, t):
-        gi, gd = carry
+        gi0, gd0 = carry
         kt = jax.random.fold_in(kloop, t)
         if cfg.source == "partition":
             gi, gd, ovf, moves = _partition_round(
-                X_full, X_loc, row_ids, real_id, own_real, gi, gd, kt, t,
+                X_full, X_loc, row_ids, real_id, own_real, gi0, gd0, kt, t,
                 cfg=cfg, k0=k0, comm=comm, data_axes=data_axes)
         else:
-            gi, gd = _descent_round(X_full, X_loc, row_ids, own_real, gi,
-                                    gd, kt, cfg=cfg, n=n, sample=sample,
+            gi, gd = _descent_round(X_full, X_loc, row_ids, own_real, gi0,
+                                    gd0, kt, cfg=cfg, n=n, sample=sample,
                                     comm=comm)
             ovf = jnp.zeros((), jnp.int32)
             moves = jnp.zeros((), jnp.int32)
-        return (gi, gd), (ovf, moves)
+        if not cfg.telemetry:
+            return (gi, gd), (ovf, moves)
+        # telemetry extras: changed list entries vs round start, and the
+        # mean finite neighbour distance (globals psum'd in-trace)
+        upd = jnp.sum(gi != gi0, dtype=jnp.int32)
+        fin = jnp.isfinite(gd)
+        dsum = jnp.sum(jnp.where(fin, gd, 0.0))
+        dcnt = jnp.sum(fin, dtype=jnp.float32)
+        if comm is not None:
+            upd = engine._psum(upd, comm)
+            dsum = engine._psum(dsum, comm)
+            dcnt = engine._psum(dcnt, comm)
+        mdist = dsum / jnp.maximum(dcnt, 1.0)
+        return (gi, gd), (ovf, moves, upd, mdist)
 
-    (g_ids, g_d), (overflow, moves) = jax.lax.scan(
+    (g_ids, g_d), ys = jax.lax.scan(
         round_body, (g_ids, g_d), jnp.arange(cfg.tau, dtype=jnp.int32))
-    return g_ids, g_d, overflow, moves
+    if cfg.telemetry:
+        overflow, moves, upd, mdist = ys
+        tel = obs_tel.record_rows(obs_tel.init(cfg.tau), overflow=overflow,
+                                  guided_moves=moves, graph_updates=upd,
+                                  graph_mean_dist=mdist)
+    else:
+        overflow, moves = ys
+        tel = None
+    return g_ids, g_d, overflow, moves, tel
 
 
 def _pad_rows(X, key, n_pad):
@@ -311,11 +341,11 @@ def _build_single(X, key, cfg: GraphBuildConfig):
     kpad, kb = jax.random.split(key)
     X_pad, real_id = _pad_rows(X, kpad, n_pad)
     row_ids = jnp.arange(n_pad, dtype=jnp.int32)
-    g_ids, g_d, overflow, moves = _build_rounds(
+    g_ids, g_d, overflow, moves, tel = _build_rounds(
         X_pad, row_ids, real_id, kb, cfg=cfg, n=n, k0=k0, comm=None,
         data_axes=())
     return (KnnGraph(g_ids[:n], g_d[:n]),
-            BuildDiagnostics(overflow, moves))
+            BuildDiagnostics(overflow, moves, tel))
 
 
 def build_graph(X: jax.Array, key: jax.Array, cfg: GraphBuildConfig
@@ -374,19 +404,21 @@ class GraphBuilder:
             return _build_rounds(X_pad, row_ids, real_id, kb, cfg=cfg, n=n,
                                  k0=k0, comm=comm, data_axes=self.data_axes)
 
+        # trailing rep spec covers the telemetry (None, an empty pytree,
+        # when cfg.telemetry is off — one spec list serves both modes)
         sharded = shard_map(body, mesh=self.mesh,
                             in_specs=(row, row, rep, rep),
-                            out_specs=(row, row, rep, rep),
+                            out_specs=(row, row, rep, rep, rep),
                             check_rep=False)
 
         def program(X, key):
             kpad, kb = jax.random.split(key)
             X_pad, real_id = _pad_rows(X, kpad, n_pad)
             row_ids = jnp.arange(n_pad, dtype=jnp.int32)
-            g_ids, g_d, overflow, moves = sharded(X_pad, row_ids, real_id,
-                                                  kb)
+            g_ids, g_d, overflow, moves, tel = sharded(X_pad, row_ids,
+                                                       real_id, kb)
             return (KnnGraph(g_ids[:n], g_d[:n]),
-                    BuildDiagnostics(overflow, moves))
+                    BuildDiagnostics(overflow, moves, tel))
 
         return jax.jit(program)
 

@@ -143,7 +143,8 @@ def build_knn_graph(X: jax.Array, kappa: int, *, xi: int = 64, tau: int = 8,
                     cap_factor: int = 2, chunk: int = 1024,
                     guided: bool = True, shards: int = 1,
                     force: str | None = None,
-                    return_diagnostics: bool = False):
+                    return_diagnostics: bool = False,
+                    telemetry: bool = False):
     """Construct an approximate KNN graph by iterated fast k-means (Alg. 3).
 
     Returns KnnGraph with (n, kappa) ids/dists, ids sorted by distance —
@@ -157,6 +158,6 @@ def build_knn_graph(X: jax.Array, kappa: int, *, xi: int = 64, tau: int = 8,
     cfg = GraphBuildConfig(kappa=kappa, source="partition", xi=xi, tau=tau,
                            cap_factor=cap_factor, bkm_batch=bkm_batch,
                            guided=guided, chunk=chunk, shards=shards,
-                           force=force)
+                           force=force, telemetry=telemetry)
     graph, diag = build_graph(X, key, cfg)
     return (graph, diag) if return_diagnostics else graph

@@ -78,7 +78,7 @@ def build_kv_clusters(keys: jax.Array, kc: int, key: jax.Array,
         source = engine.dense_source()
 
         def refine(x, a, kk):
-            st, _, _, _, _ = engine.run_inline(
+            st, _, _, _, _, _ = engine.run_inline(
                 x, engine.init_state(x, a, kc), source, kk, cfg)
             return st.assign
 

@@ -139,11 +139,12 @@ def _grouped_kernel(union_ref, qg_ref, v_ref, id_ref, m_ref, oid_ref, od_ref,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("block_rows", "topk", "interpret"))
+                   static_argnames=("block_rows", "topk", "interpret",
+                                    "raw"))
 def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
                      union_tiles: jax.Array, qmask: jax.Array, *,
                      block_rows: int, topk: int = 10,
-                     interpret: bool = False):
+                     interpret: bool = False, raw: bool = False):
     """Query-grouped scan: stream each probed tile once per query GROUP.
 
     The per-query grid re-fetches a hot list tile for every query that
@@ -158,7 +159,8 @@ def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
     nonzero where the query probed that union slot.
 
     Returns (ids, d2) of shape (ngroups * G, topk) in the grouped order —
-    same output convention as `ivf_scan`.
+    same output convention as `ivf_scan` (``raw=True`` returns partial
+    distances, +inf at invalid slots, for cross-shard merges).
     """
     nqg, d = Qg.shape
     ngroups, U = union_tiles.shape
@@ -191,4 +193,6 @@ def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
         interpret=interpret,
     )(union_tiles.astype(jnp.int32), Qg, vecs, pids.astype(jnp.int32),
       qmask.astype(jnp.int32))
+    if raw:
+        return oid, jnp.where(oid < 0, jnp.inf, od)
     return _ref.finalize_d2(oid, od, Qg)

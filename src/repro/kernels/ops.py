@@ -3,6 +3,11 @@
 On TPU the Pallas kernels run compiled; on CPU (this container) the hot path
 dispatches to the pure-jnp reference (XLA:CPU), while tests exercise the Pallas
 bodies via ``interpret=True`` to validate them against the same references.
+
+Every dispatcher runs under ``obs.timing.kernel_scope`` — a
+``jax.named_scope("repro.kernels.<name>")`` that tags the emitted ops in HLO
+metadata and profiler traces, so a ``jax.profiler`` capture of any enclosing
+trace attributes time per kernel with no runtime cost.
 """
 from __future__ import annotations
 
@@ -14,6 +19,7 @@ from repro.kernels import ivf_scan as _ivf
 from repro.kernels import pairwise_topk as _pt
 from repro.kernels import ref as _ref
 from repro.kernels import refine_merge as _rm
+from repro.obs.timing import kernel_scope
 
 
 def _on_tpu() -> bool:
@@ -22,71 +28,84 @@ def _on_tpu() -> bool:
 
 def pairwise_sq(Xb: jax.Array, *, force: str | None = None) -> jax.Array:
     """Batched (B, m, d) -> (B, m, m) squared L2. force: None|'pallas'|'ref'|'interpret'."""
-    if force == "pallas" or (force is None and _on_tpu()):
-        return _pt.pairwise_sq(Xb)
-    if force == "interpret":
-        return _pt.pairwise_sq(Xb, interpret=True)
-    return _ref.pairwise_sq(Xb)
+    with kernel_scope("pairwise_sq"):
+        if force == "pallas" or (force is None and _on_tpu()):
+            return _pt.pairwise_sq(Xb)
+        if force == "interpret":
+            return _pt.pairwise_sq(Xb, interpret=True)
+        return _ref.pairwise_sq(Xb)
 
 
 def assign_centroids(X: jax.Array, C: jax.Array, *, force: str | None = None,
                      bn: int = 1024, bk: int = 512):
     """(n, d) x (k, d) -> nearest-centroid (assign, d2); pads to tile shapes."""
-    if force == "ref" or (force is None and not _on_tpu()):
-        return _ref.assign_centroids(X, C)
-    return _ca.assign_centroids_padded(X, C, bn=bn, bk=bk,
-                                       interpret=(force == "interpret"))
+    with kernel_scope("assign_centroids"):
+        if force == "ref" or (force is None and not _on_tpu()):
+            return _ref.assign_centroids(X, C)
+        return _ca.assign_centroids_padded(X, C, bn=bn, bk=bk,
+                                           interpret=(force == "interpret"))
 
 
 def probe_centroids(X: jax.Array, C: jax.Array, p: int, *,
                     force: str | None = None, bn: int = 1024, bk: int = 512):
     """(n, d) x (k, d) -> top-p nearest centroids (ids, d2); pads to tiles."""
-    if force == "ref" or (force is None and not _on_tpu()):
-        return _ref.probe_centroids(X, C, p)
-    return _ca.probe_centroids_padded(X, C, p, bn=bn, bk=bk,
-                                      interpret=(force == "interpret"))
+    with kernel_scope("probe_centroids"):
+        if force == "ref" or (force is None and not _on_tpu()):
+            return _ref.probe_centroids(X, C, p)
+        return _ca.probe_centroids_padded(X, C, p, bn=bn, bk=bk,
+                                          interpret=(force == "interpret"))
 
 
 def gather_score(x: jax.Array, u: jax.Array, cand: jax.Array, D: jax.Array,
                  cnt: jax.Array, *, mode: str = "bkm",
                  force: str | None = None) -> jax.Array:
     """(B, d) x (B, C) candidate ids -> (B, C) move scores, gather fused."""
-    if force == "ref" or (force is None and not _on_tpu()):
-        return _ref.gather_score(x, u, cand, D, cnt, mode=mode)
-    return _gs.gather_score(x, u, cand, D, cnt, mode=mode,
-                            interpret=(force == "interpret"))
+    with kernel_scope("gather_score"):
+        if force == "ref" or (force is None and not _on_tpu()):
+            return _ref.gather_score(x, u, cand, D, cnt, mode=mode)
+        return _gs.gather_score(x, u, cand, D, cnt, mode=mode,
+                                interpret=(force == "interpret"))
 
 
 def refine_merge(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
                  old_ids: jax.Array, old_d: jax.Array, Xsrc: jax.Array, *,
                  force: str | None = None):
     """(B, C) candidate rows merged into (B, κ) top-κ lists, gather fused."""
-    if force == "ref" or (force is None and not _on_tpu()):
-        return _ref.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc)
-    return _rm.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc,
-                            interpret=(force == "interpret"))
+    with kernel_scope("refine_merge"):
+        if force == "ref" or (force is None and not _on_tpu()):
+            return _ref.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc)
+        return _rm.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc,
+                                interpret=(force == "interpret"))
 
 
 def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
              tile_map: jax.Array, *, block_rows: int, topk: int = 10,
              force: str | None = None, raw: bool = False):
     """Per-query scan of probed packed-list tiles -> (ids, d2) top-k."""
-    if force == "ref" or (force is None and not _on_tpu()):
-        return _ref.ivf_scan(Q, vecs, pids, tile_map,
-                             block_rows=block_rows, topk=topk, raw=raw)
-    return _ivf.ivf_scan(Q, vecs, pids, tile_map, block_rows=block_rows,
-                         topk=topk, interpret=(force == "interpret"),
-                         raw=raw)
+    with kernel_scope("ivf_scan"):
+        if force == "ref" or (force is None and not _on_tpu()):
+            return _ref.ivf_scan(Q, vecs, pids, tile_map,
+                                 block_rows=block_rows, topk=topk, raw=raw)
+        return _ivf.ivf_scan(Q, vecs, pids, tile_map, block_rows=block_rows,
+                             topk=topk, interpret=(force == "interpret"),
+                             raw=raw)
 
 
 def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
                      union_tiles: jax.Array, qmask: jax.Array, *,
                      block_rows: int, topk: int = 10,
-                     force: str | None = None):
-    """Query-grouped list scan: each union tile streamed once per group."""
-    if force == "ref" or (force is None and not _on_tpu()):
-        return _ref.ivf_scan_grouped(Qg, vecs, pids, union_tiles, qmask,
-                                     block_rows=block_rows, topk=topk)
-    return _ivf.ivf_scan_grouped(Qg, vecs, pids, union_tiles, qmask,
-                                 block_rows=block_rows, topk=topk,
-                                 interpret=(force == "interpret"))
+                     force: str | None = None, raw: bool = False):
+    """Query-grouped list scan: each union tile streamed once per group.
+
+    ``raw=True`` returns partial distances (``||v||² − 2q·v``, +inf at
+    invalid slots) for cross-shard merges, like ``ivf_scan``.
+    """
+    with kernel_scope("ivf_scan_grouped"):
+        if force == "ref" or (force is None and not _on_tpu()):
+            return _ref.ivf_scan_grouped(Qg, vecs, pids, union_tiles, qmask,
+                                         block_rows=block_rows, topk=topk,
+                                         raw=raw)
+        return _ivf.ivf_scan_grouped(Qg, vecs, pids, union_tiles, qmask,
+                                     block_rows=block_rows, topk=topk,
+                                     interpret=(force == "interpret"),
+                                     raw=raw)

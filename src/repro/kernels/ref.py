@@ -107,10 +107,10 @@ def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
     return finalize_d2(ids, d, Q)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "topk"))
+@functools.partial(jax.jit, static_argnames=("block_rows", "topk", "raw"))
 def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
                      union_tiles: jax.Array, qmask: jax.Array, *,
-                     block_rows: int, topk: int = 10):
+                     block_rows: int, topk: int = 10, raw: bool = False):
     """Query-grouped inverted-list scan oracle (the batched kernel's twin).
 
     Qg: (ngroups * G, d) queries already permuted into probe-locality groups;
@@ -158,6 +158,9 @@ def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
     part = jnp.where(ids < 0, jnp.inf, part)
     d, ids = stable_topk(part.reshape(ngroups * G, -1),
                          ids.reshape(ngroups * G, -1), topk)
+    if raw:
+        # partial distances for cross-shard merges (see ivf_scan's raw)
+        return ids, jnp.where(ids < 0, jnp.inf, d)
     return finalize_d2(ids, d, Qg)
 
 

@@ -1,0 +1,143 @@
+"""Structured run records: ONE schema for every ``BENCH_*.json`` / JSONL.
+
+A run record is a plain dict:
+
+    {
+      "schema":  "repro.bench.v1",
+      "name":    "engine",               # what produced it
+      "git_rev": "35f30c5" | "unknown",
+      "env":     {"backend": "cpu", "devices": 1, "jax": "0.4.x"},
+      "shapes":  {...},                  # problem sizes (n, d, k, ...)
+      "config":  {...},                  # knobs (batch_size, nprobe, ...)
+      "metrics": {...},                  # measured numbers
+      "telemetry": {...},                # optional: obs.telemetry.to_dict
+    }
+
+``run_record`` builds one (stamping git rev + environment), ``write_json``
+/ ``append_jsonl`` persist it, ``load_records`` reads either layout back,
+and ``validate_record`` is the schema gate ``launch/obs_report.py`` (and CI
+bench-smoke) fails on — schema drift breaks the report, not the dashboard
+three weeks later.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+from typing import Any, Dict, Iterable, List, Optional
+
+SCHEMA = "repro.bench.v1"
+REQUIRED_KEYS = ("schema", "name", "git_rev", "env", "shapes", "config",
+                 "metrics")
+
+
+def git_rev() -> str:
+    """Short git rev of the working tree, or 'unknown' outside a checkout."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        if out.returncode == 0:
+            return out.stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        pass
+    return "unknown"
+
+
+def _env() -> Dict[str, Any]:
+    try:
+        import jax
+        return {"backend": jax.default_backend(),
+                "devices": jax.device_count(),
+                "jax": jax.__version__}
+    except Exception:
+        return {"backend": "unknown", "devices": 0, "jax": "unknown"}
+
+
+def run_record(name: str, *, shapes: Optional[Dict[str, Any]] = None,
+               config: Optional[Dict[str, Any]] = None,
+               metrics: Optional[Dict[str, Any]] = None,
+               telemetry: Optional[Dict[str, Any]] = None,
+               notes: Optional[List[str]] = None) -> Dict[str, Any]:
+    """Assemble a schema-conforming run record (values must be JSON-able)."""
+    rec: Dict[str, Any] = {
+        "schema": SCHEMA,
+        "name": name,
+        "git_rev": git_rev(),
+        "env": _env(),
+        "shapes": dict(shapes or {}),
+        "config": dict(config or {}),
+        "metrics": dict(metrics or {}),
+    }
+    if telemetry:
+        rec["telemetry"] = dict(telemetry)
+    if notes:
+        rec["notes"] = list(notes)
+    return rec
+
+
+def validate_record(rec: Dict[str, Any]) -> Dict[str, Any]:
+    """Raise ``ValueError`` on schema drift; return the record unchanged."""
+    if not isinstance(rec, dict):
+        raise ValueError(f"run record must be a dict, got {type(rec)}")
+    missing = [k for k in REQUIRED_KEYS if k not in rec]
+    if missing:
+        raise ValueError(f"run record missing keys {missing}: "
+                         f"have {sorted(rec)}")
+    if rec["schema"] != SCHEMA:
+        raise ValueError(f"schema {rec['schema']!r} != expected {SCHEMA!r}")
+    for k in ("shapes", "config", "metrics"):
+        if not isinstance(rec[k], dict):
+            raise ValueError(f"run record [{k!r}] must be a dict")
+    return rec
+
+
+def write_json(path: str, rec: Dict[str, Any]) -> None:
+    """Write one validated record as a pretty JSON file (BENCH_*.json)."""
+    validate_record(rec)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, sort_keys=False)
+        f.write("\n")
+
+
+def append_jsonl(path: str, rec: Dict[str, Any]) -> None:
+    """Append one validated record as a JSONL line (run logs)."""
+    validate_record(rec)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec, sort_keys=False) + "\n")
+
+
+def load_records(path: str) -> List[Dict[str, Any]]:
+    """Read records back from a ``.json`` (one record) or ``.jsonl`` file.
+
+    Every record is validated; a drifted file raises rather than yielding
+    partial garbage.
+    """
+    recs: List[Dict[str, Any]] = []
+    with open(path) as f:
+        text = f.read()
+    if path.endswith(".jsonl"):
+        for line in text.splitlines():
+            if line.strip():
+                recs.append(validate_record(json.loads(line)))
+    else:
+        recs.append(validate_record(json.loads(text)))
+    return recs
+
+
+def load_dir(directory: str, prefix: str = "BENCH_"
+             ) -> Dict[str, Dict[str, Any]]:
+    """All ``<prefix>*.json`` records in a directory, keyed by record name."""
+    out: Dict[str, Dict[str, Any]] = {}
+    for fn in sorted(os.listdir(directory)):
+        if fn.startswith(prefix) and fn.endswith(".json"):
+            for rec in load_records(os.path.join(directory, fn)):
+                out[rec["name"]] = rec
+    return out
+
+
+def emit_stdout(recs: Iterable[Dict[str, Any]]) -> None:
+    """Print records as JSONL to stdout (pipe-friendly)."""
+    for rec in recs:
+        print(json.dumps(validate_record(rec), sort_keys=False))

@@ -1,0 +1,57 @@
+"""Host-sync accounting: the transfer-guard recipe as a reusable tool.
+
+Every "exactly one host sync" claim in this repo is runtime-verified the
+same way: dispatch under ``jax.transfer_guard_device_to_host("disallow")``
+(any implicit device->host transfer raises), then perform the one intended
+``device_get``.  That recipe was copy-pasted across ``benchmarks/`` and
+``tests/test_distributed.py``; ``sync_counter()`` is the one implementation.
+
+    with sync_counter() as sc:
+        out = eng.run(X, G, assign, D, cnt, key)   # stray syncs raise here
+        assign, D, cnt, *rest = sc.get(out)        # the ONE counted sync
+    assert sc.syncs == 1
+
+``sc.get`` re-allows transfers just for its ``device_get`` and counts it;
+everything else inside the block stays guarded.  ``sc.block(x)`` counts a
+``block_until_ready`` the same way (a sync that fetches no bytes but still
+round-trips the host).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Iterator
+
+import jax
+
+
+class SyncCounter:
+    """Counts explicit host syncs performed through it (see module doc)."""
+
+    def __init__(self) -> None:
+        self.syncs = 0
+
+    def get(self, tree: Any) -> Any:
+        """``jax.device_get`` under a temporary allow; counts one sync."""
+        with jax.transfer_guard_device_to_host("allow"):
+            out = jax.device_get(tree)
+        self.syncs += 1
+        return out
+
+    def block(self, tree: Any) -> Any:
+        """``jax.block_until_ready`` under a temporary allow; counts one."""
+        with jax.transfer_guard_device_to_host("allow"):
+            out = jax.block_until_ready(tree)
+        self.syncs += 1
+        return out
+
+
+@contextlib.contextmanager
+def sync_counter() -> Iterator[SyncCounter]:
+    """Disallow implicit device->host transfers; yield a ``SyncCounter``.
+
+    Implicit syncs inside the block raise; intended ones go through
+    ``sc.get``/``sc.block`` and are tallied in ``sc.syncs``.
+    """
+    sc = SyncCounter()
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield sc

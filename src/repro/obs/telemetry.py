@@ -1,0 +1,160 @@
+"""The device half of the obs layer: in-trace telemetry accumulators.
+
+A ``Telemetry`` is a fixed-shape pair of slot matrices — ``i32 (rows, NI)``
+and ``f32 (rows, NF)`` — that rides inside a device-resident loop carry
+(``engine._run_impl``'s ``lax.while_loop``, ``GraphBuilder``'s round scan,
+``ShardedIvf.search``'s shard_map body) and comes back to the host in the
+SAME single ``device_get`` as the results it describes.  Rows index epochs /
+rounds / query batches; columns are the slot registry below.  Because the
+shapes are fixed by the static config (``iters``/``tau``/1), threading a
+``Telemetry`` through a ``while_loop`` or ``scan`` carry never changes the
+carry structure between iterations.
+
+Slot registry (every producer writes a subset; unwritten slots stay 0):
+
+  ==========================  ====  =====================================
+  slot                        type  meaning (per row)
+  ==========================  ====  =====================================
+  ``moves``                   i32   engine: accepted moves this epoch
+  ``proposed``                i32   engine: proposed moves BEFORE the
+                                    leaver guard (guard vetoes show up as
+                                    ``proposed - moves``)
+  ``empty_clusters``          i32   engine: clusters with cnt <= 0 at
+                                    epoch end
+  ``overflow``                i32   graph build: member-table overflow
+                                    this round (``BuildDiagnostics``)
+  ``guided_moves``            i32   graph build: guided-pass moves this
+                                    round (``BuildDiagnostics``)
+  ``graph_updates``           i32   graph build: neighbour-list entries
+                                    changed by this round's refinement
+  ``scanned_rows``            i32   IVF: packed rows scanned for the
+                                    query batch, summed over shards
+  ``scanned_rows_max_shard``  i32   IVF: the most-loaded shard's scanned
+                                    rows (load balance; == scanned_rows
+                                    on one shard)
+  ``distortion``              f32   engine: end-of-epoch distortion
+                                    (O(k*d) running-stats form)
+  ``hit_rate``                f32   engine: moves / max(proposed, 1) —
+                                    the candidate hit-rate
+  ``graph_mean_dist``         f32   graph build: mean finite neighbour
+                                    distance after the round
+  ``scan_frac``               f32   IVF: scanned_rows / (q * capacity)
+  ==========================  ====  =====================================
+
+``init(rows)`` builds a zeroed accumulator; every helper treats ``None`` as
+"telemetry disabled" and passes it through, so gating a whole pipeline on a
+static config flag is ``tel = init(rows) if cfg.telemetry else None`` — the
+disabled path carries an EMPTY pytree (None) and compiles away entirely
+(tests/test_obs.py pins the compiled HLO).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+# slot name -> column index (order is the wire format: emit/report read it)
+I32_SLOTS: Dict[str, int] = {
+    "moves": 0,
+    "proposed": 1,
+    "empty_clusters": 2,
+    "overflow": 3,
+    "guided_moves": 4,
+    "graph_updates": 5,
+    "scanned_rows": 6,
+    "scanned_rows_max_shard": 7,
+}
+F32_SLOTS: Dict[str, int] = {
+    "distortion": 0,
+    "hit_rate": 1,
+    "graph_mean_dist": 2,
+    "scan_frac": 3,
+}
+N_I32 = len(I32_SLOTS)
+N_F32 = len(F32_SLOTS)
+
+
+class Telemetry(NamedTuple):
+    """Fixed-shape per-row slot matrices (a pytree: valid jit output and
+    loop-carry leaf set)."""
+
+    i32: jax.Array  # (rows, N_I32)
+    f32: jax.Array  # (rows, N_F32)
+
+    @property
+    def rows(self) -> int:
+        return self.i32.shape[0]
+
+
+def init(rows: int) -> Telemetry:
+    """A zeroed accumulator with ``rows`` rows (0 rows is valid)."""
+    return Telemetry(jnp.zeros((rows, N_I32), jnp.int32),
+                     jnp.zeros((rows, N_F32), jnp.float32))
+
+
+def record(tel: Optional[Telemetry], row, **slots) -> Optional[Telemetry]:
+    """Write named slots of one row (``row`` may be traced); None -> None."""
+    if tel is None:
+        return None
+    i32, f32 = tel.i32, tel.f32
+    for name, v in slots.items():
+        if name in I32_SLOTS:
+            i32 = i32.at[row, I32_SLOTS[name]].set(
+                jnp.asarray(v).astype(jnp.int32))
+        elif name in F32_SLOTS:
+            f32 = f32.at[row, F32_SLOTS[name]].set(
+                jnp.asarray(v).astype(jnp.float32))
+        else:
+            raise KeyError(f"unknown telemetry slot {name!r}")
+    return Telemetry(i32, f32)
+
+
+def record_rows(tel: Optional[Telemetry], **slots) -> Optional[Telemetry]:
+    """Write whole columns at once (each value is a (rows,) vector)."""
+    if tel is None:
+        return None
+    i32, f32 = tel.i32, tel.f32
+    for name, v in slots.items():
+        if name in I32_SLOTS:
+            i32 = i32.at[:, I32_SLOTS[name]].set(
+                jnp.asarray(v).astype(jnp.int32))
+        elif name in F32_SLOTS:
+            f32 = f32.at[:, F32_SLOTS[name]].set(
+                jnp.asarray(v).astype(jnp.float32))
+        else:
+            raise KeyError(f"unknown telemetry slot {name!r}")
+    return Telemetry(i32, f32)
+
+
+def column(tel: Telemetry, name: str) -> jax.Array:
+    """One named column — (rows,) i32 or f32."""
+    if name in I32_SLOTS:
+        return tel.i32[:, I32_SLOTS[name]]
+    if name in F32_SLOTS:
+        return tel.f32[:, F32_SLOTS[name]]
+    raise KeyError(f"unknown telemetry slot {name!r}")
+
+
+def to_dict(tel: Optional[Telemetry], rows: Optional[int] = None,
+            slots: Optional[List[str]] = None) -> Dict[str, list]:
+    """Host-side view: slot name -> python list (truncate to ``rows``).
+
+    ``slots`` restricts the output (e.g. the engine writes only its five);
+    default is every slot.  Call AFTER the device_get — this materialises.
+    """
+    if tel is None:
+        return {}
+    import numpy as np
+    i32 = np.asarray(tel.i32)
+    f32 = np.asarray(tel.f32)
+    if rows is not None:
+        i32, f32 = i32[:rows], f32[:rows]
+    names = slots if slots is not None else (list(I32_SLOTS) + list(F32_SLOTS))
+    out = {}
+    for name in names:
+        if name in I32_SLOTS:
+            out[name] = [int(v) for v in i32[:, I32_SLOTS[name]]]
+        else:
+            out[name] = [float(v) for v in f32[:, F32_SLOTS[name]]]
+    return out

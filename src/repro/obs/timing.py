@@ -1,0 +1,56 @@
+"""Host-side timers and in-trace kernel annotations.
+
+``span()`` is the repo's one wall-clock primitive: it times a block,
+``block_until_ready``-ing whatever the block assigns to ``sp.result`` so
+async dispatch cannot leak out of the measurement (the classic JAX timing
+bug), and optionally files the seconds into a dict for the emitter.
+
+``kernel_scope(name)`` wraps every Pallas kernel call site in
+``kernels/ops.py`` with a ``jax.named_scope`` — the names land in the HLO
+metadata and in ``jax.profiler`` traces, so a profile of any trace that
+routes through ``ops`` attributes time to ``repro.kernels/<name>``
+(``named_scope`` rather than ``jax.profiler.TraceAnnotation`` because the
+dispatch wrappers execute INSIDE enclosing jit traces, where only
+trace-time scoping survives).
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Dict, Iterator, Optional
+
+import jax
+
+SCOPE_PREFIX = "repro.kernels"
+
+
+class Span:
+    """One timed block; set ``.result`` to what must finish on device."""
+
+    def __init__(self, name: str) -> None:
+        self.name = name
+        self.result = None
+        self.seconds: Optional[float] = None
+
+
+@contextlib.contextmanager
+def span(name: str, *, out: Optional[Dict[str, float]] = None
+         ) -> Iterator[Span]:
+    """Time a block: ``with span("run", out=secs) as sp: sp.result = f(x)``.
+
+    On exit, blocks until ``sp.result`` is ready (if set), records
+    ``sp.seconds``, and writes ``out[name] = seconds`` when a dict is given.
+    """
+    sp = Span(name)
+    t0 = time.perf_counter()
+    yield sp
+    if sp.result is not None:
+        jax.block_until_ready(sp.result)
+    sp.seconds = time.perf_counter() - t0
+    if out is not None:
+        out[name] = sp.seconds
+
+
+def kernel_scope(name: str):
+    """Named scope for a kernel dispatch site (profiler/HLO attribution)."""
+    return jax.named_scope(f"{SCOPE_PREFIX}.{name}")

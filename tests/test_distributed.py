@@ -193,8 +193,9 @@ def test_sharded_dense_and_probe_sources_4dev():
 # ---------------------------------------------------------------------------
 # sharded_run: the whole epoch loop in ONE shard_map trace — bit-exact parity
 # with the single-device `engine.run(..., shards=R)` emulation, exactly one
-# host sync per run (device->host transfers disallowed around the dispatch),
-# and the in-trace early stop.
+# host sync per run (obs.sync_counter: device->host transfers disallowed
+# around the dispatch, UNCHANGED with telemetry on), and the in-trace early
+# stop.
 # ---------------------------------------------------------------------------
 
 CODE_SHARDED_RUN = r"""
@@ -202,6 +203,8 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.data import gmm_blobs
 from repro.core import build_knn_graph, two_means_tree, init_state, engine
 from repro.core.distributed import ShardedEngine
+from repro.obs import sync_counter
+from repro.obs import telemetry as obs_tel
 
 key = jax.random.PRNGKey(0)
 n, d, k, R = 2048, 16, 32, 4
@@ -213,19 +216,22 @@ a0 = two_means_tree(X, k, key)
 mesh = jax.make_mesh((R,), ("data",))
 iters = 5
 cfg = engine.EngineConfig(batch_size=128, sparse_updates=True, iters=iters,
-                          min_move_frac=-1.0)
+                          min_move_frac=-1.0, telemetry=True)
 eng = ShardedEngine(mesh, cfg)
 st0 = init_state(X, a0, k)
 
-# ONE host sync per run: compile+dispatch makes no device->host transfer;
-# the single jax.device_get below is the only sync
-with jax.transfer_guard_device_to_host("disallow"):
+# ONE host sync per run, with telemetry ON: compile+dispatch makes no
+# device->host transfer; the per-epoch telemetry rows come back in the same
+# single counted device_get as the results
+with sync_counter() as sc:
     out = eng.run(X, G, st0.assign, st0.D, st0.cnt, key)
-assign, D, cnt, hist, mhist, epochs, final = jax.device_get(out)
+    assign, D, cnt, hist, mhist, epochs, final, tel = sc.get(out)
+assert sc.syncs == 1, sc.syncs
 
-# bit-exact parity with the single-device R-way emulation (sparse mode)
+# bit-exact parity with the single-device R-way emulation (sparse mode),
+# telemetry included (i32 slots exact, f32 to float tolerance)
 st = init_state(X, a0, k)
-st1, hist1, mhist1, epochs1, final1 = jax.device_get(
+st1, hist1, mhist1, epochs1, final1, tel1 = jax.device_get(
     engine.run(X, st, engine.graph_source(G), key, cfg._replace(shards=R)))
 np.testing.assert_array_equal(assign, st1.assign)
 np.testing.assert_array_equal(cnt, st1.cnt)
@@ -234,11 +240,32 @@ np.testing.assert_array_equal(mhist, mhist1)
 assert int(epochs) == int(epochs1) == iters
 np.testing.assert_allclose(hist, hist1, rtol=1e-5)
 np.testing.assert_allclose(final, final1, rtol=1e-5)
+np.testing.assert_array_equal(tel.i32, tel1.i32)
+np.testing.assert_allclose(tel.f32, tel1.f32, rtol=1e-5)
+
+# the telemetry rows agree with the returned histories
+np.testing.assert_array_equal(obs_tel.column(tel, "moves"), mhist)
+np.testing.assert_allclose(obs_tel.column(tel, "distortion"), hist,
+                           rtol=1e-6)
+assert np.all(obs_tel.column(tel, "proposed")
+              >= obs_tel.column(tel, "moves"))
+
+# telemetry OFF: same single sync, bit-identical clustering, tel is None
+eng_off = ShardedEngine(mesh, cfg._replace(telemetry=False))
+jax.block_until_ready(
+    eng_off.run(X, G, st0.assign, st0.D, st0.cnt, key)[0])
+with sync_counter() as sc0:
+    out0 = eng_off.run(X, G, st0.assign, st0.D, st0.cnt, key)
+    got0 = sc0.get(out0)
+assert sc0.syncs == 1, sc0.syncs
+assert got0[7] is None
+np.testing.assert_array_equal(got0[0], assign)
+np.testing.assert_array_equal(got0[4], mhist)
 
 # the min_move_frac early stop runs inside the trace
 eng2 = ShardedEngine(mesh, engine.EngineConfig(batch_size=128, iters=8,
                                                min_move_frac=1.0))
-_, _, _, hist2, _, ep2, _ = jax.device_get(
+_, _, _, hist2, _, ep2, _, _ = jax.device_get(
     eng2.run(X, G, st0.assign, st0.D, st0.cnt, key))
 assert int(ep2) == 1 and np.isnan(hist2[1:]).all()
 print("SHARDED_RUN_OK")
@@ -264,6 +291,8 @@ import jax, jax.numpy as jnp, numpy as np
 from repro.data import gmm_blobs
 from repro.core import GraphBuildConfig, GraphBuilder, build_graph
 from repro.core.distributed import sharded_graph_builder
+from repro.obs import sync_counter
+from repro.obs import telemetry as obs_tel
 
 key = jax.random.PRNGKey(0)
 n, d, R = 2048, 16, 4
@@ -276,14 +305,36 @@ cfg = GraphBuildConfig(kappa=8, xi=32, tau=3, chunk=256, shards=R)
 builder = sharded_graph_builder(mesh, cfg)
 g1, d1 = jax.device_get(build_graph(X, key, cfg))   # single-device, R-way
 jax.block_until_ready(builder.build(X, key)[0].ids)  # warm the program
-with jax.transfer_guard_device_to_host("disallow"):
+with sync_counter() as sc:
     out = builder.build(X, key)
-g2, d2 = jax.device_get(out)                         # the ONE sync
+    g2, d2 = sc.get(out)                             # the ONE sync
+assert sc.syncs == 1, sc.syncs
 np.testing.assert_array_equal(g1.ids, g2.ids)
 np.testing.assert_array_equal(g1.dist, g2.dist)
 np.testing.assert_array_equal(d1.overflow, d2.overflow)
 np.testing.assert_array_equal(d1.guided_moves, d2.guided_moves)
 assert int(d2.guided_moves[0]) == 0 and int(d2.guided_moves[1]) > 0
+assert d2.telemetry is None                          # telemetry off
+
+# telemetry ON: per-round rows ride the same single sync, the build is
+# bit-identical, and sharded == single-device telemetry too
+cfg_t = cfg._replace(telemetry=True)
+builder_t = sharded_graph_builder(mesh, cfg_t)
+_, d1t = jax.device_get(build_graph(X, key, cfg_t))
+jax.block_until_ready(builder_t.build(X, key)[0].ids)
+with sync_counter() as sct:
+    out = builder_t.build(X, key)
+    g2t, d2t = sct.get(out)
+assert sct.syncs == 1, sct.syncs
+np.testing.assert_array_equal(g2t.ids, g1.ids)
+np.testing.assert_array_equal(g2t.dist, g1.dist)
+np.testing.assert_array_equal(d1t.telemetry.i32, d2t.telemetry.i32)
+np.testing.assert_allclose(d1t.telemetry.f32, d2t.telemetry.f32, rtol=1e-5)
+np.testing.assert_array_equal(obs_tel.column(d2t.telemetry, "overflow"),
+                              d2t.overflow)
+np.testing.assert_array_equal(obs_tel.column(d2t.telemetry, "guided_moves"),
+                              d2t.guided_moves)
+assert np.all(np.isfinite(obs_tel.column(d2t.telemetry, "graph_mean_dist")))
 
 # NN-Descent source through the same sharded core
 cfgd = GraphBuildConfig(kappa=8, source="descent", tau=3, chunk=256)
@@ -316,6 +367,8 @@ from repro import index as ivf
 from repro.core.distributed import ShardedIvf
 from repro.data import gmm_blobs
 from repro.kernels import ref
+from repro.obs import sync_counter
+from repro.obs import telemetry as obs_tel
 
 class FakeResult:
     def __init__(self, assign, centroids, k):
@@ -339,12 +392,29 @@ for topk, nprobe in ((10, 6), (64, 2), (5, 999)):   # incl. topk>candidates
                                        nprobe=min(nprobe, k)))
     jax.block_until_ready(sivf.search(Q, topk=topk, nprobe=nprobe))  # warm
     # exactly ONE host sync per query batch: the dispatch itself transfers
-    # nothing device->host; the single device_get below is the sync
-    with jax.transfer_guard_device_to_host("disallow"):
+    # nothing device->host; the single counted sc.get below is the sync
+    with sync_counter() as sc:
         out = sivf.search(Q, topk=topk, nprobe=nprobe)
-    i2, d2 = jax.device_get(out)
+        i2, d2 = sc.get(out)
+    assert sc.syncs == 1, sc.syncs
     np.testing.assert_array_equal(i1, i2, err_msg=f"{topk}/{nprobe}")
     np.testing.assert_array_equal(d1, d2, err_msg=f"{topk}/{nprobe}")
+
+# telemetry ON: scanned-rows counters ride the same single sync, results
+# bit-identical
+i1, d1 = jax.device_get(ivf.search(index, Q, topk=10, nprobe=6))
+jax.block_until_ready(sivf.search(Q, topk=10, nprobe=6, telemetry=True))
+with sync_counter() as sct:
+    out = sivf.search(Q, topk=10, nprobe=6, telemetry=True)
+    i2t, d2t, tel = sct.get(out)
+assert sct.syncs == 1, sct.syncs
+np.testing.assert_array_equal(i1, i2t)
+np.testing.assert_array_equal(d1, d2t)
+scanned = int(obs_tel.column(tel, "scanned_rows")[0])
+worst = int(obs_tel.column(tel, "scanned_rows_max_shard")[0])
+frac = float(obs_tel.column(tel, "scan_frac")[0])
+assert 0 < worst <= scanned <= Q.shape[0] * index.capacity_rows
+assert 0.0 < frac <= 1.0
 
 # q=1 through the sharded path
 i1, d1 = jax.device_get(ivf.search(index, Q[:1], topk=5, nprobe=4))
@@ -372,6 +442,78 @@ def test_sharded_ivf_search_parity_and_single_sync_4dev():
     batch, edge cases (topk > candidates, nprobe > k, q=1) included."""
     r = _run(CODE_IVF, devices=4)
     assert "SHARDED_IVF_OK" in r.stdout, r.stderr[-3000:]
+
+
+# ---------------------------------------------------------------------------
+# grouped + sharded IVF (the PR 5 caveat): the qgroup grouped-scan layout
+# composed with ShardedIvf — each shard groups against its LOCAL tile map and
+# scatters raw partial results back to the original query order BEFORE the
+# all-gather, so ids must still be bit-exact vs the single-device PER-QUERY
+# search (distances to grouped-dot tolerance: the grouped scan batches its
+# dot_generals differently, ~5e-4 relative).
+# ---------------------------------------------------------------------------
+
+CODE_IVF_GROUPED = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro import index as ivf
+from repro.core.distributed import ShardedIvf
+from repro.data import gmm_blobs
+from repro.kernels import ref
+from repro.obs import sync_counter
+from repro.obs import telemetry as obs_tel
+
+class FakeResult:
+    def __init__(self, assign, centroids, k):
+        self.assign, self.centroids, self.k = assign, centroids, k
+
+key = jax.random.PRNGKey(0)
+R = len(jax.devices())
+assert R == 4
+n, d, k, bl = 1000, 16, 37, 16          # k % R != 0, ragged skewed lists
+X = gmm_blobs(key, n, d, 24)
+C = gmm_blobs(jax.random.fold_in(key, 1), k, d, 24)
+a, _ = ref.assign_centroids(X, C)
+index = ivf.build_ivf(X, FakeResult(a, C, k), block_rows=bl)
+mesh = jax.make_mesh((R,), ("data",))
+sivf = ShardedIvf(mesh, index)
+nq = 32
+Q = X[:nq] + 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+
+for topk, nprobe, G in ((10, 6, 8), (5, 4, 4)):
+    i1, d1 = jax.device_get(ivf.search(index, Q, topk=topk, nprobe=nprobe))
+    jax.block_until_ready(sivf.search(Q, topk=topk, nprobe=nprobe,
+                                      qgroup=G))                      # warm
+    with sync_counter() as sc:
+        out = sivf.search(Q, topk=topk, nprobe=nprobe, qgroup=G)
+        i2, d2 = sc.get(out)                         # the ONE sync
+    assert sc.syncs == 1, sc.syncs
+    np.testing.assert_array_equal(i1, i2, err_msg=f"{topk}/{nprobe}/G={G}")
+    np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-4,
+                               err_msg=f"{topk}/{nprobe}/G={G}")
+
+# grouped single-device vs grouped sharded agree too
+ig, dg = jax.device_get(ivf.search(index, Q, topk=10, nprobe=6, qgroup=8))
+i2, d2 = jax.device_get(sivf.search(Q, topk=10, nprobe=6, qgroup=8))
+np.testing.assert_array_equal(ig, i2)
+
+# ragged group: q=3 < qgroup=8, composed with telemetry
+i1, d1 = jax.device_get(ivf.search(index, Q[:3], topk=5, nprobe=4))
+i2, d2, tel = jax.device_get(sivf.search(Q[:3], topk=5, nprobe=4, qgroup=8,
+                                         telemetry=True))
+np.testing.assert_array_equal(i1, i2)
+np.testing.assert_allclose(d1, d2, rtol=1e-3, atol=1e-4)
+assert int(obs_tel.column(tel, "scanned_rows")[0]) > 0
+print("SHARDED_IVF_GROUPED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_ivf_grouped_scan_parity_4dev():
+    """Satellite: qgroup grouped scans composed with ShardedIvf — ids pinned
+    bit-exact against single-device per-query `ivf.search`, one host sync,
+    ragged q < qgroup and telemetry composition included."""
+    r = _run(CODE_IVF_GROUPED, devices=4)
+    assert "SHARDED_IVF_GROUPED_OK" in r.stdout, r.stderr[-3000:]
 
 
 @pytest.mark.slow

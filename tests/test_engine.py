@@ -76,7 +76,7 @@ def test_run_equals_epoch_loop(setup):
     X, a0, G, k, key = setup
     source = engine.graph_source(G)
     cfg = engine.EngineConfig(batch_size=256, iters=5, min_move_frac=-1.0)
-    st_run, hist, mhist, epochs, final = engine.run(
+    st_run, hist, mhist, epochs, final, _ = engine.run(
         X, engine.init_state(X, a0, k), source, key, cfg)
     st_loop = _epochs(X, a0, k, source, key,
                       engine.EngineConfig(batch_size=256), iters=5)
@@ -94,8 +94,8 @@ def test_run_equals_epoch_loop(setup):
 def test_run_early_stop_inside_trace(setup):
     X, a0, G, k, key = setup
     cfg = engine.EngineConfig(batch_size=256, iters=8, min_move_frac=1.0)
-    _, hist, _, epochs, _ = engine.run(X, engine.init_state(X, a0, k),
-                                       engine.graph_source(G), key, cfg)
+    _, hist, _, epochs, _, _ = engine.run(X, engine.init_state(X, a0, k),
+                                          engine.graph_source(G), key, cfg)
     assert int(epochs) == 1          # every epoch moves <= n -> stop at once
     assert np.isnan(np.asarray(hist)[1:]).all()
 
@@ -120,8 +120,8 @@ def test_run_iters_zero(setup):
     X, a0, G, k, key = setup
     st0 = engine.init_state(X, a0, k)
     cfg = engine.EngineConfig(batch_size=256, iters=0)
-    st, hist, mhist, epochs, final = engine.run(X, st0, engine.graph_source(G),
-                                                key, cfg)
+    st, hist, mhist, epochs, final, _ = engine.run(
+        X, st0, engine.graph_source(G), key, cfg)
     assert int(epochs) == 0
     assert hist.shape == (0,) and mhist.shape == (0,)
     np.testing.assert_array_equal(np.asarray(st.assign), np.asarray(st0.assign))
@@ -137,7 +137,7 @@ def test_n_smaller_than_batch(setup):
     a0 = two_means_tree(X, k, key)
     G = jax.random.randint(key, (n, 4), 0, n)
     cfg = engine.EngineConfig(batch_size=1024, iters=5, min_move_frac=-1.0)
-    st, hist, _, epochs, final = engine.run(
+    st, hist, _, epochs, final, _ = engine.run(
         X, engine.init_state(X, a0, k), engine.graph_source(G), key, cfg)
     assert int(epochs) == 5
     assert float(final) <= float(distortion(X, a0, k)) + 1e-6

@@ -1,0 +1,264 @@
+"""The obs layer: telemetry slots, sync counting, emit schema, obs_report.
+
+The two load-bearing guarantees:
+  * telemetry ON never changes clustering results (bit-exact assign/stats)
+    and still costs exactly one host sync;
+  * telemetry OFF adds ZERO HLO — the compiled program contains no
+    accumulator buffers.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import engine, two_means_tree
+from repro.data import gmm_blobs
+from repro.obs import (emit, run_record, sync_counter, span, validate_record,
+                       write_json)
+from repro.obs import telemetry as obs_tel
+
+
+@pytest.fixture(scope="module")
+def setup():
+    key = jax.random.PRNGKey(0)
+    n, d, k = 1024, 8, 16
+    X = gmm_blobs(key, n, d, 16)
+    a0 = two_means_tree(X, k, key)
+    G = jax.random.randint(key, (n, 8), 0, n)
+    return X, a0, G, k, key
+
+
+# ---------------------------------------------------------------------------
+# telemetry pytree
+# ---------------------------------------------------------------------------
+
+def test_record_and_column_roundtrip():
+    tel = obs_tel.init(3)
+    tel = obs_tel.record(tel, 1, moves=7, distortion=2.5)
+    np.testing.assert_array_equal(obs_tel.column(tel, "moves"), [0, 7, 0])
+    np.testing.assert_allclose(obs_tel.column(tel, "distortion"),
+                               [0.0, 2.5, 0.0])
+
+
+def test_record_rows_whole_columns():
+    tel = obs_tel.record_rows(obs_tel.init(2), overflow=jnp.array([3, 4]),
+                              graph_mean_dist=jnp.array([1.0, 0.5]))
+    np.testing.assert_array_equal(obs_tel.column(tel, "overflow"), [3, 4])
+    np.testing.assert_allclose(obs_tel.column(tel, "graph_mean_dist"),
+                               [1.0, 0.5])
+
+
+def test_record_unknown_slot_raises_none_passes():
+    with pytest.raises(KeyError):
+        obs_tel.record(obs_tel.init(1), 0, nonsense=1)
+    assert obs_tel.record(None, 0, moves=1) is None
+    assert obs_tel.record_rows(None, moves=jnp.zeros(1)) is None
+    assert obs_tel.to_dict(None) == {}
+
+
+def test_to_dict_truncates_and_selects():
+    tel = obs_tel.record(obs_tel.init(4), 0, moves=9, hit_rate=0.5)
+    d = obs_tel.to_dict(tel, rows=2, slots=["moves", "hit_rate"])
+    assert d == {"moves": [9, 0], "hit_rate": [0.5, 0.0]}
+    assert set(obs_tel.to_dict(tel)) == (set(obs_tel.I32_SLOTS)
+                                         | set(obs_tel.F32_SLOTS))
+
+
+# ---------------------------------------------------------------------------
+# engine telemetry: on/off bit-exactness, one sync, zero HLO when off
+# ---------------------------------------------------------------------------
+
+def _run_cfg(telemetry):
+    return engine.EngineConfig(batch_size=256, iters=5, min_move_frac=-1.0,
+                               telemetry=telemetry)
+
+
+def test_telemetry_on_off_bit_exact(setup):
+    X, a0, G, k, key = setup
+    source = engine.graph_source(G)
+    st_on, hist_on, mh_on, ep_on, fin_on, tel = engine.run(
+        X, engine.init_state(X, a0, k), source, key, _run_cfg(True))
+    st_off, hist_off, mh_off, ep_off, fin_off, tel_off = engine.run(
+        X, engine.init_state(X, a0, k), source, key, _run_cfg(False))
+    assert tel_off is None and tel is not None
+    np.testing.assert_array_equal(np.asarray(st_on.assign),
+                                  np.asarray(st_off.assign))
+    np.testing.assert_array_equal(np.asarray(st_on.D), np.asarray(st_off.D))
+    np.testing.assert_array_equal(np.asarray(st_on.cnt),
+                                  np.asarray(st_off.cnt))
+    np.testing.assert_array_equal(np.asarray(hist_on), np.asarray(hist_off))
+    np.testing.assert_array_equal(np.asarray(mh_on), np.asarray(mh_off))
+    assert int(ep_on) == int(ep_off)
+    np.testing.assert_array_equal(np.asarray(fin_on), np.asarray(fin_off))
+
+
+def test_telemetry_slots_consistent_with_histories(setup):
+    X, a0, G, k, key = setup
+    source = engine.graph_source(G)
+    with sync_counter() as sc:
+        out = engine.run(X, engine.init_state(X, a0, k), source, key,
+                         _run_cfg(True))
+        st, hist, mhist, epochs, final, tel = sc.get(out)  # the ONE sync
+    assert sc.syncs == 1
+    np.testing.assert_array_equal(obs_tel.column(tel, "moves"), mhist)
+    np.testing.assert_array_equal(obs_tel.column(tel, "distortion"), hist)
+    prop = obs_tel.column(tel, "proposed")
+    assert np.all(prop >= obs_tel.column(tel, "moves"))
+    hr = obs_tel.column(tel, "hit_rate")
+    assert np.all((hr >= 0.0) & (hr <= 1.0))
+    empt = obs_tel.column(tel, "empty_clusters")
+    assert np.all((empt >= 0) & (empt <= k))
+
+
+def test_telemetry_off_adds_zero_hlo(setup):
+    """enabled=False compiles the accumulators away entirely: the (iters, 8)
+    i32 / (iters, 4) f32 slot buffers appear nowhere in the compiled HLO."""
+    X, a0, G, k, key = setup
+    source = engine.graph_source(G)
+    i32_shape = f"s32[5,{obs_tel.N_I32}]"
+    f32_shape = f"f32[5,{obs_tel.N_F32}]"
+
+    def compiled_text(telemetry):
+        f = jax.jit(lambda X, a0, key: engine.run_inline(
+            X, engine.init_state(X, a0, k), source, key,
+            _run_cfg(telemetry)))
+        return f.lower(X, a0, key).compile().as_text()
+
+    txt_off = compiled_text(False)
+    assert i32_shape not in txt_off and f32_shape not in txt_off
+    txt_on = compiled_text(True)
+    assert i32_shape in txt_on and f32_shape in txt_on
+
+
+def test_gk_means_surfaces_telemetry(setup):
+    from repro.core import gk_means
+    X, _, _, k, key = setup
+    res = gk_means(X, k, kappa=8, xi=32, tau=2, iters=3, key=key,
+                   telemetry=True)
+    assert res.telemetry is not None
+    assert len(obs_tel.column(res.telemetry, "moves")) == 3
+    res0 = gk_means(X, k, kappa=8, xi=32, tau=2, iters=3, key=key)
+    assert res0.telemetry is None
+    np.testing.assert_array_equal(np.asarray(res.assign),
+                                  np.asarray(res0.assign))
+
+
+# ---------------------------------------------------------------------------
+# sync counter + span
+# ---------------------------------------------------------------------------
+
+def test_sync_counter_counts_gets_and_blocks():
+    """Counting semantics (the raise-on-stray-transfer half of the guard is
+    backend-dependent: CPU device->host is zero-copy and never trips it, so
+    only the explicit-sync tally is asserted here)."""
+    x = jnp.arange(8.0)
+    with sync_counter() as sc:
+        y = x * 2
+        got = sc.get(y)
+        assert sc.syncs == 1
+        sc.block(y)
+        assert sc.syncs == 2
+    np.testing.assert_allclose(got, np.arange(8.0) * 2)
+
+
+def test_span_times_and_files():
+    secs = {}
+    with span("mul", out=secs) as sp:
+        sp.result = jnp.ones((128, 128)) @ jnp.ones((128, 128))
+    assert sp.seconds > 0 and secs["mul"] == sp.seconds
+
+
+def test_kernel_scope_names_land_in_hlo():
+    from repro.kernels import ops
+    txt = jax.jit(ops.pairwise_sq).lower(
+        jnp.ones((2, 8, 4))).compile().as_text()
+    assert "repro.kernels.pairwise_sq" in txt
+
+
+# ---------------------------------------------------------------------------
+# emit schema
+# ---------------------------------------------------------------------------
+
+def test_emit_roundtrip(tmp_path):
+    rec = run_record("unit", shapes={"n": 4}, config={"x": 1},
+                     metrics={"t_s": 0.5}, telemetry={"moves": [1, 2]})
+    p = str(tmp_path / "BENCH_unit.json")
+    write_json(p, rec)
+    back = emit.load_records(p)
+    assert back == [rec]
+    assert back[0]["schema"] == emit.SCHEMA
+    assert back[0]["telemetry"] == {"moves": [1, 2]}
+
+    jl = str(tmp_path / "runs.jsonl")
+    emit.append_jsonl(jl, rec)
+    emit.append_jsonl(jl, run_record("unit2", metrics={"a": 1}))
+    assert [r["name"] for r in emit.load_records(jl)] == ["unit", "unit2"]
+
+    byname = emit.load_dir(str(tmp_path))
+    assert set(byname) == {"unit"}
+
+
+def test_emit_rejects_drift(tmp_path):
+    with pytest.raises(ValueError):
+        validate_record({"name": "x"})
+    bad = run_record("x")
+    bad["schema"] = "repro.bench.v0"
+    with pytest.raises(ValueError):
+        validate_record(bad)
+    p = str(tmp_path / "BENCH_bad.json")
+    with open(p, "w") as f:
+        json.dump({"name": "bad", "metrics": {}}, f)
+    with pytest.raises(ValueError):
+        emit.load_records(p)
+
+
+# ---------------------------------------------------------------------------
+# obs_report
+# ---------------------------------------------------------------------------
+
+def _kernels_record():
+    return run_record("kernels", metrics={"kernels": [
+        {"kernel": "pairwise_sq", "us": 100.0,
+         "shape": {"B": 256, "m": 64, "d": 128}},
+        {"kernel": "refine_merge", "us": 50.0,
+         "shape": {"B": 4096, "C": 64, "d": 128, "kappa": 16}},
+    ]})
+
+
+def test_obs_report_renders_tables(tmp_path, capsys):
+    from repro.launch import obs_report
+    write_json(str(tmp_path / "BENCH_kernels.json"), _kernels_record())
+    write_json(str(tmp_path / "BENCH_engine.json"), run_record(
+        "engine", metrics={"speedup": 2.0},
+        telemetry={"moves": [5, 3], "distortion": [1.5, 1.25]}))
+    assert obs_report.main(["--dir", str(tmp_path),
+                            "--require", "kernels", "engine"]) == 0
+    out = capsys.readouterr().out
+    assert "kernel roofline" in out
+    assert "pairwise_sq" in out and "refine_merge" in out
+    assert "achieved_frac" in out
+    assert "per-phase telemetry" in out
+    assert "distortion" in out and "moves" in out
+
+
+def test_obs_report_fails_on_missing_inventory(tmp_path, capsys):
+    from repro.launch import obs_report
+    rec = _kernels_record()
+    rec["metrics"]["kernels"][0]["kernel"] = "not_a_kernel"
+    write_json(str(tmp_path / "BENCH_kernels.json"), rec)
+    assert obs_report.main(["--dir", str(tmp_path)]) != 0
+    assert "KERNEL_INVENTORY" in capsys.readouterr().err
+
+
+def test_obs_report_fails_on_drift_and_missing_required(tmp_path, capsys):
+    from repro.launch import obs_report
+    assert obs_report.main(["--dir", str(tmp_path)]) != 0   # no records
+    write_json(str(tmp_path / "BENCH_kernels.json"), _kernels_record())
+    assert obs_report.main(["--dir", str(tmp_path),
+                            "--require", "engine"]) != 0    # missing record
+    with open(tmp_path / "BENCH_drifted.json", "w") as f:
+        json.dump({"schema": "repro.bench.v0", "name": "drifted"}, f)
+    assert obs_report.main(["--dir", str(tmp_path)]) != 0   # schema drift
