@@ -9,9 +9,15 @@ import jax
 Row = Tuple[str, float, str]  # (name, us_per_call, derived)
 
 
-def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
-    """Median wall time (us) of fn(*args) after warmup (jit-compile) calls."""
-    for _ in range(warmup):
+def timed_stats(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> dict:
+    """Steady-state timing of fn(*args): the warm-up calls (jit compile +
+    first dispatch) are timed separately and NEVER pollute the reported
+    median.  Returns {"us": median steady-state wall-us, "compile_us": first
+    warm-up call wall-us, "iters": iters}."""
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    compile_us = (time.perf_counter() - t0) * 1e6
+    for _ in range(warmup - 1):
         jax.block_until_ready(fn(*args))
     ts = []
     for _ in range(iters):
@@ -19,7 +25,13 @@ def timed(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
         jax.block_until_ready(fn(*args))
         ts.append(time.perf_counter() - t0)
     ts.sort()
-    return ts[len(ts) // 2] * 1e6
+    return {"us": ts[len(ts) // 2] * 1e6, "compile_us": compile_us,
+            "iters": iters}
+
+
+def timed(fn: Callable, *args, warmup: int = 1, iters: int = 5) -> float:
+    """Median steady-state wall time (us) of fn(*args); warm-up discarded."""
+    return timed_stats(fn, *args, warmup=warmup, iters=iters)["us"]
 
 
 def emit(rows: List[Row]) -> None:

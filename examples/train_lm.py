@@ -9,7 +9,7 @@ dry-run — only the preset differs.
 import argparse
 
 from repro.launch.train import scaled_config, train
-from repro.launch.roofline import param_counts
+from repro.launch.llm_cost import param_counts
 
 
 def main():

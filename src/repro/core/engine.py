@@ -40,6 +40,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import permute
 from repro.kernels import ops as kops
 from repro.obs import telemetry as obs_tel
 
@@ -205,6 +206,24 @@ def _all_gather(x, comm: _Comm):
     return x
 
 
+def _scatter_moves(D, cnt, u, v, gx, gw):
+    """Apply the move deltas as ONE fused (k, d+1) scatter pair.
+
+    ``cnt`` rides along as an extra column of ``D`` so XLA issues two
+    scatters instead of four per batch.  Scatter-add accumulates every
+    column independently, so each column of the fused result — and therefore
+    both ``D`` and ``cnt`` — is bitwise-identical to the separate scatters;
+    fusing only halves the per-batch scatter dispatch in the epoch hot loop
+    (~100us/batch on XLA:CPU at k=256, d=32).  Used by BOTH the sharded
+    sparse path and the single-device path so their row-order arithmetic
+    stays identical (the cross-topology parity contract).
+    """
+    Dc = jnp.concatenate([D, cnt[:, None]], axis=1)
+    g = jnp.concatenate([gx, gw[:, None]], axis=1)
+    Dc = Dc.at[u].add(-g).at[v].add(g)
+    return Dc[:, :-1], Dc[:, -1]
+
+
 def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
     """One batched candidate->score->move step (both topologies).
 
@@ -266,9 +285,8 @@ def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
         ok = (cnt - leav) >= 1.0
         gv = jnp.where(ok[gu], gv, gu)                   # veto unsafe moves
         gx = gx * (gu != gv).astype(jnp.float32)[:, None]
-        D = D.at[gu].add(-gx).at[gv].add(gx)
         gw2 = (gu != gv).astype(jnp.float32)
-        cnt = cnt.at[gu].add(-gw2).at[gv].add(gw2)
+        D, cnt = _scatter_moves(D, cnt, gu, gv, gx, gw2)
         moved = moved & ok[u]
         v = jnp.where(moved, want_v, u)
     elif comm is not None:
@@ -313,8 +331,7 @@ def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
             cnt = cnt + dc_tot
         else:
             gw = (u != v).astype(jnp.float32)
-            D = D.at[u].add(-gx).at[v].add(gx)
-            cnt = cnt.at[u].add(-gw).at[v].add(gw)
+            D, cnt = _scatter_moves(D, cnt, u, v, gx, gw)
 
     assign = assign.at[idx].set(v.astype(jnp.int32))
     moves = moves + jnp.sum(moved, dtype=jnp.int32)
@@ -336,7 +353,7 @@ def _epoch_impl(X, state: BKMState, source: CandidateSource, key,
     nb = max(n_loc // bs, 1)
     # the sharded epoch's visit order exactly: one shared local permutation,
     # shard s owning the contiguous rows [s*n_loc, (s+1)*n_loc)
-    order_loc = jax.random.permutation(key, n_loc).astype(jnp.int32)
+    order_loc = permute.epoch_order(key, n_loc)
     orders = order_loc[None, :] + (jnp.arange(R, dtype=jnp.int32)
                                    * n_loc)[:, None]
     lookup = state.assign      # candidate lookup: epoch-start snapshot
@@ -499,7 +516,7 @@ def sharded_epoch_body(X, source: CandidateSource, assign, D, cnt, key, *,
     nb = max(n_loc // bs, 1)
     # candidate lookup table: global assignment, stale within the epoch
     lookup = _all_gather(assign, comm)
-    order = jax.random.permutation(key, n_loc).astype(jnp.int32)
+    order = permute.epoch_order(key, n_loc)
 
     prop0 = jnp.zeros((), jnp.int32) if cfg.telemetry else None
 

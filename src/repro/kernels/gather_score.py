@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused candidate-row gather + move scoring.
+"""Pallas TPU kernel: fused candidate-row gather + move scoring, row-tiled.
 
 The clustering engine's hot loop scores every sample of a batch against C
 candidate clusters.  The naive formulation gathers the candidates' composite
@@ -9,12 +9,21 @@ into VMEM via scalar-prefetch-driven block indexing (the same revisiting
 pattern as ``ivf_scan``'s tile map) and reduces it in place, so the gathered
 tensor never exists in HBM.
 
-Grid: (B, C + 1), candidate axis innermost.  Step 0 of a row loads the
-sample's *source* cluster and parks the ΔI source-loss term in a VMEM
-scratch that persists across the row's steps; steps 1..C each load one
-candidate row, compute the target gain (mode='bkm', paper Eqn. 3) or the
-candidate-centroid distance (mode='lloyd'), and write one lane of the
-revisited (1, C) output block.
+Grid: (B // bB, bB, C + 1), gather axes innermost.  Each (b, c) step parks
+one gathered composite row in the tile's VMEM scratch; the tile's LAST step
+issues one (bB, d) x (bB, C+1, d) batched ``dot_general`` — the sample axis
+is the batch dimension — and computes ALL of the tile's ΔI (mode='bkm',
+paper Eqn. 3) or candidate-centroid distances (mode='lloyd') in a single
+MXU pass through ``ref.scores_from_dots``.  Per-cluster norms ``||D_k||²``
+and counts are gathered once outside the kernel (bitwise-identical to
+re-reducing the gathered rows, and O(k·d) instead of O(B·C·d)).
+
+Row tiling is bitwise-invariant: the batched dot evaluates each sample's
+contraction independently, so every ``bB`` (from the minimal 2-row tile up
+to the whole batch) produces identical float32 scores — pinned by the
+regression tests in tests/test_kernels.py.  Tail rows of a ragged batch
+(``B % bB != 0``) are padded onto row table entry 0 and their scores sliced
+off after the call; batch independence means they cannot perturb valid rows.
 """
 from __future__ import annotations
 
@@ -25,91 +34,98 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _kernel(rows_ref, x_ref, drow_ref, cnt_ref, out_ref, acc_ref, *,
-            C: int, mode: str):
-    c = pl.program_id(1)
-    x = x_ref[...].astype(jnp.float32)          # (1, d) — resident per sample
-    drow = drow_ref[...].astype(jnp.float32)    # (1, d) — gathered D row
-    nv = cnt_ref[0]                             # () — gathered count
-
-    xsq = jnp.sum(x * x)
-    dsq = jnp.sum(drow * drow)
-    xd = jnp.sum(x * drow)
-    col = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
-
-    if mode == "bkm":
-        # step 0: source-loss term of Eqn. 3, parked for the row's C steps
-        @pl.when(c == 0)
-        def _src():
-            num_u = dsq - 2.0 * xd + xsq
-            resid = jnp.where(nv > 1, num_u / jnp.maximum(nv - 1.0, 1.0), 0.0)
-            acc_ref[0, 0] = resid - dsq / jnp.maximum(nv, 1.0)
-
-        @pl.when(c > 0)
-        def _cand():
-            gain = (dsq + 2.0 * xd + xsq) / (nv + 1.0)
-            gain = gain - jnp.where(nv > 0, dsq / jnp.maximum(nv, 1.0), 0.0)
-            score = gain + acc_ref[0, 0]
-            lane = jnp.full((1, C), score, jnp.float32)
-            prev = jnp.where(c == 1, 0.0, out_ref[...])
-            out_ref[...] = jnp.where(col == c - 1, lane, prev)
-    else:  # lloyd: squared distance to the candidate centroid (minus ||x||^2)
-        @pl.when(c > 0)
-        def _cand():
-            inv = 1.0 / jnp.maximum(nv, 1.0)
-            cc = drow * inv
-            d2 = jnp.sum(cc * cc) - 2.0 * jnp.sum(x * cc)
-            score = jnp.where(nv > 0, d2, jnp.inf)
-            lane = jnp.full((1, C), score, jnp.float32)
-            prev = jnp.where(c == 1, 0.0, out_ref[...])
-            out_ref[...] = jnp.where(col == c - 1, lane, prev)
+from repro.kernels import ref as _ref
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def _kernel(rows_ref, x_ref, drow_ref, nv_ref, dsq_ref, out_ref, R_ref, *,
+            bB: int, C: int, d0: int, mode: str):
+    b = pl.program_id(1)
+    c = pl.program_id(2)
+    # park the gathered composite row in the tile's (bB*(C+1), d) scratch
+    R_ref[pl.ds(b * (C + 1) + c, 1), :] = drow_ref[...].astype(jnp.float32)
+
+    @pl.when((b == bB - 1) & (c == C))
+    def _score():
+        # contract over the NATIVE d0 lanes only: the blocks are zero-padded
+        # to full lanes for the memory layout, but reduction length changes
+        # float32 bits on XLA, so the arithmetic must match ref.py's unpadded
+        # reductions exactly
+        x = x_ref[...].astype(jnp.float32)[:, :d0]      # (bB, d0)
+        R = R_ref[...].reshape(bB, C + 1, -1)[:, :, :d0]
+        dots = jax.lax.dot_general(
+            x, R, (((1,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)         # (bB, C+1)
+        xsq = jnp.sum(x * x, axis=-1)                   # (bB,)
+        out_ref[...] = _ref.scores_from_dots(dots, nv_ref[...], dsq_ref[...],
+                                             xsq, mode)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "bB", "interpret"))
 def gather_score(x: jax.Array, u: jax.Array, cand: jax.Array, D: jax.Array,
-                 cnt: jax.Array, *, mode: str = "bkm",
+                 cnt: jax.Array, *, mode: str = "bkm", bB: int = 8,
                  interpret: bool = False) -> jax.Array:
     """Score a batch against its candidate clusters without a (B, C, d) gather.
 
     x: (B, d) samples; u: (B,) int32 current cluster; cand: (B, C) int32
     candidate cluster ids; D: (k, d) float32 composite vectors; cnt: (k,)
-    float32 counts.
+    float32 counts.  ``bB`` is the row-tile size (autotuned via
+    ``kernels.autotune``; 0 = one tile for the whole batch).
 
     Returns (B, C) float32: the ΔI of moving each sample to each candidate
     (mode='bkm', self-moves NOT masked — callers mask ``cand == u``), or the
     squared candidate-centroid distance minus ||x||^2, +inf for empty
-    candidates (mode='lloyd').
+    candidates (mode='lloyd').  Bitwise-equal to ``ref.gather_score`` in
+    interpret mode, at every tile size.
     """
     assert mode in ("bkm", "lloyd"), mode
     B, d = x.shape
     C = cand.shape[1]
     assert cand.shape[0] == B and u.shape == (B,), (x.shape, u.shape,
                                                     cand.shape)
-    # pad the feature dim to full TPU lanes; zero lanes are exact no-ops in
-    # every reduction (and keep the in-kernel sums bitwise stable vs ref.py)
+    # clamp bB >= 2: XLA strength-reduces a batch-1 dot_general to a matvec
+    # whose reduction order differs in the last ulp (same clamp as ref.py)
+    bB = max(2, min(bB if bB else B, B))
+    # the cluster norms reduce over the NATIVE d (before lane-padding) to
+    # match ref.py's unpadded reduction bitwise
+    dsq_k = jnp.sum(D.astype(jnp.float32) * D.astype(jnp.float32),
+                    axis=-1)                            # (k,) cluster norms
+    # pad the feature dim to full TPU lanes for the VMEM block layout only;
+    # the in-kernel contraction slices back to d0 (see _kernel)
+    d0 = d
     d_pad = (-d) % 128
     if d_pad:
         x = jnp.pad(x, ((0, 0), (0, d_pad)))
         D = jnp.pad(D, ((0, 0), (0, d_pad)))
         d = d + d_pad
-    # rows[i, 0] = source cluster, rows[i, 1..C] = candidates
+    # rows[i, 0] = source cluster, rows[i, 1..C] = candidates; ragged tail
+    # rows gather row-table entry 0 and are sliced off below
     rows = jnp.concatenate([u[:, None], cand], axis=1).astype(jnp.int32)
+    nt = -(-B // bB)
+    Bp = nt * bB
+    if Bp != B:
+        x = jnp.pad(x, ((0, Bp - B), (0, 0)))
+        rows = jnp.pad(rows, ((0, Bp - B), (0, 0)))
+    Df = D.astype(jnp.float32)
+    nv = cnt.astype(jnp.float32)[rows]                  # (Bp, C+1)
+    dsq = dsq_k[rows]                                   # (Bp, C+1)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(B, C + 1),
+        grid=(nt, bB, C + 1),
         in_specs=[
-            pl.BlockSpec((1, d), lambda i, c, rows: (i, 0)),
-            pl.BlockSpec((1, d), lambda i, c, rows: (rows[i, c], 0)),
-            pl.BlockSpec((1,), lambda i, c, rows: (rows[i, c],)),
+            pl.BlockSpec((bB, d), lambda i, b, c, rows: (i, 0)),
+            pl.BlockSpec((1, d),
+                         lambda i, b, c, rows: (rows[i * bB + b, c], 0)),
+            pl.BlockSpec((bB, C + 1), lambda i, b, c, rows: (i, 0)),
+            pl.BlockSpec((bB, C + 1), lambda i, b, c, rows: (i, 0)),
         ],
-        out_specs=pl.BlockSpec((1, C), lambda i, c, rows: (i, 0)),
-        scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)],
+        out_specs=pl.BlockSpec((bB, C), lambda i, b, c, rows: (i, 0)),
+        scratch_shapes=[pltpu.VMEM((bB * (C + 1), d), jnp.float32)],
     )
-    return pl.pallas_call(
-        functools.partial(_kernel, C=C, mode=mode),
+    out = pl.pallas_call(
+        functools.partial(_kernel, bB=bB, C=C, d0=d0, mode=mode),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, C), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Bp, C), jnp.float32),
         interpret=interpret,
-    )(rows, x, D.astype(jnp.float32), cnt.astype(jnp.float32))
+    )(rows, x, Df, nv, dsq)
+    return out[:B]

@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import jax
 
+from repro.kernels import autotune as _at
 from repro.kernels import centroid_assign as _ca
 from repro.kernels import gather_score as _gs
 from repro.kernels import ivf_scan as _ivf
@@ -26,14 +27,24 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
-def pairwise_sq(Xb: jax.Array, *, force: str | None = None) -> jax.Array:
+def _tile(kernel: str, shape: dict, tile: int | None) -> int:
+    """Row-tile for this call: explicit ``tile=`` override, else the
+    checked-in autotune table (see ``kernels.autotune``).  Resolved at trace
+    time — shapes are static under jit, so this is free at runtime."""
+    return _at.resolve(kernel, jax.default_backend(), shape, tile)
+
+
+def pairwise_sq(Xb: jax.Array, *, force: str | None = None,
+                tile: int | None = None) -> jax.Array:
     """Batched (B, m, d) -> (B, m, m) squared L2. force: None|'pallas'|'ref'|'interpret'."""
     with kernel_scope("pairwise_sq"):
+        B, m, d = Xb.shape
+        t = _tile("pairwise_sq", {"B": B, "m": m, "d": d}, tile)
         if force == "pallas" or (force is None and _on_tpu()):
-            return _pt.pairwise_sq(Xb)
+            return _pt.pairwise_sq(Xb, bB=t)
         if force == "interpret":
-            return _pt.pairwise_sq(Xb, interpret=True)
-        return _ref.pairwise_sq(Xb)
+            return _pt.pairwise_sq(Xb, bB=t, interpret=True)
+        return _ref.pairwise_sq(Xb, tile=t)
 
 
 def assign_centroids(X: jax.Array, C: jax.Array, *, force: str | None = None,
@@ -58,24 +69,40 @@ def probe_centroids(X: jax.Array, C: jax.Array, p: int, *,
 
 def gather_score(x: jax.Array, u: jax.Array, cand: jax.Array, D: jax.Array,
                  cnt: jax.Array, *, mode: str = "bkm",
-                 force: str | None = None) -> jax.Array:
-    """(B, d) x (B, C) candidate ids -> (B, C) move scores, gather fused."""
+                 force: str | None = None,
+                 tile: int | None = None) -> jax.Array:
+    """(B, d) x (B, C) candidate ids -> (B, C) move scores, gather fused.
+
+    ``tile`` is the row-tile size (None = autotune table; 0 = whole batch);
+    every tile produces bitwise-identical scores, so it is purely a
+    performance knob.
+    """
     with kernel_scope("gather_score"):
+        B, d = x.shape
+        t = _tile("gather_score", {"B": B, "C": cand.shape[1], "d": d}, tile)
         if force == "ref" or (force is None and not _on_tpu()):
-            return _ref.gather_score(x, u, cand, D, cnt, mode=mode)
-        return _gs.gather_score(x, u, cand, D, cnt, mode=mode,
+            return _ref.gather_score(x, u, cand, D, cnt, mode=mode, tile=t)
+        return _gs.gather_score(x, u, cand, D, cnt, mode=mode, bB=t,
                                 interpret=(force == "interpret"))
 
 
 def refine_merge(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
                  old_ids: jax.Array, old_d: jax.Array, Xsrc: jax.Array, *,
-                 force: str | None = None):
-    """(B, C) candidate rows merged into (B, κ) top-κ lists, gather fused."""
+                 force: str | None = None, tile: int | None = None):
+    """(B, C) candidate rows merged into (B, κ) top-κ lists, gather fused.
+
+    ``tile`` as in ``gather_score`` — a bitwise-neutral performance knob.
+    """
     with kernel_scope("refine_merge"):
+        B, d = x.shape
+        t = _tile("refine_merge",
+                  {"B": B, "C": rows.shape[1], "d": d,
+                   "kappa": old_ids.shape[1]}, tile)
         if force == "ref" or (force is None and not _on_tpu()):
-            return _ref.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc)
+            return _ref.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc,
+                                     tile=t)
         return _rm.refine_merge(x, rows, cand_ids, old_ids, old_d, Xsrc,
-                                interpret=(force == "interpret"))
+                                bB=t, interpret=(force == "interpret"))
 
 
 def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,

@@ -4,8 +4,9 @@ This is the compute hot-spot of the paper's KNN-graph refinement (Alg. 3,
 lines 8-14): clusters have a fixed capacity m (a power of two, MXU-aligned),
 so the whole refinement is a dense batched (B, m, m) distance computation.
 
-Tiling: one grid step per cluster; the (m, d) member tile lives in VMEM and the
-m x m Gram matrix is produced by one MXU matmul with fp32 accumulation.
+Tiling: one grid step per cluster tile of ``bB`` clusters; the (bB, m, d)
+member tiles live in VMEM and the bB Gram matrices are produced by one
+batched MXU matmul with fp32 accumulation (cluster axis = batch dimension).
 For d > D_TILE the feature dimension is streamed in VMEM-sized chunks via an
 inner loop over a second grid axis, accumulating into the output block.
 """
@@ -19,50 +20,53 @@ from jax.experimental import pallas as pl
 
 
 def _kernel(x_ref, xt_ref, out_ref):
-    """Grid: (B, d // d_tile). Accumulates -2*X@X^T + norms into out_ref."""
+    """Grid: (B // bB, d // d_tile). Accumulates -2*X@X^T + norms."""
     j = pl.program_id(1)
     nd = pl.num_programs(1)
-    x = x_ref[0].astype(jnp.float32)          # (m, d_tile)
-    xt = xt_ref[0].astype(jnp.float32)        # (m, d_tile)
+    x = x_ref[...].astype(jnp.float32)        # (bB, m, d_tile)
+    xt = xt_ref[...].astype(jnp.float32)      # (bB, m, d_tile)
 
     dots = jax.lax.dot_general(
-        x, xt, (((1,), (1,)), ((), ())),
-        preferred_element_type=jnp.float32)   # (m, m)
-    sq = jnp.sum(x * x, axis=-1)              # (m,)
-    partial = sq[:, None] + sq[None, :] - 2.0 * dots
+        x, xt, (((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)   # (bB, m, m)
+    sq = jnp.sum(x * x, axis=-1)              # (bB, m)
+    partial = sq[:, :, None] + sq[:, None, :] - 2.0 * dots
 
     @pl.when(j == 0)
     def _init():
-        out_ref[0] = partial
+        out_ref[...] = partial
 
     @pl.when(j > 0)
     def _acc():
-        out_ref[0] += partial
+        out_ref[...] += partial
 
     @pl.when(j == nd - 1)
     def _relu():
-        out_ref[0] = jnp.maximum(out_ref[0], 0.0)
+        out_ref[...] = jnp.maximum(out_ref[...], 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("d_tile", "interpret"))
-def pairwise_sq(Xb: jax.Array, *, d_tile: int = 512,
+@functools.partial(jax.jit, static_argnames=("d_tile", "bB", "interpret"))
+def pairwise_sq(Xb: jax.Array, *, d_tile: int = 512, bB: int = 1,
                 interpret: bool = False) -> jax.Array:
     """Batched squared-L2 distances. Xb: (B, m, d) -> (B, m, m) float32.
 
+    ``bB`` clusters are processed per grid step as one batched dot
+    (autotuned via ``kernels.autotune``; 0 = all clusters in one step).
     m should be a multiple of 8 and d a multiple of 128 for TPU lanes; other
     shapes work (Pallas pads) but waste tiles.
     """
     B, m, d = Xb.shape
+    bB = max(1, min(bB if bB else B, B))
     d_tile = min(d_tile, d)
     nd = pl.cdiv(d, d_tile)
     return pl.pallas_call(
         _kernel,
-        grid=(B, nd),
+        grid=(pl.cdiv(B, bB), nd),
         in_specs=[
-            pl.BlockSpec((1, m, d_tile), lambda b, j: (b, 0, j)),
-            pl.BlockSpec((1, m, d_tile), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((bB, m, d_tile), lambda b, j: (b, 0, j)),
+            pl.BlockSpec((bB, m, d_tile), lambda b, j: (b, 0, j)),
         ],
-        out_specs=pl.BlockSpec((1, m, m), lambda b, j: (b, 0, 0)),
+        out_specs=pl.BlockSpec((bB, m, m), lambda b, j: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((B, m, m), jnp.float32),
         interpret=interpret,
     )(Xb, Xb)

@@ -7,16 +7,32 @@ import jax
 import jax.numpy as jnp
 
 
-def pairwise_sq(Xb: jax.Array) -> jax.Array:
+def pairwise_sq(Xb: jax.Array, *, tile: int = 0) -> jax.Array:
     """Batched squared-L2 distance matrix.
 
     Xb: (B, m, d)  ->  (B, m, m) float32, D[b,i,j] = ||x_i - x_j||^2.
+    ``tile`` chunks the cluster axis (a ``lax.map`` over cluster tiles,
+    bounding the working set to tile*(m*d + m*m) floats); each cluster's
+    Gram matrix is an independent batched dot, so chunking never changes
+    the result.
     """
+    B = Xb.shape[0]
+
+    def block(Xf):
+        sq = jnp.sum(Xf * Xf, axis=-1)                     # (B', m)
+        dots = jnp.einsum("bid,bjd->bij", Xf, Xf)          # (B', m, m)
+        d2 = sq[:, :, None] + sq[:, None, :] - 2.0 * dots
+        return jnp.maximum(d2, 0.0)
+
     Xf = Xb.astype(jnp.float32)
-    sq = jnp.sum(Xf * Xf, axis=-1)                         # (B, m)
-    dots = jnp.einsum("bid,bjd->bij", Xf, Xf)              # (B, m, m)
-    d2 = sq[:, :, None] + sq[:, None, :] - 2.0 * dots
-    return jnp.maximum(d2, 0.0)
+    if not tile or tile >= B:
+        return block(Xf)
+    nt = -(-B // tile)
+    pad = nt * tile - B
+    Xp = jnp.pad(Xf, ((0, pad), (0, 0), (0, 0)))
+    Xp = Xp.reshape(nt, tile, *Xb.shape[1:])
+    out = jax.lax.map(block, Xp)
+    return out.reshape(nt * tile, Xb.shape[1], Xb.shape[1])[:B]
 
 
 def stable_topk(d: jax.Array, ids: jax.Array, k: int):
@@ -164,18 +180,122 @@ def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
     return finalize_d2(ids, d, Qg)
 
 
+def batched_gather_dots(xf: jax.Array, rows: jax.Array, src: jax.Array,
+                        tile: int = 0) -> jax.Array:
+    """``dots[i, j] = xf[i] . src[rows[i, j]]`` with the sample axis batched.
+
+    The per-sample dot is issued as ONE ``dot_general`` whose batch dimension
+    is the sample axis — every sample's contraction is independent, so
+    chunking the batch with ``tile`` (a ``lax.map`` over row tiles, bounding
+    the gathered working set to (tile, C, d)) is bitwise invariant: every
+    tile size, including the row-tiled Pallas kernels' ``bB``, produces
+    identical float32 scores.  ``tile=0`` (or >= B) runs one whole-batch dot.
+    (tile — and a B=1 batch — is clamped/padded to >= 2 rows: XLA:CPU
+    strength-reduces a batch-1 dot_general to a plain matvec whose reduction
+    order differs in the last ulp, the same clamp as the Pallas ``bB``.)
+    """
+    B = xf.shape[0]
+    if B == 1:
+        xf = jnp.concatenate([xf, xf], axis=0)
+        rows = jnp.concatenate([rows, rows], axis=0)
+        return jax.lax.dot_general(
+            xf, src[rows], (((1,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)[:1]
+    if not tile or tile >= B:
+        return jax.lax.dot_general(
+            xf, src[rows], (((1,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+    tile = max(tile, 2)
+    nt = -(-B // tile)
+    pad = nt * tile - B
+    xp = jnp.pad(xf, ((0, pad), (0, 0))).reshape(nt, tile, xf.shape[1])
+    rp = jnp.pad(rows, ((0, pad), (0, 0))).reshape(nt, tile, rows.shape[1])
+
+    def one(args):
+        xt, rt = args
+        return jax.lax.dot_general(
+            xt, src[rt], (((1,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+
+    dots = jax.lax.map(one, (xp, rp))
+    return dots.reshape(nt * tile, rows.shape[1])[:B]
+
+
+def scores_from_dots(dots: jax.Array, nv: jax.Array, dsq: jax.Array,
+                     xsq: jax.Array, mode: str) -> jax.Array:
+    """Move scores from precomputed inner products (shared kernel/ref body).
+
+    dots/nv/dsq: (B, C+1) with slot 0 = the source cluster u and slots 1..C
+    the candidates (x·D[row], cnt[row], ||D[row]||² per slot); xsq: (B,).
+    Every op is elementwise per row, so the scores are invariant to how the
+    batch was tiled when computing ``dots`` — the tiled Pallas kernels call
+    this exact function per row tile and match the whole-batch oracle
+    bitwise.
+    """
+    nv_c, dsq_c, xd_c = nv[:, 1:], dsq[:, 1:], dots[:, 1:]
+    if mode == "lloyd":
+        inv = 1.0 / jnp.maximum(nv_c, 1.0)
+        d2 = dsq_c * (inv * inv) - 2.0 * (xd_c * inv)
+        return jnp.where(nv_c > 0, d2, jnp.inf)
+    nu, dsq_u, xd_u = nv[:, 0], dsq[:, 0], dots[:, 0]
+    gain = (dsq_c + 2.0 * xd_c + xsq[:, None]) / (nv_c + 1.0)
+    gain = gain - jnp.where(nv_c > 0, dsq_c / jnp.maximum(nv_c, 1.0), 0.0)
+    num_u = dsq_u - 2.0 * xd_u + xsq
+    resid = jnp.where(nu > 1, num_u / jnp.maximum(nu - 1.0, 1.0), 0.0)
+    loss_u = resid - dsq_u / jnp.maximum(nu, 1.0)
+    return gain + loss_u[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "tile"))
 def gather_score(x: jax.Array, u: jax.Array, cand: jax.Array, D: jax.Array,
-                 cnt: jax.Array, *, mode: str = "bkm") -> jax.Array:
-    """Candidate-move scoring oracle (the engine's hot loop).
+                 cnt: jax.Array, *, mode: str = "bkm",
+                 tile: int = 0) -> jax.Array:
+    """Candidate-move scoring oracle (the engine's hot loop), MXU-shaped.
 
     x: (B, d), u: (B,) int32 source clusters, cand: (B, C) int32 candidate
     clusters, D: (k, d) composite vectors, cnt: (k,) counts.
 
     mode='bkm': ΔI of moving x from u to each candidate (paper Eqn. 3;
     self-moves not masked).  mode='lloyd': squared distance to each candidate
-    centroid minus ||x||^2, +inf for empty candidates.  The feature dim is
-    zero-padded to full 128-wide TPU lanes first so every reduction runs over
-    the same shape as in the Pallas kernel (bitwise-matching scores).
+    centroid minus ||x||^2, +inf for empty candidates.
+
+    The inner products go through one batched ``dot_general`` (sample axis =
+    batch dim) over the gathered (B, C+1, d) composite rows, with the
+    per-cluster norms ``||D_k||²`` precomputed once — this is what makes the
+    scoring hot path fast on every backend.  ``tile`` chunks the batch (see
+    ``batched_gather_dots``) to bound the gather working set; every tile size
+    is bitwise-identical, so the autotuner is free to pick.  Jitted for the
+    same cross-topology fusion-rounding reason as ``ivf_scan_grouped``.
+
+    Every reduction runs over the NATIVE feature dim: lane-padding belongs to
+    the memory layout, not the arithmetic, so the CPU path never pays gather
+    traffic for zero lanes (4x at d=32).  The Pallas kernel pads only its
+    VMEM blocks to full 128-wide TPU lanes and slices the contraction back
+    to ``d`` — reduction length changes float32 bits on XLA even when the
+    extra lanes are zero, so both sides must contract exactly ``d`` lanes
+    for the bitwise contract to hold.
+    """
+    xf = x.astype(jnp.float32)
+    Df = D.astype(jnp.float32)
+    rows = jnp.concatenate([u[:, None], cand], axis=1).astype(jnp.int32)
+    dsq_k = jnp.sum(Df * Df, axis=-1)                   # (k,)
+    dots = batched_gather_dots(xf, rows, Df, tile)      # (B, C+1)
+    nv = cnt.astype(jnp.float32)[rows]
+    dsq = dsq_k[rows]
+    xsq = jnp.sum(xf * xf, axis=-1)
+    return scores_from_dots(dots, nv, dsq, xsq, mode)
+
+
+def gather_score_rowwise(x: jax.Array, u: jax.Array, cand: jax.Array,
+                         D: jax.Array, cnt: jax.Array, *,
+                         mode: str = "bkm") -> jax.Array:
+    """Pre-tiling per-row oracle (elementwise reductions over a (B, C, d)
+    gather) — kept as the bench baseline the row-tiled path must beat.
+
+    Reduction order differs from the dot-based ``gather_score`` (the ΔI
+    terms cancel heavily, so the two disagree in the last few ulps); the
+    row-tiling regression test pins the NEW arithmetic across tile sizes
+    instead, and this function pins what the old per-row kernels computed.
     """
     d_pad = (-x.shape[1]) % 128
     if d_pad:
@@ -205,46 +325,30 @@ def gather_score(x: jax.Array, u: jax.Array, cand: jax.Array, D: jax.Array,
     return gain + loss_u[:, None]
 
 
-def refine_merge(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
-                 old_ids: jax.Array, old_d: jax.Array, Xsrc: jax.Array):
-    """Fused candidate-distance + top-κ merge oracle (graph-build hot loop).
+def merge_lists(old_ids: jax.Array, old_d: jax.Array, cand_ids: jax.Array,
+                cd: jax.Array, kappa: int):
+    """Top-κ merge of candidate distances into sorted lists (kernel/ref body).
 
-    x: (B, d) row vectors; rows: (B, C) int32 gather indices into Xsrc
-    (pre-clamped >= 0); cand_ids: (B, C) int32 neighbour ids with -1 =
-    invalid; old_ids/old_d: (B, κ) current lists (-1/inf padded);
-    Xsrc: (N, d) candidate vector source.
-
-    Returns (ids (B, κ) int32, d (B, κ) float32): exact squared distances to
-    the candidates merged into the old lists — ascending by distance,
-    id-deduped (duplicates keep their best distance), -1/inf padded.  The
-    selection is an iterative first-minimum loop with retire-all-copies on
-    the selected id — exactly the Pallas kernel's order, and the feature dim
-    is zero-padded to full 128-wide TPU lanes so every reduction runs over
-    the kernel's shapes (bitwise-matching outputs in interpret mode).
+    old_ids/old_d: (B, κ) current lists; cand_ids/cd: (B, C) candidates with
+    id -1 = invalid.  Iterative first-minimum selection with
+    retire-all-copies of the selected id (the dedupe) — every op is
+    elementwise per row, so the merge is invariant to row tiling and the
+    tiled Pallas kernel reuses this exact function per tile.
     """
-    B, d = x.shape
-    C = rows.shape[1]
-    kappa = old_ids.shape[1]
-    d_pad = (-d) % 128
-    xf = x.astype(jnp.float32)
-    Y = Xsrc[rows].astype(jnp.float32)                     # (B, C, d)
-    if d_pad:
-        xf = jnp.pad(xf, ((0, 0), (0, d_pad)))
-        Y = jnp.pad(Y, ((0, 0), (0, 0), (0, d_pad)))
-    diff = Y - xf[:, None, :]
-    cd = jnp.sum(diff * diff, axis=-1)                     # (B, C)
-
-    L = kappa + C
-    ent_d = jnp.concatenate([old_d.astype(jnp.float32), cd], axis=-1)
+    kappa_old, C = old_ids.shape[-1], cand_ids.shape[-1]
+    L = kappa_old + C
+    ent_d = jnp.concatenate([old_d.astype(jnp.float32),
+                             cd.astype(jnp.float32)], axis=-1)
     ent_i = jnp.concatenate([old_ids, cand_ids], axis=-1).astype(jnp.int32)
     ent_d = jnp.where(ent_i < 0, jnp.inf, ent_d)
-    col = jnp.arange(L, dtype=jnp.int32)
+    # 2-D iota (broadcast over rows): legal inside Pallas TPU bodies too
+    col = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
     out_d, out_i = [], []
     for j in range(kappa):
         mv = jnp.min(ent_d, axis=-1)                       # (B,)
         hit = ent_d == mv[:, None]
         pos = jnp.min(jnp.where(hit, col, L), axis=-1)     # first minimum
-        at = col[None, :] == pos[:, None]
+        at = col == pos[:, None]
         sid = jnp.sum(jnp.where(at, ent_i, 0), axis=-1)
         valid = mv < jnp.inf
         out_d.append(jnp.where(valid, mv, jnp.inf))
@@ -252,6 +356,58 @@ def refine_merge(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
         # retire the winner and every other copy of its id (dedupe)
         ent_d = jnp.where((ent_i == sid[:, None]) | at, jnp.inf, ent_d)
     return jnp.stack(out_i, axis=-1), jnp.stack(out_d, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("tile",))
+def refine_merge(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
+                 old_ids: jax.Array, old_d: jax.Array, Xsrc: jax.Array, *,
+                 tile: int = 0):
+    """Fused candidate-distance + top-κ merge oracle (graph-build hot loop).
+
+    x: (B, d) row vectors; rows: (B, C) int32 gather indices into Xsrc
+    (pre-clamped >= 0); cand_ids: (B, C) int32 neighbour ids with -1 =
+    invalid; old_ids/old_d: (B, κ) current lists (-1/inf padded);
+    Xsrc: (N, d) candidate vector source.
+
+    Returns (ids (B, κ) int32, d (B, κ) float32): squared distances to the
+    candidates merged into the old lists — ascending by distance, id-deduped
+    (duplicates keep their best distance), -1/inf padded.  Distances use the
+    MXU form ``||y||² + ||x||² − 2·x·y`` (clamped >= 0, like ``pairwise_sq``)
+    with the source norms hoisted out of the gather and the dots batched over
+    the sample axis — ``tile`` chunks the batch bitwise-invariantly (see
+    ``batched_gather_dots``).  Reductions run over the NATIVE feature dim
+    (see ``gather_score``: the Pallas kernel lane-pads only its VMEM blocks
+    and slices the contraction back to ``d``), and the selection order
+    matches the tiled kernel exactly (bitwise-matching outputs in interpret
+    mode).
+    """
+    kappa = old_ids.shape[1]
+    xf = x.astype(jnp.float32)
+    Xf = Xsrc.astype(jnp.float32)
+    ysq = jnp.sum(Xf * Xf, axis=-1)[rows]                  # (B, C)
+    xsq = jnp.sum(xf * xf, axis=-1)                        # (B,)
+    dots = batched_gather_dots(xf, rows.astype(jnp.int32), Xf, tile)
+    cd = jnp.maximum(ysq + xsq[:, None] - 2.0 * dots, 0.0)
+    return merge_lists(old_ids.astype(jnp.int32), old_d, cand_ids, cd, kappa)
+
+
+def refine_merge_rowwise(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
+                         old_ids: jax.Array, old_d: jax.Array,
+                         Xsrc: jax.Array):
+    """Pre-tiling per-row oracle (``sum((x−y)²)`` over a (B, C, d) gather) —
+    kept as the bench baseline the row-tiled path must beat.  Same merge,
+    different distance reduction order than ``refine_merge`` (last-ulp
+    disagreement on the distances)."""
+    d_pad = (-x.shape[1]) % 128
+    kappa = old_ids.shape[1]
+    xf = x.astype(jnp.float32)
+    Y = Xsrc[rows].astype(jnp.float32)                     # (B, C, d)
+    if d_pad:
+        xf = jnp.pad(xf, ((0, 0), (0, d_pad)))
+        Y = jnp.pad(Y, ((0, 0), (0, 0), (0, d_pad)))
+    diff = Y - xf[:, None, :]
+    cd = jnp.sum(diff * diff, axis=-1)                     # (B, C)
+    return merge_lists(old_ids.astype(jnp.int32), old_d, cand_ids, cd, kappa)
 
 
 def assign_centroids(X: jax.Array, C: jax.Array):

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused candidate-distance + top-κ merge.
+"""Pallas TPU kernel: fused candidate-distance + top-κ merge, row-tiled.
 
 The graph builder's refinement hot loop (``core.graph_build``) compares every
 row against C candidate rows (its cluster co-members, Alg. 3, or its
@@ -7,16 +7,20 @@ top-κ list.  The naive formulation materialises a (B, C, d) candidate gather
 and a (B, C) distance matrix in HBM, then runs a three-argsort dedupe merge
 (``knn_graph.merge_topk``) over (B, κ + C).  This kernel streams each
 candidate row straight from HBM into VMEM via scalar-prefetch-driven block
-indexing (the same revisiting pattern as ``gather_score``), accumulates the C
-distances in a VMEM scratch, and performs the merge in-register on the last
-grid step — neither the gathered tensor nor the distance matrix ever exists
-in HBM, and the merge costs O(κ(κ+C)) lane ops instead of three sorts.
+indexing (the same revisiting pattern as ``gather_score``) — neither the
+gathered tensor nor the distance matrix ever exists in HBM, and the merge
+costs O(κ(κ+C)) lane ops instead of three sorts.
 
-Grid: (B, C), candidate axis innermost.  Steps 0..C-1 of a row each load one
-candidate row and write one lane of the (1, C) distance scratch; step C-1
-additionally merges the scratch with the row's old list (selection loop:
-repeated first-minimum with retire-all-copies of the selected id — the
-id-dedupe) and writes the (1, κ) output blocks.
+Grid: (B // bB, bB, C), gather axes innermost.  Each (b, c) step parks one
+gathered candidate row in the tile's VMEM scratch; the tile's LAST step
+computes all bB x C distances at once in MXU form — one (bB, d) x (bB, C, d)
+batched ``dot_general`` (sample axis = batch dim) plus hoisted source norms,
+``max(||y||² + ||x||² − 2·x·y, 0)`` — and runs the vectorised merge
+(``ref.merge_lists``: repeated first-minimum with retire-all-copies of the
+selected id) over the whole (bB, κ+C) tile.  Row tiling is bitwise-invariant
+(batch dims evaluate per-row; the merge is elementwise per row), so every
+``bB`` matches the whole-batch oracle exactly; ragged tails pad the row
+table with entry 0 and slice the results off.
 """
 from __future__ import annotations
 
@@ -27,91 +31,110 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import ref as _ref
 
-def _kernel(rows_ref, x_ref, y_ref, oldi_ref, oldd_ref, candi_ref,
-            outi_ref, outd_ref, dacc_ref, *, C: int, kappa: int):
-    c = pl.program_id(1)
-    x = x_ref[...].astype(jnp.float32)          # (1, d) — resident per row
-    y = y_ref[...].astype(jnp.float32)          # (1, d) — gathered candidate
-    diff = x - y
-    d2 = jnp.sum(diff * diff)
 
-    ccol = jax.lax.broadcasted_iota(jnp.int32, (1, C), 1)
-    prev = jnp.where(c == 0, 0.0, dacc_ref[...])
-    dacc_ref[...] = jnp.where(ccol == c, d2, prev)
+def _kernel(rows_ref, x_ref, y_ref, ysq_ref, oldi_ref, oldd_ref, candi_ref,
+            outi_ref, outd_ref, Y_ref, *, bB: int, C: int, kappa: int,
+            d0: int):
+    b = pl.program_id(1)
+    c = pl.program_id(2)
+    # park the gathered candidate row in the tile's (bB*C, d) scratch
+    Y_ref[pl.ds(b * C + c, 1), :] = y_ref[...].astype(jnp.float32)
 
-    @pl.when(c == C - 1)
+    @pl.when((b == bB - 1) & (c == C - 1))
     def _merge():
-        L = kappa + C
-        ent_d = jnp.concatenate(
-            [oldd_ref[...].astype(jnp.float32), dacc_ref[...]], axis=1)
-        ent_i = jnp.concatenate([oldi_ref[...], candi_ref[...]], axis=1)
-        ent_d = jnp.where(ent_i < 0, jnp.inf, ent_d)
-        col = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
-        kcol = jax.lax.broadcasted_iota(jnp.int32, (1, kappa), 1)
-        od = jnp.zeros((1, kappa), jnp.float32)
-        oi = jnp.full((1, kappa), -1, jnp.int32)
-        for j in range(kappa):
-            mv = jnp.min(ent_d)
-            hit = ent_d == mv
-            pos = jnp.min(jnp.where(hit, col, L))          # first minimum
-            at = col == pos
-            sid = jnp.sum(jnp.where(at, ent_i, 0))
-            valid = mv < jnp.inf
-            od = jnp.where(kcol == j, jnp.where(valid, mv, jnp.inf), od)
-            oi = jnp.where(kcol == j, jnp.where(valid, sid, -1), oi)
-            # retire the winner and every other copy of its id (dedupe)
-            ent_d = jnp.where((ent_i == sid) | at, jnp.inf, ent_d)
-        outd_ref[...] = od
+        # contract over the NATIVE d0 lanes only — blocks are lane-padded
+        # for the memory layout, but the arithmetic must match ref.py's
+        # unpadded reductions bitwise (see gather_score._kernel)
+        x = x_ref[...].astype(jnp.float32)[:, :d0]      # (bB, d0)
+        Y = Y_ref[...].reshape(bB, C, -1)[:, :, :d0]
+        dots = jax.lax.dot_general(
+            x, Y, (((1,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)         # (bB, C)
+        xsq = jnp.sum(x * x, axis=-1)                   # (bB,)
+        cd = jnp.maximum(ysq_ref[...] + xsq[:, None] - 2.0 * dots, 0.0)
+        oi, od = _ref.merge_lists(oldi_ref[...],
+                                  oldd_ref[...].astype(jnp.float32),
+                                  candi_ref[...], cd, kappa)
         outi_ref[...] = oi
+        outd_ref[...] = od
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("bB", "interpret"))
 def refine_merge(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
                  old_ids: jax.Array, old_d: jax.Array, Xsrc: jax.Array, *,
-                 interpret: bool = False):
+                 bB: int = 8, interpret: bool = False):
     """Merge C candidates into each row's top-κ list without an HBM gather.
 
     x: (B, d) row vectors; rows: (B, C) int32 indices into Xsrc (pre-clamped
     >= 0); cand_ids: (B, C) int32 neighbour ids (-1 = invalid); old_ids /
-    old_d: (B, κ) current lists (-1/inf padded); Xsrc: (N, d).
+    old_d: (B, κ) current lists (-1/inf padded); Xsrc: (N, d).  ``bB`` is
+    the row-tile size (autotuned via ``kernels.autotune``; 0 = one tile).
 
     Returns (ids (B, κ) int32, d (B, κ) float32) ascending by distance,
-    id-deduped, -1/inf padded — see ``ref.refine_merge`` for the oracle.
+    id-deduped, -1/inf padded — bitwise-equal to ``ref.refine_merge`` in
+    interpret mode, at every tile size.
     """
     B, d = x.shape
     C = rows.shape[1]
     kappa = old_ids.shape[1]
     assert rows.shape == cand_ids.shape == (B, C), (rows.shape, cand_ids.shape)
     assert old_ids.shape == old_d.shape == (B, kappa)
-    # pad the feature dim to full TPU lanes; zero lanes are exact no-ops in
-    # the distance reduction (and keep the in-kernel sums bitwise stable vs
-    # ref.py, which reduces over the same padded shape)
+    # clamp bB >= 2: XLA strength-reduces a batch-1 dot_general to a matvec
+    # whose reduction order differs in the last ulp (same clamp as ref.py)
+    bB = max(2, min(bB if bB else B, B))
+    # the source norms reduce over the NATIVE d (before lane-padding) to
+    # match ref.py's unpadded reduction bitwise
+    Xn = Xsrc.astype(jnp.float32)
+    ysq_src = jnp.sum(Xn * Xn, axis=-1)                 # (N,) hoisted norms
+    # pad the feature dim to full TPU lanes for the VMEM block layout only;
+    # the in-kernel contraction slices back to d0 (see _kernel)
+    d0 = d
     d_pad = (-d) % 128
     if d_pad:
         x = jnp.pad(x, ((0, 0), (0, d_pad)))
         Xsrc = jnp.pad(Xsrc, ((0, 0), (0, d_pad)))
         d = d + d_pad
+    rows = rows.astype(jnp.int32)
+    cand_ids = cand_ids.astype(jnp.int32)
+    old_ids = old_ids.astype(jnp.int32)
+    old_d = old_d.astype(jnp.float32)
+    nt = -(-B // bB)
+    Bp = nt * bB
+    if Bp != B:
+        # ragged tail: pad onto source row 0 / empty lists, slice off below
+        x = jnp.pad(x, ((0, Bp - B), (0, 0)))
+        rows = jnp.pad(rows, ((0, Bp - B), (0, 0)))
+        cand_ids = jnp.pad(cand_ids, ((0, Bp - B), (0, 0)),
+                           constant_values=-1)
+        old_ids = jnp.pad(old_ids, ((0, Bp - B), (0, 0)), constant_values=-1)
+        old_d = jnp.pad(old_d, ((0, Bp - B), (0, 0)),
+                        constant_values=jnp.inf)
+    Xf = Xsrc.astype(jnp.float32)
+    ysq = ysq_src[rows]                                 # (Bp, C)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(B, C),
+        grid=(nt, bB, C),
         in_specs=[
-            pl.BlockSpec((1, d), lambda i, c, rows: (i, 0)),
-            pl.BlockSpec((1, d), lambda i, c, rows: (rows[i, c], 0)),
-            pl.BlockSpec((1, kappa), lambda i, c, rows: (i, 0)),
-            pl.BlockSpec((1, kappa), lambda i, c, rows: (i, 0)),
-            pl.BlockSpec((1, C), lambda i, c, rows: (i, 0)),
+            pl.BlockSpec((bB, d), lambda i, b, c, rows: (i, 0)),
+            pl.BlockSpec((1, d),
+                         lambda i, b, c, rows: (rows[i * bB + b, c], 0)),
+            pl.BlockSpec((bB, C), lambda i, b, c, rows: (i, 0)),
+            pl.BlockSpec((bB, kappa), lambda i, b, c, rows: (i, 0)),
+            pl.BlockSpec((bB, kappa), lambda i, b, c, rows: (i, 0)),
+            pl.BlockSpec((bB, C), lambda i, b, c, rows: (i, 0)),
         ],
-        out_specs=(pl.BlockSpec((1, kappa), lambda i, c, rows: (i, 0)),
-                   pl.BlockSpec((1, kappa), lambda i, c, rows: (i, 0))),
-        scratch_shapes=[pltpu.VMEM((1, C), jnp.float32)],
+        out_specs=(pl.BlockSpec((bB, kappa), lambda i, b, c, rows: (i, 0)),
+                   pl.BlockSpec((bB, kappa), lambda i, b, c, rows: (i, 0))),
+        scratch_shapes=[pltpu.VMEM((bB * C, d), jnp.float32)],
     )
-    return pl.pallas_call(
-        functools.partial(_kernel, C=C, kappa=kappa),
+    oi, od = pl.pallas_call(
+        functools.partial(_kernel, bB=bB, C=C, kappa=kappa, d0=d0),
         grid_spec=grid_spec,
-        out_shape=(jax.ShapeDtypeStruct((B, kappa), jnp.int32),
-                   jax.ShapeDtypeStruct((B, kappa), jnp.float32)),
+        out_shape=(jax.ShapeDtypeStruct((Bp, kappa), jnp.int32),
+                   jax.ShapeDtypeStruct((Bp, kappa), jnp.float32)),
         interpret=interpret,
-    )(rows.astype(jnp.int32), x, Xsrc, old_ids.astype(jnp.int32),
-      old_d.astype(jnp.float32), cand_ids.astype(jnp.int32))
+    )(rows, x, Xf, ysq, old_ids, old_d, cand_ids)
+    return oi[:B], od[:B]

@@ -19,6 +19,7 @@ import traceback  # noqa: E402
 import jax  # noqa: E402
 
 from repro.configs import SHAPES, get_config, list_archs  # noqa: E402
+from repro.launch import llm_cost as lc  # noqa: E402
 from repro.launch import roofline as rl  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from repro.launch.specs import input_specs  # noqa: E402
@@ -89,12 +90,12 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         rec["collectives"] = coll  # while-trip-count corrected
         chips = 512 if multi_pod else 256
         # analytic (exact matmul count / modeled traffic) per-chip terms
-        fl = rl.flops_analytic(cfg, shape, chips)
-        hb = rl.hbm_analytic(cfg, shape, chips)
+        fl = lc.flops_analytic(cfg, shape, chips)
+        hb = lc.hbm_analytic(cfg, shape, chips)
         rec["flops_analytic"] = fl
         rec["hbm_bytes_analytic"] = hb
         terms = rl.roofline_terms(fl, hb, coll["total_wire_bytes"])
-        mf = rl.model_flops(cfg, shape)
+        mf = lc.model_flops(cfg, shape)
         terms["model_flops_total"] = mf
         terms["model_flops_per_chip"] = mf / chips
         terms["useful_ratio"] = (mf / chips / fl) if fl else None

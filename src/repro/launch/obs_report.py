@@ -12,11 +12,20 @@ the benchmarks write against ``launch.roofline.KERNEL_INVENTORY``:
 
 This doubles as the CI schema gate: any ``BENCH_*.json`` that drifted from
 the schema, any timed kernel missing from ``KERNEL_INVENTORY``, and any
-record named in ``--require`` that is absent all exit nonzero.
+name in ``--require`` that is absent all exit nonzero.  A ``--require``
+token matches either a whole record (``BENCH_<name>.json``) or a single
+measured kernel inside the ``kernels`` record — so CI can insist that e.g.
+``ivf_scan`` and ``ivf_scan_grouped`` stay on the bench.
+
+Row-tiled kernels report the autotuned ``tile`` the dispatch used (from
+``kernels/autotune_table.json``; "-" for untiled kernels) and, when the
+bench measured it, ``rowwise_x`` — the speedup over the legacy per-row
+oracle.
 
 CLI::
 
-    python -m repro.launch.obs_report [--dir .] [--require kernels engine]
+    python -m repro.launch.obs_report [--dir .] \
+        [--require kernels engine ivf_scan]
 """
 from __future__ import annotations
 
@@ -61,11 +70,14 @@ def kernel_table(rec: Dict[str, Any]) -> str:
         meas_us = float(e["us"])
         frac = bound_us / meas_us if meas_us > 0 else 0.0
         dims = ",".join(f"{k}={v}" for k, v in shape.items())
+        tile = str(e["tile"]) if "tile" in e else "-"
+        roww = (f"{float(e['us_rowwise']) / meas_us:.2f}x"
+                if e.get("us_rowwise") and meas_us > 0 else "-")
         rows.append([name, dims, f"{meas_us:.1f}", f"{bound_us:.2f}",
-                     terms["bottleneck"], f"{frac:.4f}"])
+                     terms["bottleneck"], f"{frac:.4f}", tile, roww])
     return _fmt_table(
         ["kernel", "shape", "measured_us", "roofline_us", "bound",
-         "achieved_frac"], rows)
+         "achieved_frac", "tile", "rowwise_x"], rows)
 
 
 def phase_table(rec: Dict[str, Any]) -> str:
@@ -114,7 +126,8 @@ def main(argv=None) -> int:
     ap.add_argument("--dir", default=".",
                     help="directory holding BENCH_*.json run records")
     ap.add_argument("--require", nargs="*", default=[],
-                    help="record names that must be present (CI gate)")
+                    help="record names — or measured kernel names inside the "
+                         "kernels record — that must be present (CI gate)")
     args = ap.parse_args(argv)
 
     try:
@@ -122,10 +135,15 @@ def main(argv=None) -> int:
     except ValueError as e:                 # schema drift
         print(f"obs_report: schema error: {e}", file=sys.stderr)
         return 1
-    missing = [r for r in args.require if r not in recs]
+    timed_kernels = {e["kernel"]
+                     for e in (recs.get("kernels", {})
+                               .get("metrics", {}).get("kernels", []))}
+    missing = [r for r in args.require
+               if r not in recs and r not in timed_kernels]
     if missing:
         print(f"obs_report: required records missing: {missing} "
-              f"(have {sorted(recs)})", file=sys.stderr)
+              f"(have records {sorted(recs)}, kernels "
+              f"{sorted(timed_kernels)})", file=sys.stderr)
         return 1
     if not recs:
         print(f"obs_report: no BENCH_*.json records in {args.dir!r}",

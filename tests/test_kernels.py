@@ -81,15 +81,44 @@ def _gather_score_case(B, d, k, C, seed):
 @pytest.mark.parametrize("B,d,k,C", [(13, 24, 40, 7), (16, 128, 32, 16),
                                      (8, 100, 16, 1), (32, 16, 64, 5)])
 @pytest.mark.parametrize("mode", ["bkm", "lloyd"])
-def test_gather_score_interpret_exact(B, d, k, C, mode):
+@pytest.mark.parametrize("bB", [1, 4, 0])
+def test_gather_score_interpret_exact(B, d, k, C, mode, bB):
     """Acceptance: the fused gather+score kernel matches ref.py EXACTLY
-    (bitwise) in interpret mode — both sides reduce over the same
-    lane-padded shapes."""
+    (bitwise) in interpret mode at EVERY row-tile size — ragged tails
+    (B % bB != 0), ragged feature dims (d % 128 != 0: both sides contract
+    the native d; the kernel lane-pads only its VMEM blocks), and
+    non-lane-aligned C+1 included."""
     from repro.kernels import gather_score as gs
     x, u, cand, D, cnt = _gather_score_case(B, d, k, C, B * d + C)
     want = ref.gather_score(x, u, cand, D, cnt, mode=mode)
-    got = gs.gather_score(x, u, cand, D, cnt, mode=mode, interpret=True)
+    got = gs.gather_score(x, u, cand, D, cnt, mode=mode, bB=bB,
+                          interpret=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_gather_score_tiling_regression():
+    """Row-tiling is pure scheduling: on a fixed seed, every tile size —
+    ref tiles, Pallas bB, and the ops dispatch (autotuned tile) — returns
+    the SAME float32 bits, and they track the legacy per-row oracle (which
+    reduces in a different order) to float32 round-off."""
+    from repro.kernels import gather_score as gs
+    x, u, cand, D, cnt = _gather_score_case(64, 48, 32, 9, 1234)
+    base = ref.gather_score(x, u, cand, D, cnt, mode="bkm", tile=0)
+    for t in (2, 8, 64):
+        np.testing.assert_array_equal(
+            np.asarray(ref.gather_score(x, u, cand, D, cnt, mode="bkm",
+                                        tile=t)), np.asarray(base))
+    for bB in (2, 8, 64):
+        np.testing.assert_array_equal(
+            np.asarray(gs.gather_score(x, u, cand, D, cnt, mode="bkm",
+                                       bB=bB, interpret=True)),
+            np.asarray(base))
+    np.testing.assert_array_equal(
+        np.asarray(ops.gather_score(x, u, cand, D, cnt, mode="bkm")),
+        np.asarray(base))
+    roww = ref.gather_score_rowwise(x, u, cand, D, cnt, mode="bkm")
+    np.testing.assert_allclose(np.asarray(base), np.asarray(roww),
+                               rtol=1e-5, atol=1e-4)
 
 
 def test_gather_score_matches_delta_I():
@@ -143,16 +172,37 @@ def _refine_merge_case(B, d, C, kappa, N, seed):
                                            (16, 128, 12, 8, 64),
                                            (4, 60, 33, 16, 40),
                                            (8, 16, 1, 3, 9)])
-def test_refine_merge_interpret_exact(B, d, C, kappa, N):
+@pytest.mark.parametrize("bB", [1, 4, 0])
+def test_refine_merge_interpret_exact(B, d, C, kappa, N, bB):
     """Acceptance: the fused distance+merge kernel matches ref.py EXACTLY
-    (bitwise) in interpret mode — same lane-padded reductions, same
-    first-minimum/retire-all selection order."""
+    (bitwise) in interpret mode at EVERY row-tile size — native-d
+    reductions, same first-minimum/retire-all selection order, ragged
+    tails (B % bB != 0) included."""
     from repro.kernels import refine_merge as rm
     args = _refine_merge_case(B, d, C, kappa, N, B * d + C)
     want = ref.refine_merge(*args)
-    got = rm.refine_merge(*args, interpret=True)
+    got = rm.refine_merge(*args, bB=bB, interpret=True)
     np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
     np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+def test_refine_merge_tiling_regression():
+    """Fixed-seed pin: ref tiles, Pallas bB, and the ops dispatch all
+    return identical ids and float32 distance bits."""
+    from repro.kernels import refine_merge as rm
+    args = _refine_merge_case(24, 40, 7, 5, 60, 4321)
+    bi, bd = ref.refine_merge(*args, tile=0)
+    for t in (2, 5, 24):
+        ri, rd = ref.refine_merge(*args, tile=t)
+        np.testing.assert_array_equal(np.asarray(ri), np.asarray(bi))
+        np.testing.assert_array_equal(np.asarray(rd), np.asarray(bd))
+    for bB in (3, 8, 24):
+        ki, kd = rm.refine_merge(*args, bB=bB, interpret=True)
+        np.testing.assert_array_equal(np.asarray(ki), np.asarray(bi))
+        np.testing.assert_array_equal(np.asarray(kd), np.asarray(bd))
+    oi, od = ops.refine_merge(*args)
+    np.testing.assert_array_equal(np.asarray(oi), np.asarray(bi))
+    np.testing.assert_array_equal(np.asarray(od), np.asarray(bd))
 
 
 def test_refine_merge_matches_merge_topk():
@@ -191,3 +241,90 @@ def test_refine_merge_dispatch_cpu_uses_ref():
     want = ref.refine_merge(*args)
     np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(want[0]))
     np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(want[1]))
+
+
+# ---------------------------------------------------------------------------
+# autotune table: dispatch-time tile selection (kernels/autotune.py)
+# ---------------------------------------------------------------------------
+
+def _toy_table(tmp_path, monkeypatch):
+    from repro.kernels import autotune as at
+    entries = []
+    at.record(entries, "gather_score", "cpu", {"B": 8192, "C": 16, "d": 128},
+              tile=256, us=10.0, us_default=20.0)
+    at.record(entries, "gather_score", "cpu", {"B": 64, "C": 16, "d": 128},
+              tile=8, us=1.0, us_default=2.0)
+    path = str(tmp_path / "table.json")
+    at.save(entries, path)
+    # repoint the default table so best_tile() consults the toy entries
+    monkeypatch.setattr(at, "TABLE_FILE", path)
+    at.load_table.cache_clear()
+    return at, path
+
+
+def test_autotune_exact_and_nearest_match(tmp_path, monkeypatch):
+    at, path = _toy_table(tmp_path, monkeypatch)
+    try:
+        assert at.best_tile("gather_score", "cpu",
+                            {"B": 8192, "C": 16, "d": 128},) == 256
+        # nearest batch in log-space: B=100 -> the B=64 entry
+        assert at.best_tile("gather_score", "cpu",
+                            {"B": 100, "C": 16, "d": 128}) == 8
+        # B=4096 -> the B=8192 entry
+        assert at.best_tile("gather_score", "cpu",
+                            {"B": 4096, "C": 16, "d": 128}) == 256
+        # unknown kernel/backend -> default tile
+        assert at.best_tile("refine_merge", "cpu", {"B": 64}) == \
+            at.DEFAULT_TILE["refine_merge"]
+        assert at.best_tile("gather_score", "tpu", {"B": 64}) == \
+            at.DEFAULT_TILE["gather_score"]
+    finally:
+        at.load_table.cache_clear()
+
+
+def test_autotune_record_dedupes_and_save_round_trips(tmp_path, monkeypatch):
+    at, path = _toy_table(tmp_path, monkeypatch)
+    try:
+        entries = list(at.load_table(path))
+        assert len(entries) == 2
+        # same (kernel, backend, shape) replaces, not appends
+        at.record(entries, "gather_score", "cpu",
+                  {"B": 8192, "C": 16, "d": 128},
+                  tile=512, us=9.0, us_default=20.0)
+        assert len(entries) == 2
+        at.save(entries, path)
+        again = at.load_table(path)
+        assert {e["tile"] for e in again
+                if e["shape"]["B"] == 8192} == {512}
+        # sweep-grid sanity: every grid contains the untiled default
+        for grid in at.SWEEP_TILES.values():
+            assert 0 in grid
+    finally:
+        at.load_table.cache_clear()
+
+
+def test_autotune_resolve_override_wins(tmp_path, monkeypatch):
+    at, path = _toy_table(tmp_path, monkeypatch)
+    try:
+        shape = {"B": 8192, "C": 16, "d": 128}
+        assert at.resolve("gather_score", "cpu", shape, 32) == 32
+        assert at.resolve("gather_score", "cpu", shape, 0) == 0
+        assert at.resolve("gather_score", "cpu", shape, None) == 256
+    finally:
+        at.load_table.cache_clear()
+
+
+def test_ops_tile_override_bitwise_neutral():
+    """An explicit tile= through ops dispatch changes nothing but speed."""
+    x, u, cand, D, cnt = _gather_score_case(33, 20, 16, 6, 77)
+    base = ops.gather_score(x, u, cand, D, cnt)
+    for t in (0, 2, 7, 64):
+        np.testing.assert_array_equal(
+            np.asarray(ops.gather_score(x, u, cand, D, cnt, tile=t)),
+            np.asarray(base))
+    args = _refine_merge_case(19, 24, 6, 4, 30, 8)
+    bi, bd = ops.refine_merge(*args)
+    for t in (0, 3, 19):
+        oi, od = ops.refine_merge(*args, tile=t)
+        np.testing.assert_array_equal(np.asarray(oi), np.asarray(bi))
+        np.testing.assert_array_equal(np.asarray(od), np.asarray(bd))

@@ -1,0 +1,47 @@
+"""Feistel epoch shuffle (core/permute.py): bijectivity + determinism."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import permute
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 7, 100, 1000, 4096, 12345])
+def test_epoch_order_is_a_permutation(n):
+    order = permute.epoch_order(jax.random.PRNGKey(0), n)
+    assert order.shape == (n,) and order.dtype == jnp.int32
+    np.testing.assert_array_equal(np.sort(np.asarray(order)), np.arange(n))
+
+
+def test_epoch_order_deterministic_per_key():
+    """Same key -> same order (the host-driven loop and the fused engine.run
+    trace derive the epoch's visit order independently from the same key and
+    must agree for the host==engine parity contract)."""
+    k = jax.random.PRNGKey(42)
+    a = permute.epoch_order(k, 4096)
+    b = jax.jit(permute.epoch_order, static_argnums=1)(k, 4096)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_epoch_order_varies_with_key():
+    n = 4096
+    a = np.asarray(permute.epoch_order(jax.random.PRNGKey(0), n))
+    b = np.asarray(permute.epoch_order(jax.random.PRNGKey(1), n))
+    # different keys decorrelate: few fixed points between the two orders
+    assert np.mean(a == b) < 0.01
+    # and neither is the identity
+    assert np.mean(a == np.arange(n)) < 0.01
+
+
+def test_epoch_order_mixes_batches():
+    """Epoch-shuffle quality: each contiguous batch of the order draws from
+    the whole index range, not a narrow band (what the mini-batch schedule
+    actually needs from the shuffle)."""
+    n, bs = 16384, 1024
+    order = np.asarray(permute.epoch_order(jax.random.PRNGKey(7), n))
+    for s in range(0, n, bs):
+        batch = order[s:s + bs]
+        assert batch.min() < n // 8 and batch.max() >= n - n // 8
+        spread = np.std(batch)
+        assert spread > n / 8  # uniform draw has std ~ n/sqrt(12) ~ 0.29n

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.launch import llm_cost as lc
 from repro.launch import roofline as rl
 
 
@@ -68,22 +69,22 @@ def test_cost_analysis_is_per_partition():
 def test_model_flops_counts():
     from repro.configs import get_config, SHAPES
     cfg = get_config("qwen2-72b")
-    tot, act = rl.param_counts(cfg)
+    tot, act = lc.param_counts(cfg)
     assert tot == act
     assert 70e9 < tot < 76e9  # ~72.7B
     cfg = get_config("llama3-405b")
-    tot, _ = rl.param_counts(cfg)
+    tot, _ = lc.param_counts(cfg)
     assert 400e9 < tot < 412e9
     cfg = get_config("grok-1-314b")
-    tot, act = rl.param_counts(cfg)
+    tot, act = lc.param_counts(cfg)
     assert 300e9 < tot < 330e9
     assert act < 0.4 * tot  # top-2 of 8 experts
     cfg = get_config("mamba2-2.7b")
-    tot, _ = rl.param_counts(cfg)
+    tot, _ = lc.param_counts(cfg)
     assert 2.2e9 < tot < 3.2e9
     # train flops dominate prefill dominate decode
     q = get_config("qwen2-72b")
-    f_train = rl.model_flops(q, SHAPES["train_4k"])
-    f_pre = rl.model_flops(q, SHAPES["prefill_32k"])
-    f_dec = rl.model_flops(q, SHAPES["decode_32k"])
+    f_train = lc.model_flops(q, SHAPES["train_4k"])
+    f_pre = lc.model_flops(q, SHAPES["prefill_32k"])
+    f_dec = lc.model_flops(q, SHAPES["decode_32k"])
     assert f_train > f_pre > f_dec
