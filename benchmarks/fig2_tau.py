@@ -6,8 +6,8 @@ import time
 
 import jax
 
-from repro.core import (brute_force_knn, build_knn_graph, distortion,
-                        gk_means, recall_top1)
+from repro.core import (brute_force_knn, build_knn_graph, gk_means,
+                        recall_top1)
 from repro.data import gmm_blobs
 
 

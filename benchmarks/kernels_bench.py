@@ -71,6 +71,15 @@ def _cases(quick: bool):
                         (X, C)),
     ))
 
+    # IVF coarse probe / engine probe candidates: top-p flash-argmin at the
+    # serving nprobe (completes the registry — every pallas_call is benched)
+    p = 8
+    cases.append(dict(
+        kernel="probe_centroids", shape={"n": n, "k": k, "d": d, "p": p},
+        make=lambda t: (jax.jit(lambda x, c: ops.probe_centroids(x, c, p)[0]),
+                        (X, C)),
+    ))
+
     # engine move-step scoring: gather + ΔI without the (B, C, d) tensor
     Bg, Cg = (8192, 16) if quick else (65536, 50)
     kk = jax.random.fold_in(key, 2)

@@ -6,7 +6,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import (brute_force_knn, closure_kmeans, gk_means, nn_descent,
                         recall_top1)

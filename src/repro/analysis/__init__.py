@@ -1,0 +1,15 @@
+"""Static-analysis pass: AST idiom linter + compiled-trace contract auditor.
+
+Two CI-gated layers (see README "Static analysis"):
+
+  python -m repro.analysis lint    # layer 1: astlint — source idiom rules
+  python -m repro.analysis audit   # layer 2: contracts — compiled-trace
+                                   #   sync/collective/dtype/replication
+
+Both compare against the checked-in ``baseline.json`` with exact-match
+semantics: new violations fail, and so do stale baseline entries, so the
+baseline can only shrink.  Keep jax out of this module's import path —
+``lint`` must stay importable (and fast) without touching the accelerator
+stack, and ``audit`` needs the host-device-count flag set BEFORE jax loads
+(``__main__`` handles that ordering).
+"""

@@ -1,0 +1,34 @@
+"""CLI: ``python -m repro.analysis {lint,audit} [...]``.
+
+``audit`` compiles 4-shard shard_map programs, so the 4-virtual-device CPU
+platform flag must land in ``XLA_FLAGS`` BEFORE anything imports jax —
+which is why this shim, not ``contracts.py``, owns the environment setup
+(and why tests drive ``audit`` through a subprocess, never in-process).
+"""
+import os
+import sys
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    cmd = argv[0] if argv else ""
+    if cmd == "lint":
+        from repro.analysis.astlint import main as lint_main
+        return lint_main(argv[1:])
+    if cmd == "audit":
+        from repro.analysis.contracts import DEVICES
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count={DEVICES}"
+            ).strip()
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
+        from repro.analysis.contracts import main as audit_main
+        return audit_main(argv[1:])
+    print("usage: python -m repro.analysis {lint,audit} [options]",
+          file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,446 @@
+"""Layer 1 — AST idiom linter: host-sync discipline + kernel registry, static.
+
+The runtime layer already *measures* the repo's discipline (``obs.syncs``
+counts host syncs, ``obs_report`` fails on a timed kernel missing from the
+inventory) — but only on the paths a test or bench happens to exercise.
+This linter re-states the same claims as source-level rules that hold for
+EVERY line of the device-resident tree, checked in CI before anything runs:
+
+  ``sync-idiom``      ``.item()`` / ``jax.device_get`` / builtin ``float()``
+                      / ``int()`` / ``np.asarray`` inside a device-resident
+                      module (``core/engine.py``, ``core/graph_build.py``,
+                      ``core/distributed.py``, ``core/permute.py``,
+                      ``index/probe.py``, kernel bodies) — each is a forced
+                      device->host transfer that would break the
+                      one-sync-per-run contract (PR 3/5/6).  Sanctioned
+                      boundary crossings carry ``# lint: boundary(<why>)``
+                      on the offending line.
+  ``permute-in-core`` ``jax.random.permutation`` in core/kernels/index —
+                      it lowers to multiple full sorts; the Feistel PRP in
+                      ``core/permute.py`` is the sanctioned shuffle (PR 7).
+  ``wallclock``       ``time.time`` / ``perf_counter`` outside
+                      ``obs/timing.py`` in core/kernels/index/obs — all
+                      wall-clock flows through ``obs.timing.span`` so the
+                      block-until-ready hygiene lives in one place (PR 6).
+  ``kernel-registry`` every ``pl.pallas_call`` in ``kernels/*.py`` must
+                      have a ``ref.py`` oracle, a ``KERNEL_INVENTORY``
+                      entry whose flop-model arg names match the
+                      ``kernels_bench.py`` shape keys, a bench case, and
+                      autotune coverage: a ``SWEEP_TILES`` grid with >= 1
+                      checked-in table entry, or an explicit
+                      ``# autotune: exempt(<kernel>): <reason>`` comment.
+  ``exempt-missing``  a path on the template exemption list that no longer
+                      exists (the exemption list is itself checked).
+
+The LLM-template subtree (``models/``, ``train/``, the model config files,
+``launch/llm_cost.py``) is reported as ``exempt: template`` rather than
+linted — it is scaffolding from the assignment template, not part of the
+clustering system's device discipline.
+
+Everything is path-configurable through ``LintConfig`` so the fixture tests
+(tests/test_analysis.py) can run the same rules over planted-violation
+trees.  CLI: ``python -m repro.analysis lint [--root DIR]``.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import glob
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# --------------------------------------------------------------------------
+# findings
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str          # config.root-relative, posix separators
+    line: int
+    message: str
+
+    def key(self) -> str:
+        """Baseline key: line-free so unrelated edits don't churn it."""
+        return f"{self.rule}:{self.path}:{self.message}"
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+# --------------------------------------------------------------------------
+# configuration
+# --------------------------------------------------------------------------
+
+# modules whose traces must stay on device: a host-sync idiom here breaks
+# the 1-sync contract silently (the code still *works*, just 10x slower)
+DEVICE_MODULES = (
+    "src/repro/core/engine.py",
+    "src/repro/core/graph_build.py",
+    "src/repro/core/distributed.py",
+    "src/repro/core/permute.py",
+    "src/repro/index/probe.py",
+    "src/repro/kernels/*.py",
+)
+# dispatch-time host config (tile-table lookup), not a kernel body
+DEVICE_EXCLUDE = ("src/repro/kernels/autotune.py",)
+
+PERMUTE_SCOPE = ("src/repro/core/*.py", "src/repro/kernels/*.py",
+                 "src/repro/index/*.py")
+PERMUTE_SANCTIONED = ("src/repro/core/permute.py",)
+
+TIME_SCOPE = ("src/repro/core/*.py", "src/repro/kernels/*.py",
+              "src/repro/index/*.py", "src/repro/obs/*.py")
+TIME_SANCTIONED = ("src/repro/obs/timing.py",)
+
+# LLM-template scaffolding: reported "exempt: template", never linted.
+# Every pattern must still match >= 1 file (exempt-missing fires otherwise).
+TEMPLATE_EXEMPT = (
+    "src/repro/models/*.py",
+    "src/repro/train/*.py",
+    "src/repro/configs/qwen*.py",
+    "src/repro/configs/llama*.py",
+    "src/repro/configs/chatglm*.py",
+    "src/repro/configs/whisper*.py",
+    "src/repro/configs/internvl*.py",
+    "src/repro/configs/mamba*.py",
+    "src/repro/configs/grok*.py",
+    "src/repro/configs/recurrentgemma*.py",
+    "src/repro/launch/llm_cost.py",
+)
+
+BOUNDARY_MARK = "lint: boundary"
+EXEMPT_MARK = "autotune: exempt"
+
+
+@dataclass
+class RegistryConfig:
+    """Paths the kernel-registry rule cross-references (root-relative)."""
+    kernels_glob: str = "src/repro/kernels/*.py"
+    # not kernel bodies: dispatch wrappers, oracles, host config
+    kernels_skip: Tuple[str, ...] = ("__init__.py", "ops.py", "ref.py",
+                                     "autotune.py")
+    ref_file: str = "src/repro/kernels/ref.py"
+    roofline_file: str = "src/repro/launch/roofline.py"
+    bench_file: str = "benchmarks/kernels_bench.py"
+    autotune_file: str = "src/repro/kernels/autotune.py"
+    table_file: str = "src/repro/kernels/autotune_table.json"
+
+
+@dataclass
+class LintConfig:
+    root: str = "."
+    device_modules: Tuple[str, ...] = DEVICE_MODULES
+    device_exclude: Tuple[str, ...] = DEVICE_EXCLUDE
+    permute_scope: Tuple[str, ...] = PERMUTE_SCOPE
+    permute_sanctioned: Tuple[str, ...] = PERMUTE_SANCTIONED
+    time_scope: Tuple[str, ...] = TIME_SCOPE
+    time_sanctioned: Tuple[str, ...] = TIME_SANCTIONED
+    template_exempt: Tuple[str, ...] = TEMPLATE_EXEMPT
+    registry: Optional[RegistryConfig] = field(default_factory=RegistryConfig)
+
+
+def _matches(rel: str, patterns: Sequence[str]) -> bool:
+    return any(fnmatch.fnmatch(rel, p) for p in patterns)
+
+
+def _dotted(node: ast.AST) -> str:
+    """'jax.random.permutation' for nested Attribute/Name chains, else ''."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+# --------------------------------------------------------------------------
+# per-file idiom rules
+# --------------------------------------------------------------------------
+
+_SYNC_CALLS = {"jax.device_get", "device_get", "np.asarray", "numpy.asarray"}
+_TIME_CALLS = {"time.time", "time.perf_counter", "time.monotonic",
+               "perf_counter", "monotonic"}
+
+
+def _line_has(src_lines: List[str], lineno: int, mark: str) -> bool:
+    """Marker on the flagged line, or a comment line directly above it."""
+    if not 0 < lineno <= len(src_lines):
+        return False
+    if mark in src_lines[lineno - 1]:
+        return True
+    prev = src_lines[lineno - 2].strip() if lineno >= 2 else ""
+    return prev.startswith("#") and mark in prev
+
+
+def lint_file(rel: str, source: str, cfg: LintConfig) -> List[Finding]:
+    """Idiom rules (sync-idiom / permute-in-core / wallclock) for one file."""
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("parse-error", rel, e.lineno or 0, str(e.msg))]
+    lines = source.splitlines()
+    device = (_matches(rel, cfg.device_modules)
+              and not _matches(rel, cfg.device_exclude))
+    permute = (_matches(rel, cfg.permute_scope)
+               and not _matches(rel, cfg.permute_sanctioned))
+    wallclock = (_matches(rel, cfg.time_scope)
+                 and not _matches(rel, cfg.time_sanctioned))
+    out: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        name = _dotted(node.func)
+        ln = node.lineno
+        if device and not _line_has(lines, ln, BOUNDARY_MARK):
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item" and not node.args):
+                out.append(Finding("sync-idiom", rel, ln,
+                                   ".item() forces a device->host sync"))
+            elif name in _SYNC_CALLS:
+                out.append(Finding("sync-idiom", rel, ln,
+                                   f"{name}() forces a device->host sync"))
+            elif (isinstance(node.func, ast.Name)
+                  and node.func.id in ("float", "int") and node.args
+                  and not all(isinstance(a, ast.Constant)
+                              for a in node.args)):
+                out.append(Finding(
+                    "sync-idiom", rel, ln,
+                    f"builtin {node.func.id}() on a possibly-traced value "
+                    "forces a device->host sync"))
+        if permute and name.endswith("random.permutation"):
+            out.append(Finding(
+                "permute-in-core", rel, ln,
+                "jax.random.permutation lowers to full sorts; use the "
+                "Feistel PRP in core/permute.py"))
+        if wallclock and name in _TIME_CALLS:
+            out.append(Finding(
+                "wallclock", rel, ln,
+                f"{name}() outside obs/timing.py; use obs.timing.span"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# kernel-registry rule (whole-tree, static cross-reference)
+# --------------------------------------------------------------------------
+
+
+def _top_level_defs(tree: ast.Module) -> List[ast.FunctionDef]:
+    return [n for n in tree.body if isinstance(n, ast.FunctionDef)]
+
+
+def _pallas_kernels(path: str) -> List[Tuple[str, int]]:
+    """(enclosing top-level function name, pallas_call lineno) per call."""
+    with open(path) as f:
+        tree = ast.parse(f.read())
+    out = []
+    for fn in _top_level_defs(tree):
+        for node in ast.walk(fn):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "pallas_call"):
+                out.append((fn.name, node.lineno))
+    return out
+
+
+def _assigned_dict(tree: ast.Module, name: str) -> Optional[ast.Dict]:
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                if (isinstance(t, ast.Name) and t.id == name
+                        and isinstance(node.value, ast.Dict)):
+                    return node.value
+    return None
+
+
+def _inventory_args(roofline_path: str) -> Dict[str, Tuple[str, ...]]:
+    """KERNEL_INVENTORY: kernel -> flop-model lambda arg names (static)."""
+    with open(roofline_path) as f:
+        tree = ast.parse(f.read())
+    inv = _assigned_dict(tree, "KERNEL_INVENTORY")
+    out: Dict[str, Tuple[str, ...]] = {}
+    if inv is None:
+        return out
+    for k, v in zip(inv.keys, inv.values):
+        if not isinstance(k, ast.Constant):
+            continue
+        args: Tuple[str, ...] = ()
+        for node in ast.walk(v):
+            if isinstance(node, ast.Lambda):
+                args = tuple(a.arg for a in node.args.args)
+                break
+        out[k.value] = args
+    return out
+
+
+def _bench_shapes(bench_path: str) -> Dict[str, List[Tuple[str, ...]]]:
+    """kernels_bench cases: kernel -> list of shape-dict key tuples."""
+    with open(bench_path) as f:
+        tree = ast.parse(f.read())
+    out: Dict[str, List[Tuple[str, ...]]] = {}
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        kernel, shape_keys = None, None
+        for kw in node.keywords:
+            if kw.arg == "kernel" and isinstance(kw.value, ast.Constant):
+                kernel = kw.value.value
+            if kw.arg == "shape" and isinstance(kw.value, ast.Dict):
+                shape_keys = tuple(
+                    k.value for k in kw.value.keys
+                    if isinstance(k, ast.Constant))
+        if kernel is not None:
+            out.setdefault(kernel, []).append(shape_keys or ())
+    return out
+
+
+def _sweep_kernels(autotune_path: str) -> List[str]:
+    with open(autotune_path) as f:
+        tree = ast.parse(f.read())
+    d = _assigned_dict(tree, "SWEEP_TILES")
+    if d is None:
+        return []
+    return [k.value for k in d.keys if isinstance(k, ast.Constant)]
+
+
+def _table_kernels(table_path: str) -> List[str]:
+    if not os.path.exists(table_path):
+        return []
+    with open(table_path) as f:
+        doc = json.load(f)
+    return sorted({e["kernel"] for e in doc.get("entries", ())})
+
+
+def lint_registry(cfg: LintConfig) -> List[Finding]:
+    reg = cfg.registry
+    if reg is None:
+        return []
+    root = cfg.root
+    j = lambda p: os.path.join(root, p)
+    ref_defs = {f.name for f in _top_level_defs(
+        ast.parse(open(j(reg.ref_file)).read()))} \
+        if os.path.exists(j(reg.ref_file)) else set()
+    inventory = _inventory_args(j(reg.roofline_file)) \
+        if os.path.exists(j(reg.roofline_file)) else {}
+    bench = _bench_shapes(j(reg.bench_file)) \
+        if os.path.exists(j(reg.bench_file)) else {}
+    sweep = set(_sweep_kernels(j(reg.autotune_file))) \
+        if os.path.exists(j(reg.autotune_file)) else set()
+    tuned = set(_table_kernels(j(reg.table_file)))
+
+    out: List[Finding] = []
+    for path in sorted(glob.glob(j(reg.kernels_glob))):
+        if os.path.basename(path) in reg.kernels_skip:
+            continue
+        rel = os.path.relpath(path, root).replace(os.sep, "/")
+        module_src = open(path).read()
+        for kernel, ln in _pallas_kernels(path):
+            if kernel.startswith("_"):
+                out.append(Finding(
+                    "kernel-registry", rel, ln,
+                    f"pallas_call not inside a public top-level entry point "
+                    f"(enclosing def {kernel!r})"))
+                continue
+            if kernel not in ref_defs:
+                out.append(Finding(
+                    "kernel-registry", rel, ln,
+                    f"kernel {kernel!r} has no {reg.ref_file} oracle"))
+            if kernel not in inventory:
+                out.append(Finding(
+                    "kernel-registry", rel, ln,
+                    f"kernel {kernel!r} has no KERNEL_INVENTORY entry "
+                    f"({reg.roofline_file})"))
+            if kernel not in bench:
+                out.append(Finding(
+                    "kernel-registry", rel, ln,
+                    f"kernel {kernel!r} has no {reg.bench_file} case"))
+            elif kernel in inventory:
+                want = inventory[kernel]
+                for got in bench[kernel]:
+                    if got != want:
+                        out.append(Finding(
+                            "kernel-registry", rel, ln,
+                            f"kernel {kernel!r} bench shape keys {got} != "
+                            f"inventory flop-model args {want}"))
+            if kernel in sweep:
+                if kernel not in tuned:
+                    out.append(Finding(
+                        "kernel-registry", rel, ln,
+                        f"tunable kernel {kernel!r} has no "
+                        f"{reg.table_file} entry (run the autotune sweep)"))
+            elif f"{EXEMPT_MARK}({kernel})" not in module_src:
+                out.append(Finding(
+                    "kernel-registry", rel, ln,
+                    f"kernel {kernel!r} is neither in SWEEP_TILES nor "
+                    f"marked '# {EXEMPT_MARK}({kernel}): <reason>'"))
+    return out
+
+
+# --------------------------------------------------------------------------
+# tree walk + entry point
+# --------------------------------------------------------------------------
+
+
+def _py_files(root: str) -> List[str]:
+    out = []
+    for sub in ("src", "tests", "benchmarks", "examples"):
+        base = os.path.join(root, sub)
+        for path in glob.glob(os.path.join(base, "**", "*.py"),
+                              recursive=True):
+            if "__pycache__" not in path:
+                out.append(os.path.relpath(path, root).replace(os.sep, "/"))
+    return sorted(out)
+
+
+def run_lint(cfg: LintConfig) -> Tuple[List[Finding], List[str]]:
+    """All findings + the template-exempt file list (reported, not linted)."""
+    findings: List[Finding] = []
+    exempt: List[str] = []
+    for pat in cfg.template_exempt:
+        if not glob.glob(os.path.join(cfg.root, pat)):
+            findings.append(Finding(
+                "exempt-missing", pat, 0,
+                "template-exempt pattern matches no files; prune the list"))
+    for rel in _py_files(cfg.root):
+        if _matches(rel, cfg.template_exempt):
+            exempt.append(rel)
+            continue
+        with open(os.path.join(cfg.root, rel)) as f:
+            findings.extend(lint_file(rel, f.read(), cfg))
+    findings.extend(lint_registry(cfg))
+    return findings, exempt
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    from repro.analysis import baseline as bl
+
+    ap = argparse.ArgumentParser(
+        description="AST idiom linter (repro.analysis layer 1)")
+    ap.add_argument("--root", default=".",
+                    help="repo root (holds src/, tests/, benchmarks/)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: the checked-in one)")
+    args = ap.parse_args(argv)
+
+    findings, exempt = run_lint(LintConfig(root=args.root))
+    for f in findings:
+        print(f)
+    print(f"lint: {len(findings)} finding(s), "
+          f"{len(exempt)} file(s) exempt: template")
+    base = bl.load(args.baseline)
+    problems = bl.compare(sorted({f.key() for f in findings}),
+                          base.get("lint", []), section="lint")
+    for p in problems:
+        print(p)
+    if problems:
+        print("lint: FAIL")
+        return 1
+    print("lint: OK")
+    return 0

@@ -1,0 +1,57 @@
+"""Checked-in baseline for the static-analysis pass: exact-match semantics.
+
+The baseline file enumerates every *accepted* pre-existing violation, one
+stable key per entry.  Both directions fail the build:
+
+  * a finding NOT in the baseline  -> new violation, fix it or (rarely)
+    baseline it with a PR-reviewed justification;
+  * a baseline entry with no finding -> stale suppression: the violation
+    was fixed, so the entry must be deleted in the same PR.  The baseline
+    can therefore only shrink silently, never grow.
+
+``lint`` keys are line-free ``rule:path:message`` strings (astlint
+``Finding.key()``); ``replication`` keys are the contract auditor's
+replicated-operand report entries (``contracts.py``).  The shipped
+``baseline.json`` has an empty lint section — the real tree lints clean —
+and exactly the known ROADMAP replication caveats.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional, Sequence
+
+SCHEMA = "repro.analysis.baseline.v1"
+BASELINE_FILE = os.path.join(os.path.dirname(__file__), "baseline.json")
+
+
+def load(path: Optional[str] = None) -> Dict[str, Any]:
+    path = path or BASELINE_FILE
+    if not os.path.exists(path):
+        return {"schema": SCHEMA, "lint": [], "replication": []}
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"{path}: expected schema {SCHEMA!r}, "
+                         f"got {doc.get('schema')!r}")
+    return doc
+
+
+def save(doc: Dict[str, Any], path: Optional[str] = None) -> None:
+    doc = dict(doc, schema=SCHEMA)
+    for k in ("lint", "replication"):
+        doc[k] = sorted(set(doc.get(k, [])))
+    with open(path or BASELINE_FILE, "w") as f:
+        json.dump(doc, f, indent=1)
+        f.write("\n")
+
+
+def compare(found: Sequence[str], accepted: Sequence[str], *,
+            section: str) -> List[str]:
+    """Problem strings for new findings AND stale baseline entries."""
+    found_s, accepted_s = set(found), set(accepted)
+    problems = [f"{section}: NEW (not in baseline): {k}"
+                for k in sorted(found_s - accepted_s)]
+    problems += [f"{section}: STALE baseline entry (no longer found — "
+                 f"delete it): {k}" for k in sorted(accepted_s - found_s)]
+    return problems

@@ -1,0 +1,400 @@
+"""Layer 2 — compiled-trace contract auditor for the device-resident claims.
+
+Each entry point that carries a performance claim (PR 3/5/6) gets a
+*declared contract*: the auditor compiles it at small static shapes on a
+4-virtual-device CPU mesh and inspects the lowered StableHLO and the
+optimized (SPMD per-partition) HLO to assert, statically:
+
+  * **host transfers**: the trace contains NO mid-trace host callbacks /
+    infeed / outfeed — every device->host byte moves at the trace boundary,
+    which is exactly the "1 host sync per engine run / graph build / query
+    batch" contract the runtime ``obs.syncs`` tests measure;
+  * **collectives**: the while-trip-weighted collective counts (parsed with
+    ``launch.roofline.collective_bytes_corrected``) equal the declared
+    budget — e.g. "X all-gathered ONCE per graph build", "one all-gather
+    per query batch";
+  * **dtypes**: no ``f64`` anywhere; ``bf16`` only in the sparse-update
+    wire-payload trace (``payload_bf16``) and never inside a dot — wire
+    compression, not reduced-precision compute;
+  * **telemetry**: the ``(iters, 8)``/``(iters, 4)`` accumulator slots
+    appear in the optimized HLO exactly when telemetry is on (the PR 6
+    zero-HLO-when-off claim);
+  * **replication report**: every operand in the per-partition program
+    whose leading dim is a *global* problem size (n, n_pad, k, k0, q) is a
+    replicated tensor inside the shard_map body — the ROADMAP's
+    "no replicated O(n·d)/O(k·d) state" metric.  Entries are compared
+    EXACTLY against ``baseline.json``: a new replication fails the build,
+    and fixing one forces the baseline to shrink (stale entries fail too).
+
+The audit result is emitted as a ``repro.analysis.v1`` record
+(``ANALYSIS_static.json``) via ``obs.emit`` so the replicated-state
+footprint is tracked like a bench.  CLI: ``python -m repro.analysis audit``
+(the ``__main__`` shim forces a 4-device host platform before jax loads).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+# problem sizes: distinct so a leading dim identifies its role in the
+# replication scan (n_loc = 96 at 4 shards; d+1 = 17 stays un-confusable)
+N, D, K, Q, ITERS, KAPPA, TAU = 384, 16, 40, 28, 3, 8, 2
+DEVICES = 4
+
+_CALLBACK_TOKENS = ("pure_callback", "io_callback", "debug_callback",
+                    "host_callback", "infeed", "outfeed", "SendToHost",
+                    "RecvFromHost")
+
+
+@dataclass
+class AuditResult:
+    name: str
+    problems: List[str] = field(default_factory=list)
+    collectives: Dict[str, int] = field(default_factory=dict)
+    replication: List[str] = field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.problems
+
+
+def _collective_counts(hlo: str) -> Dict[str, int]:
+    """While-trip-weighted collective op counts by kind (nonzero only)."""
+    from repro.launch.roofline import collective_bytes_corrected
+    stats = collective_bytes_corrected(hlo)
+    return {k: int(round(v["count"])) for k, v in stats.items()
+            if isinstance(v, dict) and v["count"]}
+
+
+def _replication_scan(hlo: str, dim_roles: Dict[int, str],
+                      min_minor: int) -> List[str]:
+    """Payload-bearing replicated operands in the per-partition program.
+
+    Flags 2D shape tokens whose LEADING dim is a global problem size (n,
+    n_pad, k, k0, q — sizes that should be sharded, so their full-size
+    appearance in the per-shard program means replication) and whose minor
+    dim is at least the feature dim (``min_minor``) — i.e. (n, d)/(k, d)
+    -class state, not scalar-per-row bookkeeping.  Dims render symbolically
+    (``f32[q,d]``) so baseline entries survive audit-shape changes.
+    """
+    from repro.launch.roofline import _SHAPE_RE
+    names = dict(dim_roles)
+    names.setdefault(D, "d")
+    names.setdefault(D + 1, "d+1")
+    found = set()
+    for dtype, dims in _SHAPE_RE.findall(hlo):
+        parts = [int(x) for x in dims.split(",")] if dims else []
+        if len(parts) != 2 or parts[0] not in dim_roles:
+            continue
+        if parts[1] < min_minor:
+            continue
+        sym = ",".join(names.get(p, str(p)) for p in parts)
+        found.add(f"{dtype}[{sym}]")
+    return sorted(found)
+
+
+def audit_trace(name: str, lowered, *, collectives: Dict[str, int],
+                allow_bf16: bool = False,
+                require: Tuple[str, ...] = (),
+                forbid: Tuple[str, ...] = (),
+                dim_roles: Optional[Dict[int, str]] = None,
+                host_transfer_budget: int = 0) -> AuditResult:
+    """Run every static assertion for one lowered entry point."""
+    res = AuditResult(name)
+    stable = lowered.as_text()
+    mid_trace = [t for t in _CALLBACK_TOKENS if t in stable]
+    if len(mid_trace) > host_transfer_budget:
+        res.problems.append(
+            f"mid-trace host transfer primitives {mid_trace} exceed the "
+            f"declared budget {host_transfer_budget} — breaks the "
+            "one-sync-per-run contract")
+    hlo = lowered.compile().as_text()
+    if "f64[" in hlo:
+        res.problems.append("f64 in optimized HLO (contract: no f64)")
+    has_bf16 = "bf16[" in hlo
+    if has_bf16 and not allow_bf16:
+        res.problems.append("bf16 in optimized HLO outside a declared "
+                            "payload path")
+    if allow_bf16:
+        if not has_bf16:
+            res.problems.append("declared bf16 payload path compiled to "
+                                "no bf16 at all (claim is stale)")
+        dots_bf16 = [ln.strip()[:120] for ln in hlo.splitlines()
+                     if ("dot(" in ln or "dot-" in ln) and "bf16[" in ln]
+        if dots_bf16:
+            res.problems.append(
+                f"bf16 inside dot ops {dots_bf16[:2]} — payload_bf16 is "
+                "wire compression only, compute must stay f32")
+    res.collectives = _collective_counts(hlo)
+    if res.collectives != collectives:
+        res.problems.append(
+            f"collective counts {res.collectives} != declared budget "
+            f"{collectives}")
+    for tok in require:
+        if tok not in hlo:
+            res.problems.append(f"required HLO token missing: {tok!r}")
+    for tok in forbid:
+        if tok in hlo:
+            res.problems.append(f"forbidden HLO token present: {tok!r}")
+    if dim_roles:
+        res.replication = [f"{name}: {e}" for e in
+                           _replication_scan(hlo, dim_roles, min_minor=D)]
+    return res
+
+
+# --------------------------------------------------------------------------
+# the declared contracts
+# --------------------------------------------------------------------------
+
+
+def _data(key, n, d, k):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data import gmm_blobs
+    X = gmm_blobs(key, n, d, 8)
+    G = jax.random.randint(jax.random.fold_in(key, 1), (n, KAPPA), 0, n,
+                           dtype=jnp.int32)
+    assign = jax.random.randint(jax.random.fold_in(key, 2), (n,), 0, k,
+                                dtype=jnp.int32)
+    return X, G, assign
+
+
+def contract_engine_run() -> List[AuditResult]:
+    """engine.run (single device): no collectives, no f64/bf16, telemetry
+    slots in the HLO iff cfg.telemetry — the PR 3/6 single-device claims."""
+    import jax
+
+    from repro.core import engine
+    from repro.obs import telemetry as obs_tel
+    key = jax.random.PRNGKey(0)
+    X, G, assign = _data(key, N, D, K)
+    state = engine.init_state(X, assign, K)
+    src = engine.graph_source(G)
+    slots = (f"s32[{ITERS},{obs_tel.N_I32}]", f"f32[{ITERS},{obs_tel.N_F32}]")
+    out = []
+    for tel in (False, True):
+        cfg = engine.EngineConfig(batch_size=96, iters=ITERS, telemetry=tel)
+        low = engine._run_plain.lower(X, state, src, key, cfg)
+        out.append(audit_trace(
+            f"engine.run[telemetry={'on' if tel else 'off'}]", low,
+            collectives={},
+            require=slots if tel else (),
+            forbid=() if tel else slots))
+    return out
+
+
+def contract_engine_sharded() -> List[AuditResult]:
+    """ShardedEngine.run at 4 shards: the whole epoch loop in ONE trace with
+    the declared collective budget (PR 3), plus the payload_bf16 variant
+    (bf16 on the sparse-update wire only)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.distributed import ShardedEngine
+    from repro.core.engine import EngineConfig
+    key = jax.random.PRNGKey(0)
+    X, G, assign = _data(key, N, D, K)
+    D0 = jnp.zeros((K, D), jnp.float32)
+    cnt = jnp.zeros((K,), jnp.float32)
+    mesh = jax.make_mesh((DEVICES,), ("data",))
+    nb = N // DEVICES // 96          # per-shard batches per epoch
+    roles = {N: "n", K: "k"}
+    out = []
+
+    # dense moves: per epoch ONE s32[n] assignment all-gather (the graph
+    # lookup needs the global assignment) and 4 all-reduces — centroid sums
+    # f32[k,d], two f32[k] count/weight partials, the s32[] moves counter —
+    # plus 2 pre-loop scalar psums (n and ||x||^2 totals).
+    cfg = EngineConfig(batch_size=96, iters=ITERS)
+    se = ShardedEngine(mesh, cfg, kind="graph")
+    low = se.run.lower(X, G, assign, D0, cnt, key)
+    out.append(audit_trace(
+        "sharded_run_body[dense]", low,
+        collectives={"all-gather": ITERS * 1,
+                     "all-reduce": 2 + ITERS * 4},
+        dim_roles=roles))
+
+    # sparse moves + bf16 wire payload: per batch 3 extra index all-gathers
+    # (gx/gu/gv, each s32[n]) plus the gathered X-rows payload as bf16
+    # (u16[n,d] on the wire); the dense stats psums collapse to the single
+    # s32[] moves counter per epoch.
+    cfgs = EngineConfig(batch_size=96, iters=ITERS, sparse_updates=True,
+                        payload_bf16=True)
+    ses = ShardedEngine(mesh, cfgs, kind="graph")
+    lows = ses.run.lower(X, G, assign, D0, cnt, key)
+    out.append(audit_trace(
+        "sharded_run_body[sparse,bf16]", lows,
+        collectives={"all-gather": ITERS * (1 + nb * 3),
+                     "all-reduce": 2 + ITERS * 1},
+        allow_bf16=True,
+        dim_roles=roles))
+    return out
+
+
+def contract_graph_build() -> List[AuditResult]:
+    """GraphBuilder.build at 4 shards: X all-gathered ONCE per build, the
+    tau-round loop in one trace (PR 4) — tree + member table replicated
+    (the ROADMAP caveat the replication report pins)."""
+    import jax
+
+    from repro.core.distributed import sharded_graph_builder
+    from repro.core.graph_build import GraphBuildConfig, _plan
+    key = jax.random.PRNGKey(0)
+    X, _, _ = _data(key, N, D, K)
+    cfg = GraphBuildConfig(kappa=KAPPA, tau=TAU, chunk=96)
+    k0, n_pad = _plan(N, cfg)
+    mesh = jax.make_mesh((DEVICES,), ("data",))
+    gb = sharded_graph_builder(mesh, cfg)
+    low = gb._make_program(N).lower(X, key)
+    roles = {N: "n", K: "k"}
+    if n_pad != N:
+        roles[n_pad] = "n_pad"
+    roles.setdefault(k0, "k0")
+    return [audit_trace(
+        "GraphBuilder.build[partition]", low,
+        collectives=_GRAPH_BUILD_BUDGET,
+        dim_roles=roles)]
+
+
+def contract_ivf_search() -> List[AuditResult]:
+    """ShardedIvf.search at 4 shards: ONE cross-shard merge point per query
+    batch — two all-gather ops (per-shard candidate ids s32[shards, q, topk]
+    and raw distances f32[shards, q, topk]) on that single sync (PR 5);
+    telemetry adds the two scan-counter psums on the same sync (PR 6) —
+    queries + centroids replicated (ROADMAP caveat)."""
+    import jax
+
+    from repro import index as ivf
+    from repro.core.distributed import ShardedIvf
+    from repro.data import gmm_blobs
+    from repro.kernels import ref
+
+    class _Result:
+        def __init__(self, assign, centroids, k):
+            self.assign, self.centroids, self.k = assign, centroids, k
+
+    key = jax.random.PRNGKey(0)
+    X = gmm_blobs(key, N, D, 8)
+    C = gmm_blobs(jax.random.fold_in(key, 1), K, D, 8)
+    a, _ = ref.assign_centroids(X, C)
+    index = ivf.build_ivf(X, _Result(a, C, K), block_rows=16)
+    mesh = jax.make_mesh((DEVICES,), ("data",))
+    sivf = ShardedIvf(mesh, index)
+    Qr = X[:Q]
+    p = sivf.parts
+    roles = {N: "n", K: "k", Q: "q"}
+    out = []
+    for tel, coll in ((False, {"all-gather": 2}),
+                      (True, {"all-gather": 2, "all-reduce": 2})):
+        prog = sivf._prog(10, 4, None, tel)
+        low = prog.lower(Qr, p.vecs, p.ids, p.starts, p.caps, sivf.centroids)
+        out.append(audit_trace(
+            f"ShardedIvf.search[telemetry={'on' if tel else 'off'}]", low,
+            collectives=coll, dim_roles=roles))
+    return out
+
+
+# graph build collective budget (while-trip-weighted, tau = TAU rounds):
+# ONE f32[n_pad, d] X all-gather outside the round loop (the PR 4 claim),
+# four s32[n_pad] index/assignment exchanges per round inside the tau loop,
+# one s32[] convergence psum per round, and the two (chunk, kappa)
+# collective-permute rotations of the candidate ring (f32 distances + s32
+# ids).  A change here means the build's communication pattern changed —
+# re-derive it from the trace decomposition, don't just bump the number.
+_GRAPH_BUILD_BUDGET: Dict[str, int] = {
+    "all-gather": 1 + TAU * 4,
+    "all-reduce": TAU * 1,
+    "collective-permute": 2,
+}
+
+CONTRACTS: Dict[str, Callable[[], List[AuditResult]]] = {
+    "engine_run": contract_engine_run,
+    "engine_sharded": contract_engine_sharded,
+    "graph_build": contract_graph_build,
+    "ivf_search": contract_ivf_search,
+}
+
+
+def run_audit(names: Optional[List[str]] = None) -> List[AuditResult]:
+    results: List[AuditResult] = []
+    for name, fn in CONTRACTS.items():
+        if names and name not in names:
+            continue
+        try:
+            results.extend(fn())
+        except Exception as e:        # a contract that cannot compile fails
+            results.append(AuditResult(
+                name, problems=[f"contract raised: {type(e).__name__}: {e}"]))
+    return results
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    import argparse
+
+    import jax
+
+    from repro.analysis import baseline as bl
+    from repro.obs import emit
+
+    ap = argparse.ArgumentParser(
+        description="compiled-trace contract auditor (repro.analysis "
+                    "layer 2)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline JSON (default: the checked-in one)")
+    ap.add_argument("--out", default="ANALYSIS_static.json",
+                    help="repro.analysis.v1 report path ('' disables)")
+    ap.add_argument("--contract", nargs="*", default=None,
+                    help="subset of contracts to audit")
+    args = ap.parse_args(argv)
+
+    if jax.device_count() < DEVICES:
+        print(f"audit: need {DEVICES} devices, have {jax.device_count()} "
+              "(run via `python -m repro.analysis audit`, which forces a "
+              "4-device host platform)")
+        return 2
+
+    results = run_audit(args.contract)
+    replication = sorted({e for r in results for e in r.replication})
+    failures = 0
+    for r in results:
+        status = "ok" if r.ok else "FAIL"
+        print(f"audit: {r.name}: {status} collectives={r.collectives}")
+        for p in r.problems:
+            print(f"  - {p}")
+        failures += not r.ok
+    print("audit: replication report (per-partition operands with a global "
+          "leading dim):")
+    for e in replication:
+        print(f"  {e}")
+
+    base = bl.load(args.baseline)
+    problems = bl.compare(replication, base.get("replication", []),
+                          section="replication")
+    for p in problems:
+        print(p)
+
+    if args.out:
+        rec = emit.run_record(
+            "analysis_static",
+            schema=emit.ANALYSIS_SCHEMA,
+            shapes={"n": N, "d": D, "k": K, "q": Q, "iters": ITERS,
+                    "kappa": KAPPA, "tau": TAU, "devices": DEVICES},
+            config={"contracts": sorted(CONTRACTS)},
+            metrics={
+                "contracts_audited": len(results),
+                "contracts_failed": failures,
+                "replication_entries": len(replication),
+                "replication_baseline": len(base.get("replication", [])),
+                "collectives": {r.name: r.collectives for r in results},
+                "replication": replication,
+                "problems": [p for r in results for p in r.problems],
+            })
+        emit.write_json(args.out, rec)
+        print(f"audit: wrote {args.out}")
+
+    if failures or problems:
+        print("audit: FAIL")
+        return 1
+    print("audit: OK")
+    return 0

@@ -2,10 +2,13 @@ from repro.configs.base import (ArchConfig, ShapeSpec, SHAPES, get_config,
                                 list_archs, register)
 
 # importing registers every assigned architecture
-from repro.configs import (qwen2_72b, llama3_405b, qwen15_4b, chatglm3_6b,
-                           whisper_base, internvl2_2b, mamba2_27b,
-                           grok1_314b, qwen2_moe_a27b, recurrentgemma_9b,
-                           gkmeans_paper)  # noqa: F401
+import importlib
+
+for _arch in ("qwen2_72b", "llama3_405b", "qwen15_4b", "chatglm3_6b",
+              "whisper_base", "internvl2_2b", "mamba2_27b", "grok1_314b",
+              "qwen2_moe_a27b", "recurrentgemma_9b", "gkmeans_paper"):
+    importlib.import_module(f"repro.configs.{_arch}")
+del _arch, importlib
 
 __all__ = ["ArchConfig", "ShapeSpec", "SHAPES", "get_config", "list_archs",
            "register"]

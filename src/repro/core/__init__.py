@@ -24,8 +24,9 @@ from repro.core.two_means import pad_plan, two_means_tree
 __all__ = [
     "BKMState", "BuildDiagnostics", "CandidateSource", "ClusterStats",
     "EngineConfig", "GKMeansResult", "GraphBuildConfig", "GraphBuilder",
-    "KnnGraph",
-    "brute_force_knn", "build_graph", "build_knn_graph",
+    "KVClusters", "KnnGraph",
+    "brute_force_knn", "build_graph", "build_knn_graph", "build_kv_clusters",
+    "clustered_decode_attention",
     "centroids", "closure_kmeans", "cluster_stats", "cooccurrence_rate",
     "delta_I", "delta_I_brute", "dense_source", "distortion", "gk_means",
     "graph_distances", "graph_search", "graph_source", "init_kmeanspp",

@@ -13,7 +13,6 @@ driver synced per epoch for its O(n·d) distortion recompute).
 """
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -24,6 +23,7 @@ from repro.core import engine
 from repro.core.graph_build import BuildDiagnostics
 from repro.core.knn_graph import KnnGraph, build_knn_graph
 from repro.core.two_means import pad_plan, two_means_tree
+from repro.obs.timing import span
 
 
 @dataclass
@@ -84,35 +84,34 @@ def gk_means(
 
     sec = {}
     gdiag = None
-    t0 = time.perf_counter()
-    if graph is None:
-        graph, gdiag = build_knn_graph(X, kappa, xi=xi, tau=tau, key=kg,
-                                       guided=guided_graph,
-                                       return_diagnostics=True)
-    sec["graph"] = time.perf_counter() - t0
+    with span("graph", out=sec):
+        if graph is None:
+            graph, gdiag = build_knn_graph(X, kappa, xi=xi, tau=tau, key=kg,
+                                           guided=guided_graph,
+                                           return_diagnostics=True)
 
     # init + engine run are dispatched back-to-back with no host sync in
-    # between; "init" therefore measures dispatch only and the sync cost
-    # lands in "iter" (the single block below).
-    t0 = time.perf_counter()
-    assign = _tree_init(X, k2, ki)
-    sec["init"] = time.perf_counter() - t0
+    # between (neither span sets .result, so neither blocks); "init"
+    # therefore measures dispatch only and the sync cost lands in "iter"
+    # (the single device_get below).
+    with span("init", out=sec):
+        assign = _tree_init(X, k2, ki)
 
-    t0 = time.perf_counter()
-    source = engine.graph_source(graph.ids)
-    state = engine.init_state(X, assign, k2)
-    cfg = engine.EngineConfig(batch_size=min(batch_size, n), mode=mode,
-                              iters=iters, min_move_frac=min_move_frac,
-                              telemetry=telemetry)
-    state, hist_d, moves_d, epochs_d, final_d, tel_d = engine.run(
-        X, state, source, kb, cfg)
-    C = state.D / jnp.maximum(state.cnt, 1.0)[:, None]
+    with span("iter", out=sec):
+        source = engine.graph_source(graph.ids)
+        state = engine.init_state(X, assign, k2)
+        cfg = engine.EngineConfig(batch_size=min(batch_size, n), mode=mode,
+                                  iters=iters, min_move_frac=min_move_frac,
+                                  telemetry=telemetry)
+        state, hist_d, moves_d, epochs_d, final_d, tel_d = engine.run(
+            X, state, source, kb, cfg)
+        C = state.D / jnp.maximum(state.cnt, 1.0)[:, None]
 
-    # the run's ONE host sync: everything below is numpy (the telemetry
-    # rides the same sync — it was accumulated inside the run's while_loop)
-    state, hist, moves, epochs, final, C, tel = jax.device_get(
-        (state, hist_d, moves_d, epochs_d, final_d, C, tel_d))
-    sec["iter"] = time.perf_counter() - t0
+        # the run's ONE host sync: everything below is numpy (the telemetry
+        # rides the same sync — it was accumulated inside the run's
+        # while_loop)
+        state, hist, moves, epochs, final, C, tel = jax.device_get(
+            (state, hist_d, moves_d, epochs_d, final_d, C, tel_d))
 
     epochs = int(epochs)
     history = [float(h) for h in hist[:epochs]]

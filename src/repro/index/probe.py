@@ -164,6 +164,7 @@ def scan_fraction(index: IvfIndex, Q: jax.Array, *, nprobe: int = 8,
     nprobe = min(nprobe, index.k)
     cids, _ = kops.probe_centroids(Q, index.centroids, nprobe, force=force)
     scanned = jnp.sum(index.caps[cids], axis=-1)           # (q,)
+    # lint: boundary(host diagnostic, not on the serving path)
     return float(jnp.mean(scanned) / max(index.capacity_rows, 1))
 
 

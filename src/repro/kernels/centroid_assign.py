@@ -9,6 +9,11 @@ Grid: (n / bn, k / bk), centroid axis innermost; the output block depends only
 on the sample tile index, so it acts as the accumulator across centroid tiles
 (standard Pallas revisiting pattern).
 """
+# autotune: exempt(assign_centroids): fixed (bn, bk) streaming grid — the
+#   running-argmin accumulator revisits one output block per sample tile, so
+#   there is no row-tile knob to sweep (bn/bk are VMEM-capacity constants).
+# autotune: exempt(probe_centroids): same streaming grid as assign_centroids
+#   (top-p generalisation); no sweepable row tile.
 from __future__ import annotations
 
 import functools

@@ -163,6 +163,7 @@ _COMP_START = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\(")
 _WHILE_RE = re.compile(
     r"while\(.*?\), condition=(%?[\w\.\-]+), body=(%?[\w\.\-]+)")
 _CONST_RE = re.compile(r"constant\((\d+)\)")
+_CALLS_RE = re.compile(r"calls=(%[\w\.\-]+)")
 
 
 def _computations(hlo_text: str):
@@ -209,9 +210,21 @@ def _multiplicities(hlo_text: str):
         whiles[name] = lst
 
     def trip(cond_name: str) -> int:
-        ints = [int(x) for x in _CONST_RE.findall(
-            "\n".join(comps.get(cond_name, [])))]
-        return max(ints) if ints else 1
+        # The bound is usually a literal in the condition body; post-fusion
+        # HLO (e.g. XLA:CPU's "wide" loop transform) moves the compare into a
+        # called fusion, so if the body has no constant, descend into calls=.
+        text = "\n".join(comps.get(cond_name, []))
+        seen = {cond_name}
+        while True:
+            ints = [int(x) for x in _CONST_RE.findall(text)]
+            if ints:
+                return max(ints)
+            callees = [c for c in _CALLS_RE.findall(text)
+                       if c in comps and c not in seen]
+            if not callees:
+                return 1
+            seen.update(callees)
+            text = "\n".join("\n".join(comps[c]) for c in callees)
 
     mult = {name: 1.0 for name in comps}
     if entry:

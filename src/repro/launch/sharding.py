@@ -14,7 +14,6 @@ from __future__ import annotations
 from typing import Any, Dict, Optional, Sequence, Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any

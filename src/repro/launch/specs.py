@@ -5,7 +5,7 @@ multi-pod dry-run uses to prove the distribution config is coherent.
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

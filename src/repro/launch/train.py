@@ -18,7 +18,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.data import token_batch

@@ -8,7 +8,6 @@ iteration, see EXPERIMENTS.md).
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax

@@ -15,7 +15,6 @@ and returns last-position logits) and `decode_step` (one token).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax

@@ -9,7 +9,6 @@ outputs scatter back weighted by the router probabilities.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Tuple
 
 import jax

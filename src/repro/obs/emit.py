@@ -27,6 +27,11 @@ import subprocess
 from typing import Any, Dict, Iterable, List, Optional
 
 SCHEMA = "repro.bench.v1"
+# static-analysis reports (ANALYSIS_*.json) share the record layout and the
+# validation gate but carry their own schema tag, so bench consumers that
+# key on repro.bench.v1 never see them by accident
+ANALYSIS_SCHEMA = "repro.analysis.v1"
+SCHEMAS = (SCHEMA, ANALYSIS_SCHEMA)
 REQUIRED_KEYS = ("schema", "name", "git_rev", "env", "shapes", "config",
                  "metrics")
 
@@ -59,10 +64,11 @@ def run_record(name: str, *, shapes: Optional[Dict[str, Any]] = None,
                config: Optional[Dict[str, Any]] = None,
                metrics: Optional[Dict[str, Any]] = None,
                telemetry: Optional[Dict[str, Any]] = None,
-               notes: Optional[List[str]] = None) -> Dict[str, Any]:
+               notes: Optional[List[str]] = None,
+               schema: str = SCHEMA) -> Dict[str, Any]:
     """Assemble a schema-conforming run record (values must be JSON-able)."""
     rec: Dict[str, Any] = {
-        "schema": SCHEMA,
+        "schema": schema,
         "name": name,
         "git_rev": git_rev(),
         "env": _env(),
@@ -85,8 +91,8 @@ def validate_record(rec: Dict[str, Any]) -> Dict[str, Any]:
     if missing:
         raise ValueError(f"run record missing keys {missing}: "
                          f"have {sorted(rec)}")
-    if rec["schema"] != SCHEMA:
-        raise ValueError(f"schema {rec['schema']!r} != expected {SCHEMA!r}")
+    if rec["schema"] not in SCHEMAS:
+        raise ValueError(f"schema {rec['schema']!r} not in known {SCHEMAS}")
     for k in ("shapes", "config", "metrics"):
         if not isinstance(rec[k], dict):
             raise ValueError(f"run record [{k!r}] must be a dict")

@@ -1,5 +1,4 @@
 import jax
-import jax.numpy as jnp
 import pytest
 
 # NOTE: no XLA_FLAGS here — tests must see the real (1-)device platform;

@@ -3,7 +3,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import build_knn_graph, graph_search
-from repro.data import gmm_blobs
 
 
 def test_anns_recall_on_gk_graph(blobs):

@@ -1,7 +1,5 @@
 """Baselines the paper compares against: run + sanity quality ordering."""
 import jax
-import jax.numpy as jnp
-import pytest
 
 from repro.core import (closure_kmeans, distortion, lloyd, minibatch_kmeans,
                         nn_descent, recall_top1)

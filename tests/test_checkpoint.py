@@ -1,5 +1,4 @@
 """Checkpointing: atomic roundtrip, crash/restart equivalence, GC, pointers."""
-import json
 import os
 import subprocess
 import sys

@@ -1,7 +1,6 @@
 """Dry-run machinery on a small mesh (the 512-device run is the deliverable;
 this validates the lowering path + roofline extraction in-process)."""
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 from jax.sharding import Mesh

@@ -13,7 +13,7 @@ from repro import index as ivf
 from repro.data import gmm_blobs
 from repro.kernels import centroid_assign as ca
 from repro.kernels import ivf_scan as iv
-from repro.kernels import ops, ref
+from repro.kernels import ref
 
 
 class FakeResult:

@@ -9,9 +9,9 @@ try:
 except ImportError:  # container image has no hypothesis wheel
     from _hyp import given, settings, strategies as st
 
-from repro.core import (build_knn_graph, cooccurrence_rate, gk_means,
-                        merge_topk, nn_descent, random_graph, recall_top1,
-                        recall_at, two_means_tree)
+from repro.core import (build_knn_graph, cooccurrence_rate, merge_topk,
+                        nn_descent, random_graph, recall_top1, recall_at,
+                        two_means_tree)
 from repro.core.knn_graph import members_table
 from repro.data import gmm_blobs
 

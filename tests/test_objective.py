@@ -1,7 +1,6 @@
 """Property tests for the boost-k-means objective (paper Eqn. 2/3)."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 try:
     from hypothesis import given, settings, strategies as st
@@ -9,7 +8,7 @@ except ImportError:  # container image has no hypothesis wheel
     from _hyp import given, settings, strategies as st
 
 from repro.core import (cluster_stats, centroids, delta_I, delta_I_brute,
-                        distortion, objective_I)
+                        distortion)
 
 
 @settings(deadline=None, max_examples=30)

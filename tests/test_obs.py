@@ -7,7 +7,6 @@ The two load-bearing guarantees:
     accumulator buffers.
 """
 import json
-import os
 
 import jax
 import jax.numpy as jnp

@@ -2,7 +2,7 @@
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.launch import sharding as shd

@@ -1,11 +1,10 @@
 """End-to-end behaviour tests for the paper's system (GK-means framework)."""
 import jax
-import numpy as np
 import pytest
 
 from repro.core import (distortion, gk_means, lloyd, recall_top1,
                         brute_force_knn)
-from repro.data import gmm_blobs, sift_like
+from repro.data import sift_like
 
 
 def test_end_to_end_paper_pipeline(blobs):

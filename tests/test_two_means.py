@@ -1,7 +1,6 @@
 """2M-tree invariants: exact equal sizes, valid partition, quality."""
 import jax
 import jax.numpy as jnp
-import pytest
 try:
     from hypothesis import given, settings, strategies as st
 except ImportError:  # container image has no hypothesis wheel
