@@ -153,7 +153,27 @@ def _cases(quick: bool):
         kernel="ivf_scan",
         shape={"q": nq, "rows": T * bl, "d": di, "topk": topk},
         make=lambda t: (jax.jit(lambda *a: ops.ivf_scan(
-            *a, block_rows=bl, topk=topk)[0]), (Q, vecs, pids, tmap)),
+            *a, block_rows=bl, topk=topk, tile=t)[0]), (Q, vecs, pids, tmap)),
+    ))
+
+    # compressed-list ADC scan (pq codec: M=8 code columns, W=256 LUT) at a
+    # deliberately small query batch — the reference's one-hot expansion is
+    # O(chunk * bl * M * W) floats, and the sweep's tile=0 leg runs the whole
+    # batch as one chunk
+    from repro.index import quantize
+    nqa, Ta = 64, 4
+    pq = quantize.train_pq(vecs[:4096], 8, key=jax.random.fold_in(ki, 5),
+                           iters=2)
+    codes, vnorm = quantize.pack_codes(pq, vecs)
+    lut, qconst = quantize.build_lut(pq, Q[:nqa])
+    tmap_a = tmap[:nqa, :Ta]
+    cases.append(dict(
+        kernel="ivf_scan_adc",
+        shape={"q": nqa, "rows": Ta * bl, "m": pq.nsub, "w": 256,
+               "topk": topk},
+        make=lambda t: (jax.jit(lambda *a: ops.ivf_scan_adc(
+            *a, block_rows=bl, topk=topk, tile=t)[0]),
+            (lut, qconst, vnorm, codes, pids, tmap_a)),
     ))
 
     # query-grouped variant: G probe-local queries share each union tile

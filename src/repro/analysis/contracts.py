@@ -262,7 +262,13 @@ def contract_ivf_search() -> List[AuditResult]:
     batch — two all-gather ops (per-shard candidate ids s32[shards, q, topk]
     and raw distances f32[shards, q, topk]) on that single sync (PR 5);
     telemetry adds the two scan-counter psums on the same sync (PR 6) —
-    queries + centroids replicated (ROADMAP caveat)."""
+    queries + centroids replicated (ROADMAP caveat).
+
+    The codec'd search (pq / int8 compressed slabs through `ivf_scan_adc` +
+    per-shard exact rerank) must keep the IDENTICAL collective schedule:
+    the LUT is built replicated from the replicated queries, codes stay
+    sharded, and only the post-rerank (q, topk) locals cross shards — same
+    two all-gathers, no new collectives (PR 9)."""
     import jax
 
     from repro import index as ivf
@@ -287,11 +293,25 @@ def contract_ivf_search() -> List[AuditResult]:
     out = []
     for tel, coll in ((False, {"all-gather": 2}),
                       (True, {"all-gather": 2, "all-reduce": 2})):
-        prog = sivf._prog(10, 4, None, tel)
+        prog = sivf._prog(10, 4, None, tel, "f32", None)
         low = prog.lower(Qr, p.vecs, p.ids, p.starts, p.caps, sivf.centroids)
         out.append(audit_trace(
             f"ShardedIvf.search[telemetry={'on' if tel else 'off'}]", low,
             collectives=coll, dim_roles=roles))
+
+    # codec'd variants: pq nsub=4 (dsub = D/4) and int8, rerank tail on —
+    # the compressed scan + per-shard rerank must not add collectives
+    for kind, kw in (("pq", {"nsub": 4}), ("int8", {})):
+        qix = ivf.quantize_index(index, kind, key=jax.random.fold_in(key, 2),
+                                 **kw)
+        sq = ShardedIvf(mesh, qix)
+        pc = sq.parts
+        prog = sq._prog(10, 4, None, False, kind, None)
+        low = prog.lower(Qr, pc.vecs, pc.ids, pc.starts, pc.caps,
+                         sq.centroids, pc.codes, pc.vnorm, sq.codec)
+        out.append(audit_trace(
+            f"ShardedIvf.search[codec={kind}]", low,
+            collectives={"all-gather": 2}, dim_roles=roles))
     return out
 
 

@@ -196,21 +196,30 @@ class ShardedIvf:
         self.block_rows = index.block_rows
         self.max_list_tiles = index.max_list_tiles
         self.capacity_rows = index.capacity_rows  # scan_frac denominator
+        self.d = index.vecs.shape[1]
         row, rep = (NamedSharding(mesh, P(self.data_axes)),
                     NamedSharding(mesh, P()))
         self.centroids = jax.device_put(index.centroids, rep)
+        # the codec (small pytree of scales / codebooks) is replicated like
+        # the coarse quantizer: every shard builds the same per-query LUT
+        self.codec = (None if index.codec is None
+                      else jax.device_put(index.codec, rep))
         # place the slabs on the mesh NOW: leaving them on the default
         # device would make every search() dispatch re-distribute the whole
         # packed database to satisfy the shard_map in_specs
         p = shard_lists(index, self.shards)
-        self.parts = p._replace(vecs=jax.device_put(p.vecs, row),
-                                ids=jax.device_put(p.ids, row),
-                                starts=jax.device_put(p.starts, row),
-                                caps=jax.device_put(p.caps, row))
+        self.parts = p._replace(
+            vecs=jax.device_put(p.vecs, row),
+            ids=jax.device_put(p.ids, row),
+            starts=jax.device_put(p.starts, row),
+            caps=jax.device_put(p.caps, row),
+            codes=None if p.codes is None else jax.device_put(p.codes, row),
+            vnorm=None if p.vnorm is None else jax.device_put(p.vnorm, row))
         self._progs = {}
 
     def search(self, Q: jax.Array, *, topk: int = 10, nprobe: int = 8,
-               qgroup=None, telemetry: bool = False):
+               qgroup=None, telemetry: bool = False, codec: str = "f32",
+               rerank=None):
         """Top-k over the sharded lists -> (ids (q, topk), d2 (q, topk)).
 
         ``qgroup=G`` runs the query-grouped scan layout per shard (each
@@ -219,8 +228,18 @@ class ShardedIvf:
         output is replicated and matches per-query ids whenever distances
         are distinct).  ``telemetry=True`` appends a 1-row
         ``obs.telemetry.Telemetry`` third output (scanned_rows,
-        scanned_rows_max_shard, scan_frac) accumulated in-trace — it rides
-        the same single host sync as the ids.
+        scanned_rows_max_shard, scan_frac, scanned_bytes) accumulated
+        in-trace — it rides the same single host sync as the ids.
+
+        ``codec="pq"|"int8"`` scans the sharded COMPRESSED slabs through
+        `ivf_scan_adc` (the replicated per-query LUT is built inside the
+        trace; only codes + norms stream from each shard's HBM), then each
+        shard exact-reranks its own top-``rerank`` ADC survivors against its
+        f32 slab before the one all-gather — same single-sync collective
+        schedule as the f32 path, with ``bytes_per_row(codec)`` per scanned
+        row instead of ``4 d``.  ``rerank`` follows
+        ``index.probe.search`` (None -> 4 * topk; 0 disables the tail, and
+        that path is bit-exact with the single-device codec search).
         """
         assert nprobe >= 1, nprobe
         nprobe = min(nprobe, self.k)
@@ -230,14 +249,24 @@ class ShardedIvf:
             out = _no_candidates(Q.shape[0], topk)
             return out + (obs_tel.init(1),) if telemetry else out
         p = self.parts
-        prog = self._prog(topk, nprobe, qgroup, telemetry)
+        if codec != "f32":
+            assert qgroup is None, "codec scan is per-query only (no qgroup)"
+            assert self.codec is not None and self.codec.kind == codec, \
+                (codec, None if self.codec is None else self.codec.kind)
+            prog = self._prog(topk, nprobe, qgroup, telemetry, codec, rerank)
+            return prog(Q, p.vecs, p.ids, p.starts, p.caps, self.centroids,
+                        p.codes, p.vnorm, self.codec)
+        prog = self._prog(topk, nprobe, qgroup, telemetry, "f32", None)
         return prog(Q, p.vecs, p.ids, p.starts, p.caps, self.centroids)
 
-    def _prog(self, topk: int, nprobe: int, qgroup, telemetry: bool):
-        key = (topk, nprobe, qgroup, telemetry)
+    def _prog(self, topk: int, nprobe: int, qgroup, telemetry: bool,
+              codec: str, rerank):
+        key = (topk, nprobe, qgroup, telemetry, codec, rerank)
         if key in self._progs:
             return self._progs[key]
-        from repro.index.probe import (build_group_map, build_tile_map,
+        from repro.index import quantize as _q
+        from repro.index.probe import (_rerank_depth, build_group_map,
+                                       build_tile_map, exact_rerank,
                                        merge_shard_topk)
         from repro.kernels import ops as kops
         from repro.kernels.ref import finalize_d2
@@ -249,6 +278,28 @@ class ShardedIvf:
         R = self.shards
         cap = max(self.capacity_rows, 1)
         grouped = qgroup is not None and qgroup > 1
+        depth = _rerank_depth(topk, rerank) if codec != "f32" else 0
+        bpr = (4 * self.d if codec == "f32"
+               else _q.bytes_per_row(self.codec, self.d))
+
+        def tail(Q, scaps, cids, lid, lod):
+            """All-gather local top-k -> stable merge -> finalize (+tel)."""
+            q = Q.shape[0]
+            agi, agd = jax.lax.all_gather((lid, lod), axes)  # (R, q, t)
+            ids, od = merge_shard_topk(agi.reshape(R, *lid.shape),
+                                       agd.reshape(R, *lod.shape), topk)
+            out = finalize_d2(ids, od, Q)
+            if not telemetry:
+                return out
+            scanned_loc = jnp.sum(scaps[cids], dtype=jnp.int32)
+            total = jax.lax.psum(scanned_loc, axes)
+            worst = jax.lax.pmax(scanned_loc, axes)
+            tel = obs_tel.record(
+                obs_tel.init(1), 0, scanned_rows=total,
+                scanned_rows_max_shard=worst,
+                scan_frac=total.astype(jnp.float32) / (q * cap),
+                scanned_bytes=total.astype(jnp.float32) * bpr)
+            return out + (tel,)
 
         def body(Q, svecs, sids, sstarts, scaps, C):
             q = Q.shape[0]
@@ -273,27 +324,38 @@ class ShardedIvf:
             else:
                 lid, lod = kops.ivf_scan(Q, svecs, sids, tm, block_rows=bl,
                                          topk=topk, raw=True)
-            agi, agd = jax.lax.all_gather((lid, lod), axes)  # (R, q, topk)
-            ids, od = merge_shard_topk(agi.reshape(R, *lid.shape),
-                                       agd.reshape(R, *lod.shape), topk)
-            out = finalize_d2(ids, od, Q)
-            if not telemetry:
-                return out
-            scanned_loc = jnp.sum(scaps[cids], dtype=jnp.int32)
-            total = jax.lax.psum(scanned_loc, axes)
-            worst = jax.lax.pmax(scanned_loc, axes)
-            tel = obs_tel.record(
-                obs_tel.init(1), 0, scanned_rows=total,
-                scanned_rows_max_shard=worst,
-                scan_frac=total.astype(jnp.float32) / (q * cap))
-            return out + (tel,)
+            return tail(Q, scaps, cids, lid, lod)
+
+        def body_codec(Q, svecs, sids, sstarts, scaps, C, scodes, svnorm,
+                       cdc):
+            cids, _ = kops.probe_centroids(Q, C, nprobe)
+            tm = build_tile_map(cids, sstarts, scaps, max_tiles=max_tiles,
+                                block_rows=bl, null_tile=null_loc)
+            # replicated LUT (small: q * M * W f32) — codes stay sharded
+            lut, qc = _q.build_lut(cdc, Q)
+            lid, lpos, lod = kops.ivf_scan_adc(
+                lut, qc, svnorm, scodes, sids, tm, block_rows=bl,
+                topk=(depth or topk))
+            if depth:
+                # each shard reranks its OWN survivors against its f32 slab:
+                # the union of per-shard top-depth contains the global
+                # top-depth, so the merged exact top-k can only improve on
+                # the single-device rerank (equal-or-better recall)
+                lid, lod = exact_rerank(Q, svecs, sids, lpos, topk=topk)
+            return tail(Q, scaps, cids, lid, lod)
 
         row, rep = P(self.data_axes), P()
         out_specs = (rep, rep, rep) if telemetry else (rep, rep)
-        prog = jax.jit(shard_map(
-            body, mesh=self.mesh,
-            in_specs=(rep, row, row, row, row, rep), out_specs=out_specs,
-            check_rep=False))
+        if codec != "f32":
+            prog = jax.jit(shard_map(
+                body_codec, mesh=self.mesh,
+                in_specs=(rep, row, row, row, row, rep, row, row, rep),
+                out_specs=out_specs, check_rep=False))
+        else:
+            prog = jax.jit(shard_map(
+                body, mesh=self.mesh,
+                in_specs=(rep, row, row, row, row, rep), out_specs=out_specs,
+                check_rep=False))
         self._progs[key] = prog
         return prog
 

@@ -6,16 +6,20 @@ inverted lists, `search` probes the top-p cells per query and streams only
 those lists through the fused `ivf_scan` kernel, and `store` persists the
 whole index so serving restarts don't re-cluster.
 """
-from repro.index.ivf import (IvfIndex, ShardedLists, add, build_ivf, remove,
-                             repack, shard_lists)
+from repro.index.ivf import (IvfIndex, ShardedLists, add, attach_codec,
+                             build_ivf, quantize_index, remove, repack,
+                             shard_lists)
 from repro.index.probe import (build_group_map, build_tile_map,
                                exhaustive_search, merge_shard_topk,
                                scan_fraction, search)
+from repro.index.quantize import (Int8Codec, PqCodec, bytes_per_row,
+                                  train_int8, train_pq)
 from repro.index.store import load_index, save_index
 
 __all__ = [
-    "IvfIndex", "ShardedLists", "add", "build_group_map", "build_ivf",
-    "build_tile_map", "exhaustive_search", "load_index", "merge_shard_topk",
-    "remove", "repack", "save_index", "scan_fraction", "search",
-    "shard_lists",
+    "Int8Codec", "IvfIndex", "PqCodec", "ShardedLists", "add",
+    "attach_codec", "build_group_map", "build_ivf", "build_tile_map",
+    "bytes_per_row", "exhaustive_search", "load_index", "merge_shard_topk",
+    "quantize_index", "remove", "repack", "save_index", "scan_fraction",
+    "search", "shard_lists", "train_int8", "train_pq",
 ]

@@ -36,6 +36,12 @@ class IvfIndex:
     caps: jax.Array           # (k,) int32 row capacity per list (tile-aligned)
     block_rows: int           # rows per scan tile
     repack_threshold: float = 0.5   # repack when live/capacity falls below
+    # optional compressed payload (see index/quantize.py): codes/vnorm mirror
+    # `vecs` row-for-row (codes == encode(vecs), the lockstep invariant) so
+    # every mutation path that rewrites vecs re-encodes the same rows
+    codec: Optional[object] = None  # quantize.Int8Codec | quantize.PqCodec
+    codes: Optional[jax.Array] = None   # (n_rows, code_width) uint8
+    vnorm: Optional[jax.Array] = None   # (n_rows,) f32 ||decode(codes)||^2
 
     @property
     def k(self) -> int:
@@ -68,6 +74,11 @@ class IvfIndex:
     def size(self) -> int:
         """Number of live vectors."""
         return int(np.sum(np.asarray(self.ids) >= 0))
+
+    @property
+    def codec_kind(self) -> str:
+        """Codec of the packed payload: 'f32' when uncompressed."""
+        return "f32" if self.codec is None else self.codec.kind
 
     def list_sizes(self) -> np.ndarray:
         """(k,) live entries per list."""
@@ -134,11 +145,46 @@ def _gather_live(index: IvfIndex):
     return vecs[live], ids[live], assign[live]
 
 
+def attach_codec(index: IvfIndex, codec) -> IvfIndex:
+    """Pack compressed codes for the whole slab (see index/quantize.py).
+
+    Re-attaching after layout changes keeps the lockstep invariant
+    ``codes == encode(vecs)``; the coarse quantizer and f32 originals stay —
+    they back the probe path and the exact-rerank tail.
+    """
+    from repro.index import quantize as _q
+
+    codes, vnorm = _q.pack_codes(codec, index.vecs)
+    return replace(index, codec=codec, codes=codes, vnorm=vnorm)
+
+
+def quantize_index(index: IvfIndex, kind: str, *, nsub: int = 8,
+                   key=None, iters: int = 8) -> IvfIndex:
+    """Train a codec on the index's live rows and attach it.
+
+    kind='int8' fits the per-dimension affine; kind='pq' trains `nsub`
+    sub-codebooks with the engine's own k-means (`quantize.train_pq`).
+    """
+    from repro.index import quantize as _q
+
+    X_live, _, _ = _gather_live(index)
+    if kind == "int8":
+        codec = _q.train_int8(jnp.asarray(X_live))
+    elif kind == "pq":
+        codec = _q.train_pq(jnp.asarray(X_live), nsub, key=key, iters=iters)
+    else:
+        raise ValueError(f"unknown codec kind: {kind!r}")
+    return attach_codec(index, codec)
+
+
 def repack(index: IvfIndex) -> IvfIndex:
     """Rebuild the packed layout with all holes squeezed out."""
     X, ids, assign = _gather_live(index)
-    return _pack(X, ids, assign, np.asarray(index.centroids), index.k,
-                 index.block_rows, index.repack_threshold)
+    out = _pack(X, ids, assign, np.asarray(index.centroids), index.k,
+                index.block_rows, index.repack_threshold)
+    if index.codec is not None:
+        out = attach_codec(out, index.codec)
+    return out
 
 
 def _maybe_repack(index: IvfIndex) -> IvfIndex:
@@ -165,15 +211,29 @@ def add(index: IvfIndex, X_new: jax.Array,
     starts = np.asarray(index.starts)
     caps = np.asarray(index.caps)
     overflow = []
+    written = []                       # (row, i) pairs filled in place
     for i, c in enumerate(assign):
         s, cap = starts[c], caps[c]
         holes = np.nonzero(ids[s:s + cap] < 0)[0]
         if len(holes):
             ids[s + holes[0]] = new_ids[i]
             vecs[s + holes[0]] = X_new[i]
+            written.append((int(s + holes[0]), i))
         else:
             overflow.append(i)
     out = replace(index, ids=jnp.asarray(ids), vecs=jnp.asarray(vecs))
+    if index.codec is not None and written and not overflow:
+        # keep code slabs in lockstep: re-encode exactly the rows written
+        from repro.index import quantize as _q
+
+        rows = np.array([r for r, _ in written])
+        srcs = np.array([i for _, i in written])
+        c_new, v_new = _q.pack_codes(index.codec, jnp.asarray(X_new[srcs]))
+        codes = np.asarray(index.codes).copy()
+        vnorm = np.asarray(index.vnorm).copy()
+        codes[rows] = np.asarray(c_new)
+        vnorm[rows] = np.asarray(v_new)
+        out = replace(out, codes=jnp.asarray(codes), vnorm=jnp.asarray(vnorm))
     if overflow:
         # some list is full: fold the stragglers in via a full repack
         X_all, id_all, a_all = _gather_live(out)
@@ -182,6 +242,8 @@ def add(index: IvfIndex, X_new: jax.Array,
         a_all = np.concatenate([a_all, assign[overflow]])
         out = _pack(X_all, id_all, a_all, np.asarray(index.centroids),
                     index.k, index.block_rows, index.repack_threshold)
+        if index.codec is not None:
+            out = attach_codec(out, index.codec)
     return out
 
 
@@ -202,6 +264,9 @@ class ShardedLists(NamedTuple):
     owner: np.ndarray     # (k,) shard owning each cell
     rows_loc: int         # packed rows per shard incl. the local null tile
     shards: int
+    # code slabs shard exactly like the f32 slabs (None when no codec)
+    codes: Optional[jax.Array] = None   # (R * rows_loc, code_width) uint8
+    vnorm: Optional[jax.Array] = None   # (R * rows_loc,) f32
 
 
 def shard_lists(index: IvfIndex, shards: int) -> ShardedLists:
@@ -229,10 +294,17 @@ def shard_lists(index: IvfIndex, shards: int) -> ShardedLists:
         load[r] += int(caps[c])
     rows_loc = int(load.max()) + bl                   # + local null tile
 
+    codes = None if index.codes is None else np.asarray(index.codes)
+    vnorm = None if index.vnorm is None else np.asarray(index.vnorm)
+
     svecs = np.zeros((shards * rows_loc, d), dtype=np.float32)
     sids = np.full((shards * rows_loc,), -1, dtype=np.int32)
     sstarts = np.zeros((shards * k,), dtype=np.int32)
     scaps = np.zeros((shards * k,), dtype=np.int32)
+    scodes = None if codes is None else np.zeros(
+        (shards * rows_loc, codes.shape[1]), dtype=np.uint8)
+    svnorm = None if vnorm is None else np.zeros(
+        (shards * rows_loc,), dtype=np.float32)
     fill = np.zeros((shards,), dtype=np.int64)
     for c in range(k):
         r = int(owner[c])
@@ -240,13 +312,18 @@ def shard_lists(index: IvfIndex, shards: int) -> ShardedLists:
         dst = r * rows_loc + int(fill[r])
         svecs[dst:dst + cap] = vecs[s:s + cap]
         sids[dst:dst + cap] = ids[s:s + cap]
+        if codes is not None:
+            scodes[dst:dst + cap] = codes[s:s + cap]
+            svnorm[dst:dst + cap] = vnorm[s:s + cap]
         sstarts[r * k + c] = int(fill[r])
         scaps[r * k + c] = cap
         fill[r] += cap
     return ShardedLists(vecs=jnp.asarray(svecs), ids=jnp.asarray(sids),
                         starts=jnp.asarray(sstarts),
                         caps=jnp.asarray(scaps), owner=owner,
-                        rows_loc=rows_loc, shards=shards)
+                        rows_loc=rows_loc, shards=shards,
+                        codes=None if scodes is None else jnp.asarray(scodes),
+                        vnorm=None if svnorm is None else jnp.asarray(svnorm))
 
 
 def remove(index: IvfIndex, rm_ids) -> IvfIndex:

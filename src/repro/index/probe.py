@@ -87,9 +87,19 @@ def build_group_map(tile_map: jax.Array, *, group: int, null_tile: int):
     s = jnp.sort(jnp.where(dup, big, s), axis=-1)
     union = jnp.where(s == big, null_tile, s).astype(jnp.int32)
 
-    hit = (tqg[:, :, None, :] == union[:, None, :, None]).any(-1)
-    hit &= (union != null_tile)[:, None, :]                # (ngroups, G, U)
-    return order, union, hit.reshape(ngroups * G, U).astype(jnp.int32)
+    # membership by searchsorted into the sorted union (O(U log U) per group,
+    # replacing the old O(G * U * T) pairwise compare): every REAL tile of
+    # the group appears in its own union by construction, so the left-insert
+    # slot IS its (unique, deduped) union position — scatter a 1 there.
+    # Null-tile entries never join the mask, exactly as before.
+    tq_flat = tqg.reshape(ngroups, U)
+    slot = jax.vmap(jnp.searchsorted)(union, tq_flat)      # (ngroups, U)
+    real = (tq_flat != null_tile).astype(jnp.int32)
+    g_ix = jnp.arange(ngroups, dtype=jnp.int32)[:, None]
+    m_ix = (jnp.arange(U, dtype=jnp.int32) // T)[None, :]  # member per slot
+    memb = jnp.zeros((ngroups, G, U), jnp.int32)
+    memb = memb.at[g_ix, m_ix, jnp.clip(slot, 0, U - 1)].max(real)
+    return order, union, memb.reshape(ngroups * G, U)
 
 
 def _no_candidates(q: int, topk: int):
@@ -97,6 +107,51 @@ def _no_candidates(q: int, topk: int):
     would return unwritten kernel buffers), so short-circuit to -1/+inf."""
     return (jnp.full((q, topk), -1, jnp.int32),
             jnp.full((q, topk), jnp.inf, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("topk",))
+def exact_rerank(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
+                 pos: jax.Array, *, topk: int):
+    """Decode-free exact re-score of ADC survivors (the rerank tail).
+
+    Q: (q, d); vecs: (n_pad, d) the residual-kept f32 originals; pids:
+    (n_pad,) int32; pos: (q, R) packed-row positions from `ivf_scan_adc`
+    (-1 = empty).  Gathers the ORIGINAL rows by position — no decode — and
+    re-scores them with the f32 scan's exact arithmetic, selecting topk with
+    the same stable tie-break.  Returns (ids (q, topk), raw partials
+    (``||v||² - 2 q.v``, +inf at empty)) for `finalize_d2` — so reranked
+    distances are exact, and recall is honest against brute force.
+
+    Jitted standalone for the same cross-topology fusion-rounding reason as
+    `probe_centroids`: the sharded path runs this per shard inside its one
+    trace, and the merged partials must round identically here.
+    """
+    qf = Q.astype(jnp.float32)
+    safe = jnp.clip(pos, 0)
+    cv = vecs[safe].astype(jnp.float32)                    # (q, R, d)
+    vsq = jnp.sum(cv * cv, axis=-1)                        # (q, R)
+    dots = jnp.einsum("qd,qrd->qr", qf, cv)
+    cids = jnp.where(pos < 0, -1, pids.astype(jnp.int32)[safe])
+    part = jnp.where(cids < 0, jnp.inf, vsq - 2.0 * dots)
+    d, ids = kref.stable_topk(part, cids, topk)
+    return ids, jnp.where(ids < 0, jnp.inf, d)
+
+
+@jax.jit
+def _finalize(ids: jax.Array, part: jax.Array, Q: jax.Array):
+    """`finalize_d2` under jit — the codec exit paths apply the final
+    monotone transform inside a trace like every other scan exit (see
+    `probe_centroids` on why eager op-by-op rounds differently)."""
+    return kref.finalize_d2(ids, part, Q)
+
+
+def _rerank_depth(topk: int, rerank: Optional[int]) -> int:
+    """Candidate depth of the ADC pass: 0 disables the rerank tail."""
+    if rerank is None:
+        return 4 * topk
+    if rerank == 0:
+        return 0
+    return max(rerank, topk)
 
 
 def _search_grouped(index: IvfIndex, Q: jax.Array, tm: jax.Array, *,
@@ -116,7 +171,8 @@ def _search_grouped(index: IvfIndex, Q: jax.Array, tm: jax.Array, *,
 
 def search(index: IvfIndex, Q: jax.Array, *, topk: int = 10,
            nprobe: int = 8, force: Optional[str] = None,
-           qgroup: Optional[int] = None):
+           qgroup: Optional[int] = None, codec: str = "f32",
+           rerank: Optional[int] = None):
     """Top-k search. Q: (q, d) -> (ids (q, topk) int32, d2 (q, topk) f32).
 
     ids are the original vector ids (-1 past the candidate count); d2 is
@@ -124,6 +180,13 @@ def search(index: IvfIndex, Q: jax.Array, *, topk: int = 10,
     dispatch convention (None | 'pallas' | 'ref' | 'interpret').  `nprobe`
     clamps to the cell count (probing more cells than exist is exhaustive).
     `qgroup=G` runs the query-grouped scan layout (see module docstring).
+
+    `codec="pq"|"int8"` scans the attached compressed payload through
+    `ivf_scan_adc` instead of the f32 slab, then exact-reranks the top
+    `rerank` ADC candidates against the f32 originals (default 4 * topk;
+    `rerank=0` disables the tail and returns distances to the codec
+    reconstructions).  With rerank on, returned d2 is exact squared L2
+    again — the codec only decides WHICH candidates survive to the tail.
     """
     assert nprobe >= 1, nprobe
     nprobe = min(nprobe, index.k)
@@ -134,6 +197,21 @@ def search(index: IvfIndex, Q: jax.Array, *, topk: int = 10,
                         max_tiles=index.max_list_tiles,
                         block_rows=index.block_rows,
                         null_tile=index.null_tile)
+    if codec != "f32":
+        assert qgroup is None, "codec scan is per-query only (no qgroup)"
+        assert index.codec is not None and index.codec.kind == codec, \
+            (codec, index.codec_kind)
+        from repro.index import quantize as _q
+
+        depth = _rerank_depth(topk, rerank)
+        lut, qc = _q.build_lut(index.codec, Q)
+        ids, pos, part = kops.ivf_scan_adc(
+            lut, qc, index.vnorm, index.codes, index.ids, tm,
+            block_rows=index.block_rows, topk=(depth or topk), force=force)
+        if not depth:
+            return _finalize(ids, part, Q)
+        rid, rpart = exact_rerank(Q, index.vecs, index.ids, pos, topk=topk)
+        return _finalize(rid, rpart, Q)
     if qgroup is not None and qgroup > 1:
         return _search_grouped(index, Q, tm, topk=topk, qgroup=qgroup,
                                force=force)

@@ -22,6 +22,9 @@ from repro.index.ivf import IvfIndex
 _ALIGN = 64
 _MAGIC = "repro-ivf-v1"
 _ARRAYS = ("centroids", "vecs", "ids", "starts", "caps")
+# extra sections when a codec is attached, keyed by codec kind; files written
+# before codecs existed simply lack meta["codec"] and load uncompressed
+_CODEC_ARRAYS = {"int8": ("int8_scale", "int8_zero"), "pq": ("pq_codebook",)}
 
 
 def _pad(n: int) -> int:
@@ -33,6 +36,16 @@ def save_index(index: IvfIndex, path: str) -> None:
     arrays = {name: np.asarray(getattr(index, name)) for name in _ARRAYS}
     meta = {"magic": _MAGIC, "block_rows": index.block_rows,
             "repack_threshold": index.repack_threshold}
+    if index.codec is not None:
+        kind = index.codec.kind
+        meta["codec"] = kind
+        arrays["codes"] = np.asarray(index.codes)
+        arrays["vnorm"] = np.asarray(index.vnorm)
+        if kind == "int8":
+            arrays["int8_scale"] = np.asarray(index.codec.scale)
+            arrays["int8_zero"] = np.asarray(index.codec.zero)
+        else:
+            arrays["pq_codebook"] = np.asarray(index.codec.codebook)
     if path.endswith(".npz"):
         np.savez_compressed(path, meta=json.dumps(meta), **arrays)
         return
@@ -74,7 +87,9 @@ def load_index(path: str, *, mmap: bool = False) -> IvfIndex:
                 raise ValueError(f"not a repro IVF index: {path}") from e
             if meta.get("magic") != _MAGIC:
                 raise ValueError(f"not a repro IVF index: {path}")
-            arrays = {name: z[name] for name in _ARRAYS}
+            names = _ARRAYS if "codec" not in meta else _ARRAYS + (
+                "codes", "vnorm") + _CODEC_ARRAYS[meta["codec"]]
+            arrays = {name: z[name] for name in names}
     else:
         with open(path, "rb") as f:
             hlen = int.from_bytes(f.read(8), "little")
@@ -95,9 +110,21 @@ def load_index(path: str, *, mmap: bool = False) -> IvfIndex:
                                      shape=shape)
     if not mmap:
         arrays = {k: jnp.asarray(v) for k, v in arrays.items()}
+    codec_kw = {}
+    kind = meta.get("codec")
+    if kind is not None:
+        from repro.index.quantize import Int8Codec, PqCodec
+
+        if kind == "int8":
+            codec = Int8Codec(scale=arrays.pop("int8_scale"),
+                              zero=arrays.pop("int8_zero"))
+        else:
+            codec = PqCodec(codebook=arrays.pop("pq_codebook"))
+        codec_kw = {"codec": codec, "codes": arrays.pop("codes"),
+                    "vnorm": arrays.pop("vnorm")}
     return IvfIndex(block_rows=int(meta["block_rows"]),
                     repack_threshold=float(meta["repack_threshold"]),
-                    **arrays)
+                    **arrays, **codec_kw)
 
 
 def index_nbytes(path: str) -> int:

@@ -38,13 +38,18 @@ SCHEMA = "repro.autotune.v1"
 TABLE_FILE = os.path.join(os.path.dirname(__file__), "autotune_table.json")
 
 # tile used when the table has no entry for (kernel, backend); 0 = untiled
-DEFAULT_TILE = {"gather_score": 0, "refine_merge": 0, "pairwise_sq": 0}
+# (ivf_scan_adc defaults tiled: its ref one-hot-expands pq codes, so the
+# chunk bounds the expanded working set even before any table exists)
+DEFAULT_TILE = {"gather_score": 0, "refine_merge": 0, "pairwise_sq": 0,
+                "ivf_scan": 0, "ivf_scan_adc": 64}
 
 # sweep grids per kernel (candidate tiles; 0 = whole batch, the default)
 SWEEP_TILES = {
     "gather_score": (0, 16, 32, 64, 128, 256, 512, 1024, 2048, 4096),
     "refine_merge": (0, 128, 256, 512, 1024, 2048),
     "pairwise_sq": (0, 8, 32, 128),
+    "ivf_scan": (0, 16, 64, 256),
+    "ivf_scan_adc": (0, 8, 32, 128),
 }
 
 # the batch-like dim used for nearest-shape matching, per kernel

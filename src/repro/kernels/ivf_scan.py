@@ -12,11 +12,11 @@ carrying a running per-query top-k instead of a single argmin.
 HBM traffic per query is O(scanned_rows * d) — the point of IVF: only the
 probed fraction of the database is ever touched.
 """
-# autotune: exempt(ivf_scan): the tile shape IS the packed layout's
-#   block_rows — an index-format constant chosen at pack time, not a
-#   dispatch-time performance knob.
-# autotune: exempt(ivf_scan_grouped): same block_rows-bound layout; the
-#   group size G is a recall/locality knob owned by the caller, not a tile.
+# autotune: exempt(ivf_scan_grouped): the block_rows tile shape is an
+#   index-format constant chosen at pack time, and the group size G is a
+#   recall/locality knob owned by the caller, not a dispatch-time tile.
+#   (ivf_scan itself IS swept: its `tile` chunks the reference's query axis
+#   — cache blocking, bitwise-neutral — resolved from autotune_table.json.)
 from __future__ import annotations
 
 import functools

@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: fused asymmetric-distance scan over compressed lists.
+
+Same scalar-prefetch tile streaming and running top-k as `ivf_scan`, but the
+candidate payload is u8 codes (`index/quantize.py`) instead of f32 rows: the
+per-query distance LUT (q, M, W) is computed ONCE per batch on the host side
+of the trace, its (1, M, W) block stays resident in VMEM for the whole query
+(the index map ignores the tile step), and only codes + reconstruction norms
+stream from HBM — (M + 4) bytes per candidate row instead of 4·d, the whole
+point of the codec.
+
+One kernel serves both codecs through the LUT width W (see `ref.adc_expand`):
+W=256 (pq) one-hot-expands each code so the table lookup becomes a single
+MXU ``dot_general`` against the flattened LUT; W=1 (int8) skips the one-hot
+and contracts the cast codes directly.  The query-side affine constant is
+rank-invariant, so it rides outside the kernel (``qconst``) and is added to
+the selected partials after the top-k — keeping the contraction length
+exactly M on both codecs.
+
+The top-k payload is the PACKED ROW POSITION (-1 at invalid slots), not the
+id: the exact-rerank tail gathers the original f32 rows by position — no
+decode — and re-scores only the survivors.  Ids are recovered by one (q, k)
+gather outside the grid.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref as _ref
+from repro.kernels.centroid_assign import _select_topk
+
+
+def _kernel(tile_map_ref, lut_ref, vn_ref, code_ref, id_ref, opos_ref,
+            od_ref, *, block_rows: int, topk: int, width: int):
+    i = pl.program_id(0)
+    t = pl.program_id(1)
+    lut = lut_ref[...].astype(jnp.float32)      # (1, M, W), VMEM-resident
+    vn = vn_ref[...]                            # (bl,) f32
+    ids = id_ref[...]                           # (bl,) int32, -1 = padding
+
+    m = lut.shape[1]
+    lf = lut.reshape(1, m * width)
+    ex = _ref.adc_expand(code_ref[...], width)  # (bl, M*W)
+    cross = jax.lax.dot_general(
+        lf, ex, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)     # (1, bl)
+    part = vn[None, :] + cross                  # ||v̂||² - 2 q.v̂
+    part = jnp.where(ids[None, :] < 0, jnp.inf, part)
+
+    tile = tile_map_ref[i, t]                   # scalar prefetch: SMEM read
+    pos = (tile * block_rows
+           + jax.lax.broadcasted_iota(jnp.int32, (1, block_rows), 1))
+    pos = jnp.where(ids[None, :] < 0, -1, pos)  # (1, bl) packed positions
+
+    @pl.when(t == 0)
+    def _init():
+        d0, p0 = _select_topk(part, pos, topk)
+        od_ref[...] = d0
+        opos_ref[...] = p0
+
+    @pl.when(t > 0)
+    def _update():
+        d = jnp.concatenate([od_ref[...], part], axis=-1)
+        p = jnp.concatenate([opos_ref[...], pos], axis=-1)
+        d1, p1 = _select_topk(d, p, topk)
+        od_ref[...] = d1
+        opos_ref[...] = p1
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "topk", "interpret"))
+def ivf_scan_adc(lut: jax.Array, qconst: jax.Array, vnorm: jax.Array,
+                 codes: jax.Array, pids: jax.Array, tile_map: jax.Array, *,
+                 block_rows: int, topk: int = 10, interpret: bool = False):
+    """Scan each query's probed tiles of the CODE slab via its VMEM LUT.
+
+    lut: (q, M, W) f32 per-query table and qconst: (q,) per-query constant
+    (`index.quantize.build_lut`); vnorm: (n_pad,) f32 reconstruction norms;
+    codes: (n_pad, M) u8 packed codes; pids: (n_pad,) int32 ids (-1 =
+    padding); tile_map: (q, T) int32.  ``qconst`` is identical for every
+    candidate of a query, hence rank-invariant: the kernel selects on the
+    LUT partials alone and the constant is added to the selected values
+    outside the grid (same op order as the ref oracle).
+
+    Returns (ids (q, topk) int32, pos (q, topk) int32 packed-row positions,
+    part (q, topk) f32 RAW partials ascending, +inf at empty slots) — the
+    caller applies `finalize_d2` or the exact-rerank tail; shards merge on
+    the raw partials exactly as with `ivf_scan(raw=True)`.
+    """
+    nq, m, w = lut.shape
+    n_pad = codes.shape[0]
+    assert n_pad % block_rows == 0, (n_pad, block_rows)
+    assert codes.shape[1] == m and vnorm.shape[0] == n_pad
+    assert tile_map.shape[0] == nq
+    T = tile_map.shape[1]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(nq, T),
+        in_specs=[
+            pl.BlockSpec((1, m, w), lambda i, t, tm: (i, 0, 0)),
+            pl.BlockSpec((block_rows,), lambda i, t, tm: (tm[i, t],)),
+            pl.BlockSpec((block_rows, m), lambda i, t, tm: (tm[i, t], 0)),
+            pl.BlockSpec((block_rows,), lambda i, t, tm: (tm[i, t],)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, topk), lambda i, t, tm: (i, 0)),
+            pl.BlockSpec((1, topk), lambda i, t, tm: (i, 0)),
+        ],
+    )
+    opos, od = pl.pallas_call(
+        functools.partial(_kernel, block_rows=block_rows, topk=topk,
+                          width=w),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((nq, topk), jnp.int32),
+            jax.ShapeDtypeStruct((nq, topk), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tile_map.astype(jnp.int32), lut.astype(jnp.float32), vnorm, codes,
+      pids.astype(jnp.int32))
+    ids = jnp.where(opos < 0, -1, pids.astype(jnp.int32)[jnp.clip(opos, 0)])
+    return ids, opos, jnp.where(opos < 0, jnp.inf, od + qconst[:, None])

@@ -17,6 +17,7 @@ from repro.kernels import autotune as _at
 from repro.kernels import centroid_assign as _ca
 from repro.kernels import gather_score as _gs
 from repro.kernels import ivf_scan as _ivf
+from repro.kernels import ivf_scan_adc as _adc
 from repro.kernels import pairwise_topk as _pt
 from repro.kernels import ref as _ref
 from repro.kernels import refine_merge as _rm
@@ -107,15 +108,53 @@ def refine_merge(x: jax.Array, rows: jax.Array, cand_ids: jax.Array,
 
 def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
              tile_map: jax.Array, *, block_rows: int, topk: int = 10,
-             force: str | None = None, raw: bool = False):
-    """Per-query scan of probed packed-list tiles -> (ids, d2) top-k."""
+             force: str | None = None, raw: bool = False,
+             tile: int | None = None):
+    """Per-query scan of probed packed-list tiles -> (ids, d2) top-k.
+
+    ``tile`` chunks the reference's query axis (cache blocking, bitwise-
+    neutral — see ``ref.ivf_scan``); the Pallas grid is already per-query,
+    so the TPU path ignores it.
+    """
     with kernel_scope("ivf_scan"):
+        nq, d = Q.shape
+        t = _tile("ivf_scan",
+                  {"q": nq, "rows": tile_map.shape[1] * block_rows, "d": d,
+                   "topk": topk}, tile)
         if force == "ref" or (force is None and not _on_tpu()):
             return _ref.ivf_scan(Q, vecs, pids, tile_map,
-                                 block_rows=block_rows, topk=topk, raw=raw)
+                                 block_rows=block_rows, topk=topk, raw=raw,
+                                 tile=t)
         return _ivf.ivf_scan(Q, vecs, pids, tile_map, block_rows=block_rows,
                              topk=topk, interpret=(force == "interpret"),
                              raw=raw)
+
+
+def ivf_scan_adc(lut: jax.Array, qconst: jax.Array, vnorm: jax.Array,
+                 codes: jax.Array, pids: jax.Array, tile_map: jax.Array, *,
+                 block_rows: int, topk: int = 10, force: str | None = None,
+                 tile: int | None = None):
+    """Asymmetric-distance scan of compressed lists via a per-query LUT.
+
+    (lut (q, M, W), qconst (q,)) from ``index.quantize.build_lut`` (W=256
+    pq, W=1 int8); codes/vnorm are the packed u8 slab and reconstruction
+    norms.  Returns (ids, packed-row pos, RAW partials) — callers finalize
+    or exact-rerank.  ``tile`` chunks the reference's query axis (bitwise-
+    neutral); the Pallas grid is per-query and keeps the (1, M, W) LUT
+    block VMEM-resident.
+    """
+    with kernel_scope("ivf_scan_adc"):
+        nq, m, w = lut.shape
+        t = _tile("ivf_scan_adc",
+                  {"q": nq, "rows": tile_map.shape[1] * block_rows, "m": m,
+                   "w": w, "topk": topk}, tile)
+        if force == "ref" or (force is None and not _on_tpu()):
+            return _ref.ivf_scan_adc(lut, qconst, vnorm, codes, pids,
+                                     tile_map, block_rows=block_rows,
+                                     topk=topk, tile=t)
+        return _adc.ivf_scan_adc(lut, qconst, vnorm, codes, pids, tile_map,
+                                 block_rows=block_rows, topk=topk,
+                                 interpret=(force == "interpret"))
 
 
 def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,

@@ -92,10 +92,11 @@ def finalize_d2(ids: jax.Array, od: jax.Array, Q: jax.Array):
     return ids, jnp.where(ids < 0, jnp.inf, d2)
 
 
-@functools.partial(jax.jit, static_argnames=("block_rows", "topk", "raw"))
+@functools.partial(jax.jit,
+                   static_argnames=("block_rows", "topk", "raw", "tile"))
 def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
              tile_map: jax.Array, *, block_rows: int, topk: int = 10,
-             raw: bool = False):
+             raw: bool = False, tile: int = 0):
     """Inverted-list scan oracle over the packed layout.
 
     Gathers every probed tile's rows per query (same traversal order as the
@@ -106,18 +107,40 @@ def ivf_scan(Q: jax.Array, vecs: jax.Array, pids: jax.Array,
     selection is bit-identical to a single-device scan.  Jitted for the same
     cross-topology bitwise reason as ``probe_centroids``: the per-candidate
     scores must round identically inside the sharded trace and out here.
+
+    ``tile`` chunks the QUERY axis (a ``lax.map`` over query tiles, bounding
+    the gathered working set to tile * T * block_rows rows) — each query's
+    scores are an independent batch element of the einsum, so every tile
+    size is bitwise-identical (see ``batched_gather_dots``; the chunk is
+    clamped >= 2 for the same batch-1 strength-reduction reason).
     """
     nq = Q.shape[0]
     Qf = Q.astype(jnp.float32)
-    pos = (tile_map[:, :, None] * block_rows
-           + jnp.arange(block_rows, dtype=jnp.int32))       # (q, T, bl)
-    pos = pos.reshape(nq, -1)                               # (q, L)
-    cids = pids[pos]                                        # (q, L)
-    cv = vecs[pos].astype(jnp.float32)                      # (q, L, d)
-    vsq = jnp.sum(cv * cv, axis=-1)                         # (q, L)
-    dots = jnp.einsum("qd,qld->ql", Qf, cv)
-    part = jnp.where(cids < 0, jnp.inf, vsq - 2.0 * dots)
-    d, ids = stable_topk(part, cids, topk)
+
+    def chunk(args):
+        qf, tm = args                                       # (c, d), (c, T)
+        pos = (tm[:, :, None] * block_rows
+               + jnp.arange(block_rows, dtype=jnp.int32))   # (c, T, bl)
+        pos = pos.reshape(qf.shape[0], -1)                  # (c, L)
+        cids = pids[pos]                                    # (c, L)
+        cv = vecs[pos].astype(jnp.float32)                  # (c, L, d)
+        vsq = jnp.sum(cv * cv, axis=-1)                     # (c, L)
+        dots = jnp.einsum("qd,qld->ql", qf, cv)
+        part = jnp.where(cids < 0, jnp.inf, vsq - 2.0 * dots)
+        return stable_topk(part, cids, topk)
+
+    if not tile or tile >= nq:
+        d, ids = chunk((Qf, tile_map))
+    else:
+        t = max(tile, 2)
+        nt = -(-nq // t)
+        pad = nt * t - nq
+        Qp = jnp.pad(Qf, ((0, pad), (0, 0))).reshape(nt, t, Qf.shape[1])
+        tp = jnp.pad(tile_map, ((0, pad), (0, 0))).reshape(
+            nt, t, tile_map.shape[1])
+        d, ids = jax.lax.map(chunk, (Qp, tp))
+        d = d.reshape(nt * t, topk)[:nq]
+        ids = ids.reshape(nt * t, topk)[:nq]
     if raw:
         return ids, jnp.where(ids < 0, jnp.inf, d)
     return finalize_d2(ids, d, Q)
@@ -178,6 +201,102 @@ def ivf_scan_grouped(Qg: jax.Array, vecs: jax.Array, pids: jax.Array,
         # partial distances for cross-shard merges (see ivf_scan's raw)
         return ids, jnp.where(ids < 0, jnp.inf, d)
     return finalize_d2(ids, d, Qg)
+
+
+def adc_expand(codes: jax.Array, width: int) -> jax.Array:
+    """u8 codes (..., M) -> f32 "expanded" codes (..., M * width).
+
+    The shared kernel/ref body of the ADC contraction: with ``width == 1``
+    (int8 codec) the LUT "lookup" is a plain multiply, so the expansion is
+    just the f32 cast; with ``width == 256`` (pq) each code becomes a one-hot
+    row, turning the table lookup ``sum_m lut[m, c[m]]`` into one MXU
+    ``dot_general`` against the flattened (M * width) LUT.  The one-hot adds
+    exact zeros, so the contraction's float32 result per candidate is the
+    gathered sum itself — same arithmetic on both sides, bitwise.
+    """
+    ci = codes.astype(jnp.int32)
+    if width == 1:
+        return ci.astype(jnp.float32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, ci.shape + (width,), ci.ndim)
+    oh = (ci[..., None] == iota).astype(jnp.float32)
+    return oh.reshape(*ci.shape[:-1], ci.shape[-1] * width)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "topk", "tile"))
+def ivf_scan_adc(lut: jax.Array, qconst: jax.Array, vnorm: jax.Array,
+                 codes: jax.Array, pids: jax.Array, tile_map: jax.Array, *,
+                 block_rows: int, topk: int = 10, tile: int = 0):
+    """Asymmetric-distance scan oracle over compressed packed lists.
+
+    lut: (q, M, W) per-query distance table and qconst: (q,) per-query
+    constant (`index.quantize.build_lut`); vnorm: (n_pad,) f32
+    reconstruction norms; codes: (n_pad, M) u8; pids/tile_map as in
+    ``ivf_scan``.  Scores are the same partial-distance convention as
+    ``ivf_scan`` (``||v̂||² - 2 q.v̂``, v̂ the reconstruction):
+    ``part = vnorm + sum_m lut[m, code[m]]`` via the ``adc_expand`` one-hot
+    contraction — identical arithmetic to the Pallas kernel, which streams
+    tiles in the same slot order (the ``lax.map`` below mirrors its grid).
+    ``qconst`` is rank-invariant, so the top-k selects on the kernel's
+    partials and the constant is added to the SELECTED values only — the
+    same op order as the kernel wrapper, keeping parity bitwise.
+
+    Returns (ids (q, topk) int32, pos (q, topk) int32 PACKED ROW positions
+    (-1 at empty slots — the payload the exact-rerank tail gathers f32
+    originals with, no decode), part (q, topk) f32 raw partials, +inf at
+    empty slots).  Callers finalize via ``finalize_d2`` or rerank.
+
+    ``tile`` chunks the query axis exactly like ``ivf_scan``'s (bitwise-
+    invariant, clamp >= 2); the per-slot streaming bounds the one-hot
+    working set to chunk * block_rows * M * W floats either way.
+    """
+    nq, M, W = lut.shape
+    if nq == 1:
+        # batch-1 dot_general strength-reduces on XLA:CPU (last-ulp drift);
+        # pad to 2 identical queries, same clamp as batched_gather_dots
+        two = lambda a: jnp.concatenate([a, a], axis=0)
+        ids, pos, part = ivf_scan_adc(two(lut), two(qconst), vnorm, codes,
+                                      pids, two(tile_map),
+                                      block_rows=block_rows, topk=topk,
+                                      tile=0)
+        return ids[:1], pos[:1], part[:1]
+    lflat = lut.reshape(nq, M * W).astype(jnp.float32)
+    T = tile_map.shape[1]
+
+    def chunk(args):
+        lf, qc, tm = args                            # (c, MW), (c,), (c, T)
+        c = lf.shape[0]
+
+        def slot(s):
+            pos = (tm[:, s][:, None] * block_rows
+                   + jnp.arange(block_rows, dtype=jnp.int32))   # (c, bl)
+            ex = adc_expand(codes[pos], W)                  # (c, bl, MW)
+            cross = jax.lax.dot_general(
+                lf, ex, (((1,), (2,)), ((0,), (0,))),
+                preferred_element_type=jnp.float32)         # (c, bl)
+            return cross, pos
+
+        cross, pos = jax.lax.map(slot, jnp.arange(T))       # (T, c, bl) x2
+        cross = cross.transpose(1, 0, 2).reshape(c, -1)     # (c, L)
+        pos = pos.transpose(1, 0, 2).reshape(c, -1)         # (c, L)
+        cids = pids[pos]
+        part = jnp.where(cids < 0, jnp.inf, vnorm[pos] + cross)
+        ppos = jnp.where(cids < 0, -1, pos)
+        d, psel = stable_topk(part, ppos, topk)
+        ids = jnp.where(psel < 0, -1, pids[jnp.clip(psel, 0)])
+        return ids, psel, jnp.where(psel < 0, jnp.inf, d + qc[:, None])
+
+    if not tile or tile >= nq:
+        return chunk((lflat, qconst, tile_map))
+    t = max(tile, 2)
+    nt = -(-nq // t)
+    pad = nt * t - nq
+    lp = jnp.pad(lflat, ((0, pad), (0, 0))).reshape(nt, t, M * W)
+    qp = jnp.pad(qconst, (0, pad)).reshape(nt, t)
+    tp = jnp.pad(tile_map, ((0, pad), (0, 0))).reshape(nt, t, T)
+    ids, psel, d = jax.lax.map(chunk, (lp, qp, tp))
+    return (ids.reshape(nt * t, topk)[:nq],
+            psel.reshape(nt * t, topk)[:nq],
+            d.reshape(nt * t, topk)[:nq])
 
 
 def batched_gather_dots(xf: jax.Array, rows: jax.Array, src: jax.Array,

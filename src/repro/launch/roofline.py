@@ -63,11 +63,23 @@ KERNEL_INVENTORY = {
         hbm_bytes=lambda n, k, d, p: 4.0 * (n * d + k * d + 2 * n * p),
     ),
     "ivf_scan": dict(
+        tunable=True,
         desc="scalar-prefetch inverted-list tile streaming with running "
              "top-k; HBM traffic is only the probed fraction",
         flops=lambda q, rows, d, topk: 2.0 * q * rows * d,
         hbm_bytes=lambda q, rows, d, topk: 4.0 * (q * d + q * rows * d
                                                   + 2 * q * topk),
+    ),
+    "ivf_scan_adc": dict(
+        tunable=True,
+        desc="asymmetric-distance scan of compressed lists: per-query "
+             "(M, W) LUT stays VMEM-resident while u8 codes stream — "
+             "(M + 4) HBM bytes per candidate row instead of 4d (W=256 "
+             "pq one-hot MXU path, W=1 int8 direct dot)",
+        flops=lambda q, rows, m, w, topk: 2.0 * q * rows * m * w,
+        hbm_bytes=lambda q, rows, m, w, topk: (4.0 * q * m * w
+                                               + q * rows * (m + 4.0)
+                                               + 4.0 * 3 * q * topk),
     ),
     "ivf_scan_grouped": dict(
         desc="query-grouped inverted-list scan: G probe-local queries share "

@@ -8,13 +8,19 @@ probe-local queries).  Multi-device serving goes through
 `core.distributed.ShardedIvf` (lists sharded by cell, one shard_map trace
 and one host sync per query batch — see README "Serving the index");
 `benchmarks/anns_ivf_bench.py --mode sharded` drives it on forced host
-devices.
+devices.  `--codec int8|pq` serves the compressed-list ADC scan path
+(README "Compressed inverted lists"): the codec is trained and attached at
+build time (and persisted by `--save`, so a `--load` run serves it without
+retraining), candidates come from `kernels.ivf_scan_adc` over the u8 code
+slabs, and the top `--rerank` survivors are exact-rescored against the f32
+originals.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve_index --n 32768 --d 64 --k 256
   PYTHONPATH=src python -m repro.launch.serve_index --save /tmp/ix.ivf
   PYTHONPATH=src python -m repro.launch.serve_index --load /tmp/ix.ivf
   PYTHONPATH=src python -m repro.launch.serve_index --qgroup 8
+  PYTHONPATH=src python -m repro.launch.serve_index --codec pq --nsub 8
 """
 from __future__ import annotations
 
@@ -39,6 +45,9 @@ def build(args) -> tuple[ivf.IvfIndex, jax.Array]:
         if (args.n, args.d) != (index.size, index.dim):
             print(f"[load] overriding --n/--d with the index's "
                   f"n={index.size} d={index.dim}")
+        if args.codec != "f32" and index.codec_kind != args.codec:
+            raise SystemExit(f"--codec {args.codec} but the saved index "
+                             f"carries {index.codec_kind!r}")
         X = gmm_blobs(key, index.size, index.dim, args.components)
         return index, X
     X = gmm_blobs(key, args.n, args.d, args.components)
@@ -50,6 +59,13 @@ def build(args) -> tuple[ivf.IvfIndex, jax.Array]:
     index = ivf.build_ivf(X, res, block_rows=args.block_rows)
     print(f"[build] gk_means k={res.k} in {t_cluster:.1f}s, "
           f"pack {index.n_rows} rows in {time.perf_counter() - t0:.2f}s")
+    if args.codec != "f32":
+        t0 = time.perf_counter()
+        index = ivf.quantize_index(index, args.codec, nsub=args.nsub,
+                                   key=jax.random.fold_in(key, 2))
+        bpr = ivf.bytes_per_row(index.codec, index.dim)
+        print(f"[build] {args.codec} codec in {time.perf_counter() - t0:.2f}s"
+              f" ({bpr} B/row vs {4 * index.dim} f32)")
     if args.save:
         ivf.save_index(index, args.save)
         print(f"[build] saved -> {args.save} "
@@ -59,7 +75,8 @@ def build(args) -> tuple[ivf.IvfIndex, jax.Array]:
 
 def serve_sweep(index: ivf.IvfIndex, X: jax.Array, *, nq: int, topk: int,
                 probes, batch: int, rounds: int, seed: int,
-                qgroup: int | None = None):
+                qgroup: int | None = None, codec: str = "f32",
+                rerank: int | None = None):
     key = jax.random.PRNGKey(seed)
     batch = min(batch, nq)
     nq -= nq % batch  # whole batches only: one compile footprint per sweep
@@ -67,15 +84,16 @@ def serve_sweep(index: ivf.IvfIndex, X: jax.Array, *, nq: int, topk: int,
     # exact ground truth for recall@topk
     d2 = jnp.sum((Q[:, None, :] - X[None]) ** 2, -1)
     gt = jnp.argsort(d2, axis=1)[:, :topk]
+    kw = {} if codec == "f32" else {"codec": codec, "rerank": rerank}
 
     print(f"{'nprobe':>6} {'recall@%d' % topk:>10} {'scan%':>7} "
           f"{'p50_ms':>8} {'p90_ms':>8} {'p99_ms':>8} {'QPS':>10}")
     rows = []
     for p in probes:
         ids, _ = ivf.search(index, Q, topk=topk, nprobe=p,
-                            qgroup=qgroup)                        # for recall
+                            qgroup=qgroup, **kw)                  # for recall
         w, _ = ivf.search(index, Q[:batch], topk=topk, nprobe=p,
-                          qgroup=qgroup)                          # warm batch
+                          qgroup=qgroup, **kw)                    # warm batch
         jax.block_until_ready((ids, w))
         lat = []
         for r in range(rounds):
@@ -83,7 +101,7 @@ def serve_sweep(index: ivf.IvfIndex, X: jax.Array, *, nq: int, topk: int,
                 qb = Q[b0:b0 + batch]
                 t0 = time.perf_counter()
                 out, _ = ivf.search(index, qb, topk=topk, nprobe=p,
-                                    qgroup=qgroup)
+                                    qgroup=qgroup, **kw)
                 jax.block_until_ready(out)
                 lat.append(time.perf_counter() - t0)
         lat = np.sort(np.array(lat)) * 1e3                         # ms/batch
@@ -120,13 +138,22 @@ def main():
     ap.add_argument("--load", default=None, help="serve a saved index")
     ap.add_argument("--qgroup", type=int, default=None,
                     help="query-grouped scan layout: queries per group")
+    ap.add_argument("--codec", default="f32",
+                    choices=["f32", "int8", "pq"],
+                    help="compressed-list ADC scan path (exact-rerank tail)")
+    ap.add_argument("--rerank", type=int, default=None,
+                    help="codec rerank depth (default 4*topk; 0 disables)")
+    ap.add_argument("--nsub", type=int, default=8,
+                    help="pq subspaces (code bytes per vector)")
     args = ap.parse_args()
+    if args.codec != "f32" and args.qgroup:
+        raise SystemExit("--codec is per-query only (drop --qgroup)")
 
     index, X = build(args)
     probes = [int(p) for p in args.probes.split(",") if int(p) <= index.k]
     serve_sweep(index, X, nq=args.nq, topk=args.topk, probes=probes,
                 batch=args.batch, rounds=args.rounds, seed=args.seed + 9,
-                qgroup=args.qgroup)
+                qgroup=args.qgroup, codec=args.codec, rerank=args.rerank)
 
 
 if __name__ == "__main__":

@@ -39,6 +39,10 @@ Slot registry (every producer writes a subset; unwritten slots stay 0):
   ``graph_mean_dist``         f32   graph build: mean finite neighbour
                                     distance after the round
   ``scan_frac``               f32   IVF: scanned_rows / (q * capacity)
+  ``scanned_bytes``           f32   IVF: HBM bytes streamed for the query
+                                    batch (scanned_rows * bytes/row of the
+                                    scanned payload — codec-aware, f32 for
+                                    the uncompressed scan)
   ==========================  ====  =====================================
 
 ``init(rows)`` builds a zeroed accumulator; every helper treats ``None`` as
@@ -70,6 +74,7 @@ F32_SLOTS: Dict[str, int] = {
     "hit_rate": 1,
     "graph_mean_dist": 2,
     "scan_frac": 3,
+    "scanned_bytes": 4,
 }
 N_I32 = len(I32_SLOTS)
 N_F32 = len(F32_SLOTS)

@@ -1,3 +1,5 @@
+import gc
+
 import jax
 import pytest
 
@@ -5,6 +7,23 @@ import pytest
 # multi-device behaviour is tested via subprocesses (test_distributed.py).
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _drop_compiled_executables():
+    """Release each module's compiled executables when it finishes.
+
+    Every live XLA:CPU executable pins LLVM-JIT'd code segments — a
+    handful of anonymous mmaps each.  Across the whole suite the global
+    jit caches keep ~10k executables alive, which runs the process into
+    the kernel's vm.max_map_count (65530 by default) and segfaults inside
+    ``backend_compile`` late in the run.  Freed executables' slabs ARE
+    reused by the JIT pool, so clearing between modules caps the live set
+    at one module's worth; cross-module fixtures recompile harmlessly.
+    """
+    yield
+    jax.clear_caches()
+    gc.collect()
 
 
 @pytest.fixture(scope="session")

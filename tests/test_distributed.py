@@ -516,6 +516,98 @@ def test_sharded_ivf_grouped_scan_parity_4dev():
     assert "SHARDED_IVF_GROUPED_OK" in r.stdout, r.stderr[-3000:]
 
 
+# ---------------------------------------------------------------------------
+# codec'd sharded IVF: the compressed-list ADC scan composed with ShardedIvf —
+# replicated in-trace LUT, sharded u8 slabs, per-shard exact-rerank tail, and
+# the same one-all-gather / one-host-sync schedule as the f32 path.
+# ---------------------------------------------------------------------------
+
+CODE_IVF_CODEC = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro import index as ivf
+from repro.core.distributed import ShardedIvf
+from repro.data import gmm_blobs
+from repro.kernels import ref
+from repro.obs import sync_counter
+from repro.obs import telemetry as obs_tel
+
+class FakeResult:
+    def __init__(self, assign, centroids, k):
+        self.assign, self.centroids, self.k = assign, centroids, k
+
+key = jax.random.PRNGKey(0)
+R = len(jax.devices())
+assert R == 4
+n, d, k, bl = 1000, 16, 37, 16          # k % R != 0, ragged skewed lists
+X = gmm_blobs(key, n, d, 24)
+C = gmm_blobs(jax.random.fold_in(key, 1), k, d, 24)
+a, _ = ref.assign_centroids(X, C)
+base = ivf.build_ivf(X, FakeResult(a, C, k), block_rows=bl)
+mesh = jax.make_mesh((R,), ("data",))
+nq = 32
+Q = X[:nq] + 0.1 * jax.random.normal(jax.random.fold_in(key, 2), (nq, d))
+
+for kind in ("int8", "pq"):
+    index = ivf.quantize_index(base, kind, nsub=8,
+                               key=jax.random.fold_in(key, 5))
+    sivf = ShardedIvf(mesh, index)
+    bpr = ivf.bytes_per_row(index.codec, d)
+
+    # rerank=0 (pure ADC): bit-exact vs the single-device codec search,
+    # exactly one host sync for the whole query batch
+    i1, d1 = jax.device_get(ivf.search(index, Q, topk=10, nprobe=6,
+                                       codec=kind, rerank=0))
+    jax.block_until_ready(sivf.search(Q, topk=10, nprobe=6, codec=kind,
+                                      rerank=0))                      # warm
+    with sync_counter() as sc:
+        out = sivf.search(Q, topk=10, nprobe=6, codec=kind, rerank=0)
+        i2, d2 = sc.get(out)
+    assert sc.syncs == 1, (kind, sc.syncs)
+    np.testing.assert_array_equal(i1, i2, err_msg=kind)
+    np.testing.assert_array_equal(d1, d2, err_msg=kind)
+
+    # rerank tail on: each shard reranks its own top-depth survivors, a
+    # SUPERSET of the global top-depth, so per-slot exact d2 can only be
+    # <= the single-device result (and stays exact squared L2)
+    si, sd = jax.device_get(ivf.search(index, Q, topk=10, nprobe=6,
+                                       codec=kind))
+    with sync_counter() as sr:
+        out = sivf.search(Q, topk=10, nprobe=6, codec=kind)
+        ri, rd = sr.get(out)
+    assert sr.syncs == 1, (kind, sr.syncs)
+    fin = np.isfinite(sd)
+    assert np.all(rd[fin] <= sd[fin] + 1e-5), kind
+    assert np.all(ri[np.isfinite(rd)] >= 0), kind
+
+    # telemetry rides the same sync; scanned_bytes is exactly rows * B/row
+    with sync_counter() as st:
+        out = sivf.search(Q, topk=10, nprobe=6, codec=kind, telemetry=True)
+        ti, td, tel = st.get(out)
+    assert st.syncs == 1, (kind, st.syncs)
+    np.testing.assert_array_equal(ti, ri, err_msg=kind)
+    rows = int(obs_tel.column(tel, "scanned_rows")[0])
+    nbytes = int(obs_tel.column(tel, "scanned_bytes")[0])
+    assert rows > 0 and nbytes == rows * bpr, (kind, rows, nbytes, bpr)
+
+# the f32 path reports 4d bytes/row through the same slot
+sivf32 = ShardedIvf(mesh, base)
+_, _, tel32 = jax.device_get(sivf32.search(Q, topk=10, nprobe=6,
+                                           telemetry=True))
+rows32 = int(obs_tel.column(tel32, "scanned_rows")[0])
+assert int(obs_tel.column(tel32, "scanned_bytes")[0]) == rows32 * 4 * d
+print("SHARDED_IVF_CODEC_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_ivf_codec_parity_and_single_sync_4dev():
+    """Tentpole acceptance: codec'd ShardedIvf search keeps the single-sync
+    schedule — rerank=0 bit-exact vs single-device, rerank tail never worse
+    per slot, scanned_bytes telemetry exact for int8/pq/f32 byte rates."""
+    r = _run(CODE_IVF_CODEC, devices=4)
+    assert "SHARDED_IVF_CODEC_OK" in r.stdout, r.stderr[-3000:]
+
+
 @pytest.mark.slow
 def test_cluster_large_example_indivisible_n_4dev():
     """examples/cluster_large.py multi-device path: n % n_dev != 0 no longer

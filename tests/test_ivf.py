@@ -11,8 +11,10 @@ import pytest
 
 from repro import index as ivf
 from repro.data import gmm_blobs
+from repro.index import quantize
 from repro.kernels import centroid_assign as ca
 from repro.kernels import ivf_scan as iv
+from repro.kernels import ivf_scan_adc as adc
 from repro.kernels import ref
 
 
@@ -185,6 +187,138 @@ def test_grouped_search_matches_per_query(key):
                                       err_msg=f"G={G}")
         np.testing.assert_allclose(np.asarray(d1), np.asarray(d0),
                                    rtol=1e-4, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# compressed-list ADC scan: kernel exactness and codec search semantics
+# ---------------------------------------------------------------------------
+
+def _adc_inputs(index, Q, nprobe):
+    cids, _ = ref.probe_centroids(Q, index.centroids, nprobe)
+    tm = ivf.build_tile_map(cids, index.starts, index.caps,
+                            max_tiles=index.max_list_tiles,
+                            block_rows=index.block_rows,
+                            null_tile=index.null_tile)
+    lut, qc = quantize.build_lut(index.codec, Q)
+    return lut, qc, tm
+
+
+@pytest.mark.parametrize("kind,nq,nprobe,topk", [
+    ("int8", 32, 4, 10),
+    ("pq", 32, 4, 10),
+    ("int8", 1, 2, 5),                  # q=1: ref's pad-to-2 recursion
+    ("pq", 7, 3, 40),                   # topk > list sizes: -1/+inf tails
+])
+def test_ivf_scan_adc_interpret_bitwise_vs_ref(key, kind, nq, nprobe, topk):
+    """Acceptance: the fused ADC kernel is BITWISE-equal to its oracle —
+    ids, packed-row positions, and raw partials — for both codecs, with
+    tombstoned rows (holes) in the scanned lists."""
+    X, index = small_index(key, n=512, d=16, k=8, block_rows=16)
+    index = ivf.remove(index, np.arange(0, 40))      # punch holes in lists
+    index = ivf.quantize_index(index, kind, nsub=4,
+                               key=jax.random.fold_in(key, 21))
+    Q = X[:nq] + 0.1 * jax.random.normal(jax.random.fold_in(key, 22),
+                                         (nq, X.shape[1]))
+    lut, qc, tm = _adc_inputs(index, Q, nprobe)
+    ki, kp, kd = adc.ivf_scan_adc(lut, qc, index.vnorm, index.codes,
+                                  index.ids, tm,
+                                  block_rows=index.block_rows, topk=topk,
+                                  interpret=True)
+    ri, rp, rd = ref.ivf_scan_adc(lut, qc, index.vnorm, index.codes,
+                                  index.ids, tm,
+                                  block_rows=index.block_rows, topk=topk)
+    np.testing.assert_array_equal(np.asarray(ki), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+    np.testing.assert_array_equal(np.asarray(kd), np.asarray(rd))
+    # tombstoned ids never surface; empty slots are -1 pos / +inf part
+    ri_n, rp_n, rd_n = np.asarray(ri), np.asarray(rp), np.asarray(rd)
+    assert np.all(ri_n[rp_n >= 0] >= 40)
+    assert np.all(ri_n[rp_n < 0] == -1) and np.all(np.isinf(rd_n[rp_n < 0]))
+
+
+def test_ivf_scan_adc_ref_tile_invariance(key):
+    """The oracle's autotunable query-axis chunking is bitwise-neutral."""
+    X, index = small_index(key, n=512, d=16, k=8, block_rows=16)
+    index = ivf.quantize_index(index, "pq", nsub=4,
+                               key=jax.random.fold_in(key, 23))
+    Q = X[:13]
+    lut, qc, tm = _adc_inputs(index, Q, 3)
+    base = ref.ivf_scan_adc(lut, qc, index.vnorm, index.codes, index.ids,
+                            tm, block_rows=index.block_rows, topk=10)
+    for t in (2, 3, 64):
+        out = ref.ivf_scan_adc(lut, qc, index.vnorm, index.codes,
+                               index.ids, tm, block_rows=index.block_rows,
+                               topk=10, tile=t)
+        for a, b in zip(base, out):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"tile={t}")
+
+
+@pytest.mark.parametrize("kind", ["int8", "pq"])
+def test_codec_search_rerank_is_exact(key, kind):
+    """With the rerank tail on, codec search returns exact squared L2 —
+    identical d2 to the f32 path wherever the same neighbour survives —
+    and recall can only improve over the codec-only (rerank=0) path."""
+    X, index = small_index(key, n=1024, d=16, k=16, block_rows=32)
+    index = ivf.quantize_index(index, kind, nsub=8,
+                               key=jax.random.fold_in(key, 31))
+    nq = 32
+    Q = X[:nq] + 0.05 * jax.random.normal(jax.random.fold_in(key, 32),
+                                          (nq, X.shape[1]))
+    fi, fd = ivf.search(index, Q, topk=10, nprobe=8, force="ref")
+    ci, cd = ivf.search(index, Q, topk=10, nprobe=8, force="ref",
+                        codec=kind)
+    zi, zd = ivf.search(index, Q, topk=10, nprobe=8, force="ref",
+                        codec=kind, rerank=0)
+    fi_n, fd_n = np.asarray(fi), np.asarray(fd)
+    ci_n, cd_n = np.asarray(ci), np.asarray(cd)
+    for r in range(nq):
+        real = fi_n[r][fi_n[r] >= 0]
+        common, fa, ca_ = np.intersect1d(fi_n[r][fi_n[r] >= 0],
+                                         ci_n[r][ci_n[r] >= 0],
+                                         return_indices=True)
+        assert len(common) > 0
+        np.testing.assert_array_equal(fd_n[r][fi_n[r] >= 0][fa],
+                                      cd_n[r][ci_n[r] >= 0][ca_])
+        assert len(real) == len(set(real.tolist()))
+    # rerank re-scores a SUPERSET of the codec-only shortlist exactly, so
+    # any f32-top-10 hit the codec-only path finds, rerank keeps
+    hits = lambda a: float(np.mean((np.asarray(a)[:, :, None]
+                                    == fi_n[:, None, :]).any(-1)))
+    assert hits(ci) >= hits(zi)
+    # rerank=0 distances are to the reconstructions: finite and nonnegative
+    zd_n = np.asarray(zd)
+    assert np.all(zd_n[np.asarray(zi) >= 0] >= 0.0)
+    assert np.all(np.isfinite(zd_n[np.asarray(zi) >= 0]))
+
+
+def test_group_map_matches_pairwise_reference(key):
+    """Regression (satellite): the searchsorted membership build equals the
+    old O(G*U*T) pairwise-compare build bit-for-bit — ragged tails and
+    duplicate probed tiles included."""
+    X, index = small_index(key, n=512, d=16, k=8, block_rows=16)
+    null = index.null_tile
+    for nq, G, nprobe in ((13, 4, 3), (32, 8, 4), (5, 3, 2), (16, 16, 5)):
+        Q = X[:nq]
+        cids, _ = ref.probe_centroids(Q, index.centroids, nprobe)
+        tm = ivf.build_tile_map(cids, index.starts, index.caps,
+                                max_tiles=index.max_list_tiles,
+                                block_rows=index.block_rows,
+                                null_tile=null)
+        order, union, qmask = ivf.build_group_map(tm, group=G,
+                                                  null_tile=null)
+        order_n, u = np.asarray(order), np.asarray(union)
+        tq = np.asarray(tm)[np.clip(order_n, 0, nq - 1)].copy()
+        tq[order_n >= nq] = null                          # padding rows
+        ngroups = len(order_n) // G
+        tqg = tq.reshape(ngroups, G, -1)
+        # old membership: member m owns union slot u iff union[g, u] is one
+        # of m's real probed tiles (pairwise compare over every slot)
+        hit = (tqg[:, :, None, :] == u[:, None, :, None]).any(-1)
+        hit &= (u != null)[:, None, :]
+        np.testing.assert_array_equal(
+            np.asarray(qmask).reshape(ngroups, G, -1),
+            hit.astype(np.int32), err_msg=f"nq={nq} G={G} p={nprobe}")
 
 
 # ---------------------------------------------------------------------------

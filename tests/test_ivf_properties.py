@@ -1,8 +1,12 @@
 """Property-based IVF index invariants (hypothesis, with the tests/_hyp.py
 deterministic fallback): random add/remove/repack sequences must preserve the
-tile-aligned CSR layout, keep live ids unique and stable across repacks, and
-leave search results unchanged by a no-op repack."""
+tile-aligned CSR layout, keep live ids unique and stable across repacks,
+leave search results unchanged by a no-op repack, and keep the compressed
+payload in lockstep (``codes == encode(vecs)``) through every mutation and
+persistence round-trip."""
+import os
 import random
+import tempfile
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +19,7 @@ except ImportError:  # container image has no hypothesis wheel
 
 from repro import index as ivf
 from repro.data import gmm_blobs
+from repro.index import quantize
 from repro.kernels import ref
 
 
@@ -140,3 +145,137 @@ def test_shard_lists_covers_every_row_once(seed):
         # the local null tile (last tile of the slab) is all holes
         assert np.all(sids[(r + 1) * parts.rows_loc - index.block_rows:
                            (r + 1) * parts.rows_loc] == -1)
+
+
+# ---------------------------------------------------------------------------
+# compressed payload (index/quantize.py) properties
+# ---------------------------------------------------------------------------
+
+def _check_lockstep(index):
+    """The codec packing is a pure function of the f32 slab: every mutation
+    path must leave ``codes == encode(vecs)`` (holes included — they encode
+    whatever the slab holds, and the scan masks them by id) and
+    ``vnorm == ||decode(codes)||^2``."""
+    codes = np.asarray(quantize.encode(index.codec, index.vecs))
+    np.testing.assert_array_equal(np.asarray(index.codes), codes)
+    rec = quantize.decode(index.codec, index.codes)
+    np.testing.assert_allclose(np.asarray(index.vnorm),
+                               np.asarray(jnp.sum(rec * rec, axis=-1)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(deadline=None, max_examples=4)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_codec_roundtrip_both_formats(seed):
+    """quantize -> pack -> persist -> load -> unpack: codec arrays and codec
+    search results survive both store formats bit-for-bit."""
+    rng = random.Random(seed)
+    X, index = _build(seed % 5)
+    kind = rng.choice(("int8", "pq"))
+    index = ivf.quantize_index(index, kind, nsub=4, iters=2,
+                               key=jax.random.PRNGKey(seed))
+    Q = jnp.asarray(np.asarray(X)[:6]) + 0.05
+    i0, d0 = ivf.search(index, Q, topk=5, nprobe=3, force="ref", codec=kind)
+    with tempfile.TemporaryDirectory() as td:
+        for fname in ("index.ivf", "index.npz"):
+            path = os.path.join(td, fname)
+            ivf.save_index(index, path)
+            loaded = ivf.load_index(path)
+            assert loaded.codec_kind == kind, fname
+            np.testing.assert_array_equal(np.asarray(loaded.codes),
+                                          np.asarray(index.codes))
+            np.testing.assert_array_equal(np.asarray(loaded.vnorm),
+                                          np.asarray(index.vnorm))
+            for a, b in zip(jax.tree_util.tree_leaves(loaded.codec),
+                            jax.tree_util.tree_leaves(index.codec)):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+            np.testing.assert_array_equal(
+                np.asarray(quantize.decode(loaded.codec, loaded.codes)),
+                np.asarray(quantize.decode(index.codec, index.codes)))
+            _check_lockstep(loaded)
+            i1, d1 = ivf.search(loaded, Q, topk=5, nprobe=3, force="ref",
+                                codec=kind)
+            np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+            np.testing.assert_array_equal(np.asarray(d0), np.asarray(d1))
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_int8_encode_is_monotone(seed):
+    """Per-dimension x1 <= x2 -> code1 <= code2: the strictly positive scale
+    keeps the affine monotone even on constant training dims, and decode
+    lands within half a quantization step of the clipped input."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(64, D)).astype(np.float32)
+    X[:, 0] = 1.5                                    # constant training dim
+    codec = ivf.train_int8(jnp.asarray(X))
+    assert float(jnp.min(codec.scale)) > 0.0
+    a = rng.normal(size=(32, D)).astype(np.float32)
+    b = a + rng.uniform(0.0, 2.0, size=a.shape).astype(np.float32)
+    ca = np.asarray(quantize.encode(codec, jnp.asarray(a)))
+    cb = np.asarray(quantize.encode(codec, jnp.asarray(b)))
+    assert np.all(ca <= cb)
+    lo = np.asarray(codec.zero)
+    hi = lo + 255.0 * np.asarray(codec.scale)
+    rec = np.asarray(quantize.decode(codec, jnp.asarray(ca)))
+    np.testing.assert_allclose(rec, np.clip(a, lo, hi),
+                               atol=float(np.max(codec.scale)) * 0.51)
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_codec_padding_never_surfaces(seed):
+    """After removals, codec search (with and without the rerank tail) never
+    returns a tombstoned id or a hole; -1 slots carry +inf only."""
+    rng = random.Random(seed)
+    X, index = _build(seed % 5)
+    kind = rng.choice(("int8", "pq"))
+    index = ivf.quantize_index(index, kind, nsub=4, iters=2,
+                               key=jax.random.PRNGKey(seed + 3))
+    gone = set(rng.sample(range(N), rng.randint(1, N // 2)))
+    index = ivf.remove(index, np.asarray(sorted(gone)))
+    _check_lockstep(index)
+    Q = jnp.asarray(np.asarray(X)[:8]) + 0.05
+    for rerank in (0, None):
+        ids, d2 = ivf.search(index, Q, topk=40, nprobe=K, force="ref",
+                             codec=kind, rerank=rerank)
+        ids_n, d_n = np.asarray(ids), np.asarray(d2)
+        live = ids_n[ids_n >= 0]
+        assert not (set(live.tolist()) & gone), rerank
+        assert np.all(np.isinf(d_n[ids_n < 0])), rerank
+        assert np.all(np.isfinite(d_n[ids_n >= 0])), rerank
+
+
+@settings(deadline=None, max_examples=6)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_mutations_keep_codes_in_lockstep(seed):
+    """Random add/remove/repack sequences on a quantized index keep the code
+    slab in lockstep with the f32 slab (and preserve the CSR layout)."""
+    rng = random.Random(seed)
+    X, index = _build(seed % 7)
+    kind = rng.choice(("int8", "pq"))
+    index = ivf.quantize_index(index, kind, nsub=2, iters=2,
+                               key=jax.random.PRNGKey(seed + 9))
+    live = set(range(N))
+    next_id = N
+    pool = np.asarray(gmm_blobs(jax.random.PRNGKey(seed + 1), 64, D, 4))
+    _check_lockstep(index)
+    for _ in range(5):
+        op = rng.choice(("add", "remove", "repack"))
+        if op == "add":
+            m = rng.randint(1, 8)
+            rows = pool[rng.randrange(0, 64 - m):][:m]
+            new_ids = np.arange(next_id, next_id + m, dtype=np.int32)
+            index = ivf.add(index, rows, new_ids)
+            live |= set(new_ids.tolist())
+            next_id += m
+        elif op == "remove" and live:
+            m = min(rng.randint(1, 24), len(live))
+            gone = rng.sample(sorted(live), m)
+            index = ivf.remove(index, np.asarray(gone))
+            live -= set(gone)
+        else:
+            index = ivf.repack(index)
+        assert index.codec is not None and index.codec.kind == kind
+        _check_lockstep(index)
+        _check_csr(index, live)
