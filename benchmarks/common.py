@@ -39,8 +39,44 @@ def emit(rows: List[Row]) -> None:
         print(f"{name},{us:.1f},{derived}")
 
 
+def merge_scale_record(path: str, prefix: str, shapes: dict, config: dict,
+                       metrics: dict) -> None:
+    """Merge one bench's section into the shared ``BENCH_scale.json``.
+
+    engine_bench and graph_build_bench both contribute to ONE ``scale`` run
+    record (the large-k wire-cost figures belong side by side).  Each bench
+    owns the keys under its ``<prefix>.`` namespace: existing keys from the
+    OTHER bench survive, this bench's stale keys are dropped before its
+    fresh ones merge, so the file is valid ``repro.bench.v1`` after either
+    bench runs in either order.
+    """
+    import os
+    from repro.obs import load_records, run_record, write_json
+    sh: dict = {}
+    cf: dict = {}
+    mt: dict = {}
+    if os.path.exists(path):
+        try:
+            rec = load_records(path)[0]
+            if rec["name"] == "scale":
+                sh, cf, mt = rec["shapes"], rec["config"], rec["metrics"]
+        except Exception:
+            pass                      # drifted file: rebuild from scratch
+    tag = prefix + "."
+
+    def _merge(old: dict, new: dict) -> dict:
+        kept = {k: v for k, v in old.items() if not k.startswith(tag)}
+        kept.update({tag + k: v for k, v in new.items()})
+        return kept
+
+    write_json(path, run_record("scale", shapes=_merge(sh, shapes),
+                                config=_merge(cf, config),
+                                metrics=_merge(mt, metrics)))
+
+
 def run_forced_host_child(bench_file: str, quick: bool, devices: int,
-                          timeout: int = 3600) -> None:
+                          timeout: int = 3600,
+                          extra: Tuple[str, ...] = ()) -> None:
     """Re-run `bench_file --child` under R forced host CPU devices.
 
     The parent JAX runtime is already initialised with the real device
@@ -60,5 +96,5 @@ def run_forced_host_child(bench_file: str, quick: bool, devices: int,
         [os.path.join(here, "..", "src")]
         + ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
     cmd = [sys.executable, os.path.abspath(bench_file), "--child",
-           "--quick" if quick else "--full"]
+           "--quick" if quick else "--full", *extra]
     subprocess.run(cmd, check=True, env=env, timeout=timeout)

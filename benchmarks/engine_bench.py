@@ -10,7 +10,7 @@ telemetry rows come back in the SAME single ``device_get`` as the results
 (``obs.sync_counter`` runtime-verifies the count stays 1), and land in the
 emitted record's ``telemetry`` section.
 
-Two modes:
+Three modes:
 
   single   the single-device ``engine.run`` vs a host-driven epoch loop
            (emits ``BENCH_engine.json``);
@@ -18,11 +18,18 @@ Two modes:
            host-driven loop of ``ShardedEngine.epoch`` + per-epoch
            ``ShardedEngine.distortion`` syncs.  Runs in a child process with
            ``--xla_force_host_platform_device_count`` so it works on a
-           single-CPU box (emits ``BENCH_sharded_run.json``).
+           single-CPU box (emits ``BENCH_sharded_run.json``);
+  scale    a large-k ``ShardedEngine.run``: the probe-candidate centroid
+           exchange instead of a replicated (k, d) matrix.  Reports the
+           per-shard peak candidate-set size (static by construction — the
+           exchange is a dense (B, C) id block), the exchanged bytes per
+           batch step vs the old (k, d) all-gather, and asserts the run
+           still pays exactly ONE host sync.  Merges its section into
+           ``BENCH_scale.json`` next to graph_build_bench's.
 
-Both JSON files are ``repro.bench.v1`` run records (``repro.obs.emit``).
+All JSON files are ``repro.bench.v1`` run records (``repro.obs.emit``).
 CLI (the CI smoke step): ``python benchmarks/engine_bench.py --quick``
-runs both modes and prints the CSV rows.
+runs single+sharded; ``--mode scale`` runs the large-k mode.
 """
 from __future__ import annotations
 
@@ -32,6 +39,7 @@ import time
 SHARDED_DEVICES = 4
 OUT_JSON = "BENCH_engine.json"
 SHARDED_JSON = "BENCH_sharded_run.json"
+SCALE_JSON = "BENCH_scale.json"
 
 
 def _host_driven(X, a0, k, source, key, iters, batch_size):
@@ -184,6 +192,89 @@ def _sharded_child(quick: bool):
     write_json(SHARDED_JSON, rec)
 
 
+def _scale_child(quick: bool):
+    """Large-k sharded run: candidate exchange wire cost vs (k, d) gather.
+
+    A graph-kind ``ShardedEngine.run`` at a k where the old replicated
+    (k, d) all-gather dwarfs the candidate-row exchange.  The exchange per
+    batch step moves the gathered (R·B, C) s32 id block plus the psum'd
+    (R·B, C, d) f32 candidate rows — O(R²·B·C·d) wire, INDEPENDENT of k —
+    while the old path moved k·d·4 bytes per shard.  The per-shard
+    candidate set is exactly B·C rows by construction (the exchange is a
+    dense id block, no data-dependent dedupe), so its peak is static.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import engine, random_graph, two_means_tree
+    from repro.core.distributed import ShardedEngine
+    from repro.data import gmm_blobs
+    from repro.obs import sync_counter
+    try:
+        from benchmarks.common import merge_scale_record
+    except ImportError:
+        from common import merge_scale_record
+
+    n, d, k, iters = ((32768, 32, 16384, 2) if quick
+                      else (262144, 64, 65536, 3))
+    kappa, bs = 8, 256
+    R = len(jax.devices())
+    key = jax.random.PRNGKey(0)
+    X = gmm_blobs(key, n, d, 256)
+    # candidate QUALITY is irrelevant here (wire cost and sync count are
+    # shape-determined), so a random graph stands in for a built one and
+    # the bench stays a smoke-test size
+    G = jnp.maximum(random_graph(key, n, kappa), 0)
+    st = engine.init_state(X, two_means_tree(X, k, key), k)
+
+    mesh = jax.make_mesh((R,), ("data",))
+    cfg = engine.EngineConfig(batch_size=bs, iters=iters, min_move_frac=-1.0)
+    eng = ShardedEngine(mesh, cfg, kind="graph")
+    jax.block_until_ready(eng.run(X, G, st.assign, st.D, st.cnt, key)[0])
+
+    t0 = time.perf_counter()
+    with sync_counter() as sc:
+        out = eng.run(X, G, st.assign, st.D, st.cnt, key)
+        sc.get(out)                                      # the ONE sync
+    t_run = time.perf_counter() - t0
+    assert sc.syncs == 1, sc.syncs
+
+    C = kappa + 1                     # neighbour clusters + own cluster
+    exch = R * bs * C * 4 + R * bs * C * d * 4     # ids gather + rows psum
+    old = k * d * 4                                # replicated (k, d) f32
+    merge_scale_record(
+        SCALE_JSON, "engine",
+        shapes={"n": n, "d": d, "k": k, "kappa": kappa, "devices": R},
+        config={"iters": iters, "batch_size_per_shard": bs,
+                "kind": "graph"},
+        metrics={
+            "run_s": t_run,
+            "host_syncs": sc.syncs,
+            "peak_candidate_rows_per_shard_step": bs * C,
+            "candidate_width": C,
+            "exchange_bytes_per_step": exch,
+            "old_kd_allgather_bytes_per_step": old,
+            "exchange_vs_kd_ratio": exch / old,
+        })
+
+
+def run_scale(quick: bool = True, devices: int = SHARDED_DEVICES):
+    """Scale mode via a forced-host-device child (see ``_scale_child``)."""
+    try:
+        from benchmarks.common import run_forced_host_child
+    except ImportError:
+        from common import run_forced_host_child
+    from repro.obs import load_records
+    run_forced_host_child(__file__, quick, devices, extra=("--kind", "scale"))
+    rec = load_records(SCALE_JSON)[0]
+    m = rec["metrics"]
+    return [
+        ("engine/scale_sharded_run", m["engine.run_s"] * 1e6,
+         f"k={rec['shapes']['engine.k']};syncs={m['engine.host_syncs']};"
+         f"cand_rows_per_step={m['engine.peak_candidate_rows_per_shard_step']};"
+         f"exchange_vs_kd={m['engine.exchange_vs_kd_ratio']:.3f}x"),
+    ]
+
+
 def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
     """Sharded mode via a child process with forced host devices (the parent
     JAX runtime is already initialised with the real device count)."""
@@ -217,18 +308,22 @@ def main():
                       default=True)
     size.add_argument("--full", dest="quick", action="store_false")
     ap.add_argument("--mode", default="both",
-                    choices=["single", "sharded", "both"])
+                    choices=["single", "sharded", "scale", "both"])
     ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--kind", default="sharded",
+                    choices=["sharded", "scale"], help=argparse.SUPPRESS)
     args = ap.parse_args()
     quick = args.quick
     if args.child:
-        _sharded_child(quick)
+        (_scale_child if args.kind == "scale" else _sharded_child)(quick)
         return
     rows = []
     if args.mode in ("single", "both"):
         rows += run_single(quick)
     if args.mode in ("sharded", "both"):
         rows += run_sharded(quick)
+    if args.mode == "scale":
+        rows += run_scale(quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -13,7 +13,14 @@ Modes:
            epochs/s, recall@kappa, and per-round diagnostics;
   sharded  the same Alg. 3 build through ``GraphBuilder(mesh=...)`` on
            forced host devices (child process), asserting bit-exact parity
-           with the single-device ``shards=R`` emulation.
+           with the single-device ``shards=R`` emulation;
+  scale    a large-k0 sharded build: the distributed histogram-median 2M
+           tree and the shard-local member table instead of replicated
+           (n_pad,) sorts and a replicated (k0, cap) table.  Reports the
+           per-shard peak candidate-set size per row, the exchanged bytes
+           per round vs the old replicated state, asserts ONE host sync,
+           and merges its section into ``BENCH_scale.json`` next to
+           engine_bench's.
 
 Emits ``BENCH_graph_build.json`` (a ``repro.bench.v1`` run record; the
 device-resident build runs with ``cfg.telemetry`` ON and its per-round rows
@@ -29,6 +36,7 @@ import time
 SHARDED_DEVICES = 4
 OUT_JSON = "BENCH_graph_build.json"
 SHARDED_JSON = "BENCH_graph_build_sharded.json"
+SCALE_JSON = "BENCH_scale.json"
 
 
 def _bench_case(quick: bool):
@@ -213,6 +221,89 @@ def _sharded_child(quick: bool):
     write_json(SHARDED_JSON, rec)
 
 
+def _scale_child(quick: bool):
+    """Large-k0 sharded build: distributed-tree / local-table wire figures.
+
+    Per level the distributed tree psums one (256, k0)-digit int32
+    histogram — O(k0) wire independent of n — where the old tree sorted a
+    replicated (n_pad,) projection (which required every row on every
+    shard).  Per round the member-table exchange moves each shard's
+    transposed (cap/R, k0) slice plus its (spill,) list, vs the old
+    replicated (k0, cap) table.  Refinement candidates per row are the
+    table column plus the gathered spill lists — static, so the per-shard
+    peak candidate set is cap + R·spill by construction.
+    """
+    import jax
+    from repro.core import GraphBuildConfig, GraphBuilder
+    from repro.core.graph_build import _plan
+    from repro.data import gmm_blobs
+    from repro.obs import sync_counter
+    try:
+        from benchmarks.common import merge_scale_record
+    except ImportError:
+        from common import merge_scale_record
+
+    n, d, kappa, xi, tau = ((8192, 16, 8, 16, 2) if quick
+                            else (131072, 64, 16, 32, 4))
+    R = len(jax.devices())
+    key = jax.random.PRNGKey(0)
+    X = gmm_blobs(key, n, d, 256)
+    cfg = GraphBuildConfig(kappa=kappa, xi=xi, tau=tau, shards=R)
+    k0, n_pad = _plan(n, cfg)
+    cap = cfg.cap_factor * xi
+    mesh = jax.make_mesh((R,), ("data",))
+    builder = GraphBuilder(cfg, mesh=mesh)
+    jax.block_until_ready(builder.build(X, key)[0].ids)   # warm
+
+    t0 = time.perf_counter()
+    with sync_counter() as sc:
+        out = builder.build(X, key)
+        sc.get(out)                                       # the ONE sync
+    t_build = time.perf_counter() - t0
+    assert sc.syncs == 1, sc.syncs
+
+    tree_psum = 256 * k0 * 4                  # per level, k-proportional
+    old_sort = n_pad * 4                      # replicated projection, per level
+    table_exch = R * ((cap // R) * k0 + cfg.spill) * 4    # per round
+    old_table = k0 * cap * 4                  # replicated table, per round
+    merge_scale_record(
+        SCALE_JSON, "graph_build",
+        shapes={"n": n, "d": d, "kappa": kappa, "xi": xi, "tau": tau,
+                "k0": k0, "devices": R},
+        config={"cap": cap, "spill": cfg.spill},
+        metrics={
+            "build_s": t_build,
+            "host_syncs": sc.syncs,
+            "peak_candidate_rows_per_row": cap + R * cfg.spill,
+            "tree_hist_psum_bytes_per_level": tree_psum,
+            "old_tree_replicated_bytes_per_level": old_sort,
+            "table_exchange_bytes_per_round": table_exch,
+            "old_table_replicated_bytes_per_round": old_table,
+            "table_exchange_vs_replicated_ratio": table_exch / old_table,
+        })
+
+
+def run_scale(quick: bool = True, devices: int = SHARDED_DEVICES):
+    """Scale mode via a forced-host-device child (see ``_scale_child``)."""
+    try:
+        from benchmarks.common import run_forced_host_child
+    except ImportError:
+        from common import run_forced_host_child
+    from repro.obs import load_records
+    run_forced_host_child(__file__, quick, devices, extra=("--kind", "scale"))
+    rec = load_records(SCALE_JSON)[0]
+    m = rec["metrics"]
+    return [
+        ("graph_build/scale_sharded_build",
+         m["graph_build.build_s"] * 1e6,
+         f"k0={rec['shapes']['graph_build.k0']};"
+         f"syncs={m['graph_build.host_syncs']};"
+         f"cand_rows_per_row={m['graph_build.peak_candidate_rows_per_row']};"
+         f"table_exchange_vs_replicated="
+         f"{m['graph_build.table_exchange_vs_replicated_ratio']:.3f}x"),
+    ]
+
+
 def run_sharded(quick: bool = True, devices: int = SHARDED_DEVICES):
     """Sharded mode via a child process with forced host devices (the parent
     JAX runtime is already initialised with the real device count)."""
@@ -244,17 +335,21 @@ def main():
                       default=True)
     size.add_argument("--full", dest="quick", action="store_false")
     ap.add_argument("--mode", default="both",
-                    choices=["single", "sharded", "both"])
+                    choices=["single", "sharded", "scale", "both"])
     ap.add_argument("--child", action="store_true", help=argparse.SUPPRESS)
+    ap.add_argument("--kind", default="sharded",
+                    choices=["sharded", "scale"], help=argparse.SUPPRESS)
     args = ap.parse_args()
     if args.child:
-        _sharded_child(args.quick)
+        (_scale_child if args.kind == "scale" else _sharded_child)(args.quick)
         return
     rows = []
     if args.mode in ("single", "both"):
         rows += run_single(args.quick)
     if args.mode in ("sharded", "both"):
         rows += run_sharded(args.quick)
+    if args.mode == "scale":
+        rows += run_scale(args.quick)
     print("name,us_per_call,derived")
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")

@@ -8,24 +8,26 @@ Both topologies run the epoch loop fully device-resident — ``engine.run`` on
 one device, ``ShardedEngine.run`` SPMD across a multi-device mesh — so either
 way the whole loop (per-epoch distortion + ``min_move_frac`` early stop) costs
 ONE host sync, runtime-verified by ``obs.sync_counter`` with per-epoch
-telemetry riding the same sync.  When n is not divisible by the device count
-(shard_map needs equal shards), the first ``usable_rows(n, R)`` rows are
-clustered and the remainder is assigned to its nearest centroid post-hoc.
+telemetry riding the same sync.  Every row is clustered in-engine: the
+graph build pads internally, the 2M-tree init pads via ``pad_plan`` (wrap
+rows, sliced off the assignment), and ``ShardedEngine.run`` threads a
+padded-row validity mask when n is not divisible by the device count — no
+truncation, no post-hoc nearest-centroid remainder pass (whose empty-cluster
+origin centroids were a correctness hazard).
 
-Diagnostics (the truncation/remainder accounting, graph-build round
-diagnostics, per-epoch telemetry) land in a structured ``repro.bench.v1``
-run record — printed as JSONL, or written to ``--emit PATH``.
+Diagnostics (graph-build round diagnostics, per-epoch telemetry) land in a
+structured ``repro.bench.v1`` run record — printed as JSONL, or written to
+``--emit PATH``.
 """
 import argparse
-import math
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import build_knn_graph, engine, two_means_tree
-from repro.core.distributed import ShardedEngine, usable_rows
-from repro.kernels import ops as kops
+from repro.core.distributed import ShardedEngine
+from repro.core.two_means import pad_plan
 from repro.data import gmm_blobs
 from repro.obs import emit, sync_counter
 from repro.obs import telemetry as obs_tel
@@ -46,53 +48,55 @@ def main():
     X = gmm_blobs(key, args.n, args.d, 1024)
 
     n_dev = len(jax.devices())
-    # the 2M-tree init needs k | n and shard_map needs n_dev | n: truncate
-    # to the largest multiple of both
-    n_use = usable_rows(args.n, math.lcm(args.k, n_dev))
-    rem = args.n - n_use
-    if n_use == 0:
-        raise SystemExit(f"n={args.n} must be at least "
-                         f"lcm(k={args.k}, devices={n_dev})="
-                         f"{math.lcm(args.k, n_dev)}")
-    if rem:
-        print(f"[warn] n={args.n} not divisible by "
-              f"lcm(k={args.k}, {n_dev} devices)={math.lcm(args.k, n_dev)}: "
-              f"clustering the first {n_use} rows; the {rem} remainder "
-              f"rows are assigned to their nearest centroid afterwards")
-    Xc = X[:n_use]
+    n2, k2 = pad_plan(args.n, args.k)
+    if k2 != args.k:
+        raise SystemExit(f"k={args.k} must be a power of two")
+    if args.n < args.k:
+        raise SystemExit(f"n={args.n} must be at least k={args.k}")
+    # ShardedEngine needs equal per-shard cluster blocks (k % R == 0);
+    # an incompatible mesh falls back to the single-device engine — the
+    # same loop, same one-sync contract, just not SPMD
+    sharded = n_dev > 1 and args.k % n_dev == 0
+    if n_dev > 1 and not sharded:
+        print(f"[mesh] k={args.k} not divisible by {n_dev} devices — "
+              f"running the single-device engine")
 
     t0 = time.time()
-    g, gdiag = build_knn_graph(Xc, 16, xi=64, tau=4, key=key,
+    g, gdiag = build_knn_graph(X, 16, xi=64, tau=4, key=key,
                                return_diagnostics=True, telemetry=True)
     t_graph = time.time() - t0
     print(f"[graph] built in {t_graph:.1f}s")
 
+    # 2M-tree init wants k | n: pad with wrap rows, slice the phantom
+    # assignments off (pad_plan's documented protocol) — the engine run
+    # itself clusters all n rows natively.
     t0 = time.time()
-    a0 = two_means_tree(Xc, args.k, key)
+    Xi = X if n2 == args.n else jnp.concatenate([X, X[: n2 - args.n]])
+    a0 = two_means_tree(Xi, args.k, key)[: args.n]
     t_init = time.time() - t0
     print(f"[init] 2M tree ({args.k} clusters) in {t_init:.1f}s")
 
-    st = engine.init_state(Xc, a0, args.k)
-    xsq = jnp.sum(jnp.square(Xc.astype(jnp.float32)))
-    d_init = float(engine.stats_distortion(xsq, st.D, st.cnt, n_use))
+    st = engine.init_state(X, a0, args.k)
+    xsq = jnp.sum(jnp.square(X.astype(jnp.float32)))
+    d_init = float(engine.stats_distortion(xsq, st.D, st.cnt, args.n))
     print(f"[init] distortion {d_init:.4f}")
     cfg = engine.EngineConfig(batch_size=1024, iters=args.iters,
                               min_move_frac=1e-4, telemetry=True)
     t0 = time.time()
-    if n_dev > 1:
+    if sharded:
         mesh = jax.make_mesh((n_dev,), ("data",))
         eng = ShardedEngine(mesh, cfg)
         G = jnp.maximum(g.ids, 0)
         with sync_counter() as sc:
-            out = eng.run(Xc, G, st.assign, st.D, st.cnt, key)
+            out = eng.run(X, G, st.assign, st.D, st.cnt, key)
             (assign, D, cnt, hist, moves, epochs, final,
              tel) = sc.get(out)                           # the ONE sync
         where = f"{n_dev} devices"
     else:
         with sync_counter() as sc:
-            out = engine.run(Xc, st, engine.graph_source(g.ids), key, cfg)
+            out = engine.run(X, st, engine.graph_source(g.ids), key, cfg)
             st, hist, moves, epochs, final, tel = sc.get(out)
-        D, cnt = st.D, st.cnt
+        assign, D, cnt = st.assign, st.D, st.cnt
         where = "1 device"
     dt = time.time() - t0
     assert sc.syncs == 1, sc.syncs
@@ -102,38 +106,27 @@ def main():
           f"({where}, one host sync)")
     d_last = float(final)
 
-    rem_distinct = 0
-    if rem:
-        import numpy as np
-        # restrict the candidate set to non-empty clusters: an empty
-        # cluster's centroid sits at the origin after the division and must
-        # not capture a remainder row (same origin-centroid hazard the
-        # engine's probe source guards against; the leaver guard makes
-        # empties rare, but post-hoc assignment must not rely on that)
-        nonempty = np.flatnonzero(np.asarray(cnt) > 0)
-        C = (D / jnp.maximum(jnp.asarray(cnt), 1.0)[:, None])[nonempty]
-        rem_idx, _ = kops.assign_centroids(X[n_use:], C)
-        rem_assign = nonempty[np.asarray(rem_idx)]
-        rem_distinct = len(set(rem_assign.tolist()))
-        print(f"[remainder] {rem} rows assigned to their nearest centroid "
-              f"({rem_distinct} distinct clusters)")
+    assert assign.shape == (args.n,), assign.shape
+    assert int(jnp.sum(jnp.asarray(cnt))) == args.n, "every row assigned"
+    print(f"[run] all {args.n} rows assigned in-engine")
 
     assert d_last < d_init, (d_init, d_last)
     print(f"[done] distortion {d_init:.4f} -> {d_last:.4f} (converging)")
 
-    # the structured run record: truncation accounting + graph-build round
-    # diagnostics + per-epoch telemetry, one schema with the benchmarks
+    # the structured run record: graph-build round diagnostics + per-epoch
+    # telemetry, one schema with the benchmarks
     rec = emit.run_record(
         "cluster_large",
-        shapes={"n": args.n, "n_clustered": n_use, "remainder_rows": rem,
-                "d": args.d, "k": args.k, "devices": n_dev},
+        shapes={"n": args.n, "d": args.d, "k": args.k,
+                "devices": n_dev if sharded else 1,
+                "init_pad_rows": n2 - args.n},
         config={"iters": args.iters, "batch_size": 1024,
                 "min_move_frac": 1e-4, "telemetry": True},
         metrics={
             "graph_build_s": t_graph, "init_s": t_init, "run_s": dt,
             "epochs": int(epochs), "host_syncs_run": sc.syncs,
             "distortion_init": d_init, "distortion_final": d_last,
-            "remainder_distinct_clusters": rem_distinct,
+            "rows_assigned": int(jnp.sum(jnp.asarray(cnt))),
             "graph_overflow_per_round": [int(v) for v in gdiag.overflow],
             "graph_guided_moves_per_round": [int(v)
                                              for v in gdiag.guided_moves],

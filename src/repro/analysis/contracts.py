@@ -202,17 +202,18 @@ def contract_engine_sharded() -> List[AuditResult]:
     roles = {N: "n", K: "k"}
     out = []
 
-    # dense moves: per epoch ONE s32[n] assignment all-gather (the graph
-    # lookup needs the global assignment) and 4 all-reduces — centroid sums
-    # f32[k,d], two f32[k] count/weight partials, the s32[] moves counter —
-    # plus 2 pre-loop scalar psums (n and ||x||^2 totals).
+    # dense moves with the CLUSTER-SHARDED D: the (k, d) stats live as
+    # per-shard (k_loc, d) blocks, so the graph lookup costs the s32[n]
+    # assignment all-gather per epoch, and each batch pays the bounded
+    # candidate-row exchange (gathered candidate ids + (rows, d+1)
+    # composite payload) instead of a replicated f32[k,d] psum.
     cfg = EngineConfig(batch_size=96, iters=ITERS)
     se = ShardedEngine(mesh, cfg, kind="graph")
-    low = se.run.lower(X, G, assign, D0, cnt, key)
+    low = se._run.lower(*se._pad(K, X, G, assign)[:3], D0, cnt, key,
+                        *se._pad(K, X, G, assign)[3:])
     out.append(audit_trace(
         "sharded_run_body[dense]", low,
-        collectives={"all-gather": ITERS * 1,
-                     "all-reduce": 2 + ITERS * 4},
+        collectives=_ENGINE_DENSE_BUDGET,
         dim_roles=roles))
 
     # sparse moves + bf16 wire payload: per batch 3 extra index all-gathers
@@ -222,11 +223,11 @@ def contract_engine_sharded() -> List[AuditResult]:
     cfgs = EngineConfig(batch_size=96, iters=ITERS, sparse_updates=True,
                         payload_bf16=True)
     ses = ShardedEngine(mesh, cfgs, kind="graph")
-    lows = ses.run.lower(X, G, assign, D0, cnt, key)
+    lows = ses._run.lower(*ses._pad(K, X, G, assign)[:3], D0, cnt, key,
+                          *ses._pad(K, X, G, assign)[3:])
     out.append(audit_trace(
         "sharded_run_body[sparse,bf16]", lows,
-        collectives={"all-gather": ITERS * (1 + nb * 3),
-                     "all-reduce": 2 + ITERS * 1},
+        collectives=_ENGINE_SPARSE_BUDGET,
         allow_bf16=True,
         dim_roles=roles))
     return out
@@ -234,8 +235,10 @@ def contract_engine_sharded() -> List[AuditResult]:
 
 def contract_graph_build() -> List[AuditResult]:
     """GraphBuilder.build at 4 shards: X all-gathered ONCE per build, the
-    tau-round loop in one trace (PR 4) — tree + member table replicated
-    (the ROADMAP caveat the replication report pins)."""
+    tau-round loop in one trace (PR 4) — the 2M tree runs the distributed
+    histogram-median bisection and the member table is built shard-locally,
+    so no (k0, d)/(k0, cap) replicated state remains for the report to
+    pin."""
     import jax
 
     from repro.core.distributed import sharded_graph_builder
@@ -259,10 +262,12 @@ def contract_graph_build() -> List[AuditResult]:
 
 def contract_ivf_search() -> List[AuditResult]:
     """ShardedIvf.search at 4 shards: ONE cross-shard merge point per query
-    batch — two all-gather ops (per-shard candidate ids s32[shards, q, topk]
-    and raw distances f32[shards, q, topk]) on that single sync (PR 5);
-    telemetry adds the two scan-counter psums on the same sync (PR 6) —
-    queries + centroids replicated (ROADMAP caveat).
+    batch — the coarse probe exchanges per-shard owned-cell rankings and
+    the scan merge exchanges per-shard candidate ids + raw distances, all
+    on that single sync (PR 5); telemetry adds the two scan-counter psums
+    on the same sync (PR 6).  The coarse quantizer is sharded by cell owner
+    (cslab/ccid slabs), so no replicated f32[k, d] centroid matrix remains
+    — queries stay replicated (they are the broadcast work).
 
     The codec'd search (pq / int8 compressed slabs through `ivf_scan_adc` +
     per-shard exact rerank) must keep the IDENTICAL collective schedule:
@@ -291,10 +296,14 @@ def contract_ivf_search() -> List[AuditResult]:
     p = sivf.parts
     roles = {N: "n", K: "k", Q: "q"}
     out = []
-    for tel, coll in ((False, {"all-gather": 2}),
-                      (True, {"all-gather": 2, "all-reduce": 2})):
+    for tel, coll in ((False, _IVF_BUDGET),
+                      (True, {**_IVF_BUDGET,
+                              "all-reduce": _IVF_BUDGET.get("all-reduce", 0)
+                              + 2})):
+        coll = {k_: v for k_, v in coll.items() if v}
         prog = sivf._prog(10, 4, None, tel, "f32", None)
-        low = prog.lower(Qr, p.vecs, p.ids, p.starts, p.caps, sivf.centroids)
+        low = prog.lower(Qr, p.vecs, p.ids, p.starts, p.caps, sivf.cslab,
+                         sivf.ccid)
         out.append(audit_trace(
             f"ShardedIvf.search[telemetry={'on' if tel else 'off'}]", low,
             collectives=coll, dim_roles=roles))
@@ -308,23 +317,68 @@ def contract_ivf_search() -> List[AuditResult]:
         pc = sq.parts
         prog = sq._prog(10, 4, None, False, kind, None)
         low = prog.lower(Qr, pc.vecs, pc.ids, pc.starts, pc.caps,
-                         sq.centroids, pc.codes, pc.vnorm, sq.codec)
+                         sq.cslab, sq.ccid, pc.codes, pc.vnorm, sq.codec)
         out.append(audit_trace(
             f"ShardedIvf.search[codec={kind}]", low,
-            collectives={"all-gather": 2}, dim_roles=roles))
+            collectives=_IVF_BUDGET, dim_roles=roles))
     return out
 
 
-# graph build collective budget (while-trip-weighted, tau = TAU rounds):
-# ONE f32[n_pad, d] X all-gather outside the round loop (the PR 4 claim),
-# four s32[n_pad] index/assignment exchanges per round inside the tau loop,
-# one s32[] convergence psum per round, and the two (chunk, kappa)
-# collective-permute rotations of the candidate ring (f32 distances + s32
-# ids).  A change here means the build's communication pattern changed —
-# re-derive it from the trace decomposition, don't just bump the number.
+# Declared collective budgets (while-trip-weighted).  A mismatch means the
+# communication pattern changed — re-derive each term from the trace
+# decomposition, don't just bump the number.
+
+_NB = N // DEVICES // 96     # per-shard batches per epoch at the audit shapes
+
+# Dense moves over the CLUSTER-SHARDED D (no replicated f32[k,d] anywhere):
+# per epoch one s32[n] assignment all-gather (graph lookup) and per batch
+# one s32[n, kappa+1] candidate-cluster-id all-gather; all-reduces are the
+# 2 pre-loop scalar psums (n, ||x||^2 totals), per batch the candidate-row
+# payload psum (rows, kappa+1, d) + two f32[k] count/weight partials + the
+# transposed f32[d, k] centroid-sum psum, per epoch the s32[] moves counter
+# + the distortion psum, plus the final distortion psum after the loop.
+_ENGINE_DENSE_BUDGET: Dict[str, int] = {
+    "all-gather": ITERS * (1 + _NB * 1),
+    "all-reduce": 2 + ITERS * (_NB * 4 + 2) + 1,
+}
+
+# Sparse moves + bf16 wire: the per-batch exchange adds 2 index all-gathers
+# and the u16[n, d] row payload on top of the candidate-id gather; the
+# dense per-batch stats psums collapse to the single candidate-row payload
+# psum (scatter updates stay local), keeping the moves + distortion psums
+# per epoch and the same 2+1 pre/post scalars.
+_ENGINE_SPARSE_BUDGET: Dict[str, int] = {
+    "all-gather": ITERS * (1 + _NB * 4),
+    "all-reduce": 2 + ITERS * (_NB * 1 + 2) + 1,
+}
+
+# ShardedIvf.search: the coarse probe exchanges per-shard owned-cell
+# rankings (top-min(nprobe, k_slab) distances + ids in the (L, q) layout —
+# 2 all-gathers) and the scan result merges per-shard candidate ids +
+# distances on the same sync (2 more).  Telemetry adds its 2 scan-counter
+# psums; the codec'd scans must keep this schedule unchanged.
+_IVF_BUDGET: Dict[str, int] = {"all-gather": 4}
+
+# GraphBuilder.build at the audit shapes: k0 = 8 -> _LEVELS = 3 bisection
+# levels, _REFINE = 4 exact-median refine iterations per level
+# (two_means_dist defaults).  all-gathers: X ONCE per build (the PR 4
+# claim); the guided pass — a lax.cond branch, so the parser counts its ops
+# once, matching the round-0 skip — pays the s32[n_pad] assignment + 2
+# sparse index gathers + the s32[n_pad, kappa+1] candidate ids + one
+# (R, d, k0) guided-stats fsum partial (5); the tree pays one (R, d, k0)
+# tot_T fsum per level plus one s1_T fsum per refine iteration; the member
+# table pays the (cap, k0) table + spill-list gathers per round.
+# all-reduces: per level per round 1 cntc seg-psum + 4 seed pmins + 2
+# (d, k0) seed-vector psums + _REFINE * (8 radix histogram psums + 1 n1
+# seg-psum) + 8 final-split radix psums; the guided branch pays its
+# candidate-row payload psum + k0-counts psum + moves psum (3); the member
+# table 1 overflow psum per round.  collective-permute: the 2 (chunk,
+# kappa) candidate-ring rotations (f32 distances + s32 ids).
+_LEVELS, _REFINE = 3, 4
 _GRAPH_BUILD_BUDGET: Dict[str, int] = {
-    "all-gather": 1 + TAU * 4,
-    "all-reduce": TAU * 1,
+    "all-gather": 1 + 5 + TAU * (_LEVELS * (1 + _REFINE) + 2),
+    "all-reduce": (TAU * _LEVELS * (1 + 4 + 2 + _REFINE * 9 + 8)
+                   + 3 + TAU * 1),
     "collective-permute": 2,
 }
 

@@ -5,11 +5,14 @@ Layout (DESIGN.md §4):
   * the assignment vector is sharded; a replicated copy for *candidate
     lookup* (neighbour ids are global) is refreshed once per epoch via
     all_gather;
-  * cluster statistics (D, cnt) are replicated and kept exactly consistent
-    per batch — either by a psum of the dense (k, d) move deltas, or
-    (``sparse_updates``) by all-gathering the moved sample vectors +
-    (src, dst) ids and applying the scatter locally on every replica
-    (O(R*B*d) wire bytes instead of O(k*d) — §Perf).
+  * the composite vectors D are CLUSTER-sharded (shard s owns the
+    contiguous block [s*k/R, (s+1)*k/R)); scoring materialises only the
+    batch's candidate rows via the candidate-row exchange
+    (``engine._exchange_rows``: all-gather of the id union + a psum of
+    owner-masked row contributions, O(R·B·C·d) wire, no (k, d) operand),
+    and updates either scatter only owned rows (``sparse_updates``) or psum
+    the move deltas in the audit-neutral transposed (d, k) layout.  The 1-D
+    ``cnt`` stays replicated so the leaver guard is topology-agnostic.
 
 ``ShardedEngine`` is the one entry point: a mesh + ``EngineConfig`` pair
 with jitted ``epoch`` / ``run`` / ``distortion`` shard_map programs.  The
@@ -24,10 +27,12 @@ epoch loop, per-epoch O(k·d) distortion, and the ``min_move_frac`` early
 stop inside ONE trace across the mesh — one host sync per run, matching the
 single-device ``engine.run``.
 
-Row counts must divide the mesh (shard_map needs equal shards): callers
-with ``n % R != 0`` cluster the first ``usable_rows(n, R)`` rows and handle
-the remainder out-of-band (``examples/cluster_large.py`` assigns them to
-their nearest centroid post-hoc).
+Row counts need NOT divide the mesh: ``ShardedEngine`` zero-pads X/G/assign
+up to the next multiple of R and passes an in-trace validity mask
+(``rows >= n`` contribute nothing to scores, stats, moves, or telemetry),
+so ``n % R != 0`` runs natively — no out-of-band truncation or post-hoc
+remainder assignment.  ``usable_rows`` remains for callers that want the
+old explicit-truncation behaviour.
 
 Graph construction shards with the same conventions:
 ``sharded_graph_builder(mesh, cfg)`` returns a ``core.graph_build``
@@ -38,13 +43,17 @@ O(1) host syncs per build, bit-exact against the single-device build with
 
 IVF serving shards by CELL rather than by row: ``ShardedIvf`` re-packs an
 ``IvfIndex``'s inverted lists into equal per-shard slabs
-(``index.ivf.shard_lists``), keeps queries and centroids replicated, and
-runs probe -> local list scan -> one all-gather of per-shard local top-k ->
-in-trace merge inside ONE shard_map trace per query batch.  The local scans
-return RAW partial distances and the merge is the kernels' own stable
-first-minimum selection, so the sharded search is bit-exact with the
-single-device ``index.probe.search`` (no ``n % R`` constraint: slab padding
-rows carry id -1 and can never surface).
+(``index.ivf.shard_lists``), keeps queries replicated, and shards the
+coarse quantizer round-robin over cells: each shard probes only its own
+centroid slab (ceil(k / R) cells), and the per-shard top-min(nprobe,
+k_slab) partials are exchanged and merged with the same first-min selection
+(``index.probe.merge_probe_cells``) — the full (k, d) centroid matrix is
+never materialised.  Search then runs local list scan -> one all-gather of
+per-shard local top-k -> in-trace merge inside ONE shard_map trace per
+query batch.  The local scans return RAW partial distances and the merge is
+the kernels' own stable first-minimum selection, so the sharded search is
+bit-exact with the single-device ``index.probe.search`` (no ``n % R``
+constraint: slab padding rows carry id -1 and can never surface).
 """
 from __future__ import annotations
 
@@ -71,9 +80,10 @@ def usable_rows(n: int, shards: int) -> int:
 class ShardedEngine:
     """Mesh-resident clustering engine: one API for every sharded caller.
 
-    Holds (mesh, ``EngineConfig``, candidate kind) and exposes three jitted
-    shard_map entry points over row-sharded X/G/assign and replicated
-    (D, cnt):
+    Holds (mesh, ``EngineConfig``, candidate kind) and exposes three entry
+    points over row-sharded X/G/assign, CLUSTER-sharded D, and replicated
+    cnt (callers still pass and receive the full (k, d) D — shard_map
+    slices/reassembles the contiguous cluster blocks at the boundary):
 
       ``epoch(X, G, assign, D, cnt, key)``  -> (assign, D, cnt, moves)
           one pass (``engine.sharded_epoch_body``);
@@ -89,6 +99,12 @@ class ShardedEngine:
     ``kind`` selects the candidate source ('graph' | 'dense' | 'probe'); G
     is the neighbour-id array for 'graph' and ignored otherwise (pass any
     row-sharded int32 array of matching leading dim).
+
+    ``n % R != 0`` is handled natively: the wrapper zero-pads the row
+    arrays to the next multiple of R and threads a validity mask into the
+    trace (padded rows contribute zero to scores, stats, moves, and
+    telemetry); the returned assignment is sliced back to n rows.  k must
+    divide R (the cluster blocks are equal).
     """
 
     def __init__(self, mesh: Mesh, cfg: EngineConfig = EngineConfig(), *,
@@ -110,37 +126,91 @@ class ShardedEngine:
                 return probe_source(probe_p)
             return dense_source()
 
-        def epoch_fn(X, G, assign, D, cnt, key):
+        def epoch_fn(X, G, assign, D, cnt, key, cix, rid, n):
             # keep the public epoch API a 4-tuple: drop the telemetry-only
-            # `prop` counter (run() is where telemetry surfaces)
+            # `prop` counter (run() is where telemetry surfaces).  cix is a
+            # sharded arange(k) — its first element is this shard's cluster
+            # offset, derived from data rather than axis_index (XLA:CPU
+            # forced-host partitioning hazard); rid/n give the padded-row
+            # validity mask.
             out = sharded_epoch_body(X, source(G), assign, D, cnt, key,
-                                     cfg=cfg, data_axes=self.data_axes)
+                                     cfg=cfg, data_axes=self.data_axes,
+                                     coff=cix[0], valid=rid < n)
             return out[:4]
 
-        def run_fn(X, G, assign, D, cnt, key):
+        def run_fn(X, G, assign, D, cnt, key, cix, rid, n):
             return sharded_run_body(X, source(G), assign, D, cnt, key,
-                                    cfg=cfg, data_axes=self.data_axes)
+                                    cfg=cfg, data_axes=self.data_axes,
+                                    coff=cix[0], valid=rid < n)
 
-        def dist_fn(X, assign, D, cnt):
+        def dist_fn(X, assign, D, cnt, cix, rid, n):
+            # diagnostics recompute against the sharded D: materialise each
+            # local row's OWN centroid via the candidate-row exchange (no
+            # (k, d) operand anywhere, O(R·n_loc·d) wire)
+            from repro.core.engine import _Comm, _exchange_rows
+            comm = _Comm(self.data_axes)
             Xf = X.astype(jnp.float32)
-            C = D / jnp.maximum(cnt, 1.0)[:, None]
-            diff = Xf - C[assign]
+            rows = _exchange_rows(assign[:, None], D, cix[0], comm)[:, 0]
+            C_own = rows / jnp.maximum(cnt[assign], 1.0)[:, None]
+            vf = (rid < n).astype(jnp.float32)
+            diff = (Xf - C_own) * vf[:, None]
             tot = jax.lax.psum(jnp.sum(diff * diff), self.data_axes)
-            n = jax.lax.psum(jnp.float32(X.shape[0]), self.data_axes)
-            return tot / n
+            nn = jax.lax.psum(jnp.sum(vf), self.data_axes)
+            return tot / nn
 
-        self.epoch = jax.jit(shard_map(
-            epoch_fn, mesh=mesh, in_specs=(row, row, row, rep, rep, rep),
-            out_specs=(row, rep, rep, rep), check_rep=False))
+        self._epoch = jax.jit(shard_map(
+            epoch_fn, mesh=mesh,
+            in_specs=(row, row, row, row, rep, rep, row, row, rep),
+            out_specs=(row, row, rep, rep), check_rep=False))
         # trailing rep spec covers `tel` — P() over the disabled path's None
         # (an empty pytree) is a no-op, so one spec list serves both modes
-        self.run = jax.jit(shard_map(
-            run_fn, mesh=mesh, in_specs=(row, row, row, rep, rep, rep),
-            out_specs=(row, rep, rep, rep, rep, rep, rep, rep),
+        self._run = jax.jit(shard_map(
+            run_fn, mesh=mesh,
+            in_specs=(row, row, row, row, rep, rep, row, row, rep),
+            out_specs=(row, row, rep, rep, rep, rep, rep, rep),
             check_rep=False))
-        self.distortion = jax.jit(shard_map(
-            dist_fn, mesh=mesh, in_specs=(row, row, rep, rep),
+        self._distortion = jax.jit(shard_map(
+            dist_fn, mesh=mesh,
+            in_specs=(row, row, row, rep, row, row, rep),
             out_specs=rep, check_rep=False))
+
+    def _pad(self, k: int, X, *rows):
+        """Zero-pad row-sharded arrays to n_pad = ceil(n/R)*R; returns the
+        padded arrays plus the (cix, rid, n) mask inputs."""
+        R = self.shards
+        assert k % R == 0, f"k={k} must divide the {R}-way mesh"
+        n = X.shape[0]
+        n_pad = -(-n // R) * R
+        pad = n_pad - n
+        if pad:
+            X = jnp.concatenate(
+                [jnp.asarray(X),
+                 jnp.zeros((pad,) + X.shape[1:], jnp.asarray(X).dtype)])
+            rows = tuple(
+                jnp.concatenate(
+                    [jnp.asarray(r),
+                     jnp.zeros((pad,) + r.shape[1:], jnp.asarray(r).dtype)])
+                for r in rows)
+        cix = jnp.arange(k, dtype=jnp.int32)
+        rid = jnp.arange(n_pad, dtype=jnp.int32)
+        return (X,) + rows + (cix, rid, jnp.int32(n))
+
+    def epoch(self, X, G, assign, D, cnt, key):
+        n = X.shape[0]
+        Xp, Gp, ap, cix, rid, nn = self._pad(D.shape[0], X, G, assign)
+        assign, D, cnt, moves = self._epoch(Xp, Gp, ap, D, cnt, key, cix,
+                                            rid, nn)
+        return assign[:n], D, cnt, moves
+
+    def run(self, X, G, assign, D, cnt, key):
+        n = X.shape[0]
+        Xp, Gp, ap, cix, rid, nn = self._pad(D.shape[0], X, G, assign)
+        out = self._run(Xp, Gp, ap, D, cnt, key, cix, rid, nn)
+        return (out[0][:n],) + tuple(out[1:])
+
+    def distortion(self, X, assign, D, cnt):
+        Xp, ap, cix, rid, nn = self._pad(D.shape[0], X, assign)
+        return self._distortion(Xp, ap, D, cnt, cix, rid, nn)
 
     def __repr__(self):
         return (f"ShardedEngine(shards={self.shards}, kind={self.kind!r}, "
@@ -199,15 +269,34 @@ class ShardedIvf:
         self.d = index.vecs.shape[1]
         row, rep = (NamedSharding(mesh, P(self.data_axes)),
                     NamedSharding(mesh, P()))
-        self.centroids = jax.device_put(index.centroids, rep)
-        # the codec (small pytree of scales / codebooks) is replicated like
-        # the coarse quantizer: every shard builds the same per-query LUT
+        # the codec (small pytree of scales / codebooks) is replicated:
+        # every shard builds the same per-query LUT
         self.codec = (None if index.codec is None
                       else jax.device_put(index.codec, rep))
         # place the slabs on the mesh NOW: leaving them on the default
         # device would make every search() dispatch re-distribute the whole
         # packed database to satisfy the shard_map in_specs
         p = shard_lists(index, self.shards)
+        # coarse quantizer sharded round-robin over cells, NOT by list owner:
+        # the merged probe result is replicated either way, and the list
+        # owner map balances ROWS, so its cell counts skew — the probe's
+        # wall-clock is the max slab, and round-robin pins that at
+        # ceil(k / R).  k_slab holes carry cell id -1 (probed at +inf, can
+        # never surface while real cells remain — and nprobe <= k).
+        import numpy as np
+        R = self.shards
+        cent = np.asarray(index.centroids,  # lint: boundary(one-time setup)
+                          np.float32)
+        k_slab = max(-(-self.k // R), 1)
+        cslab = np.zeros((R * k_slab, self.d), np.float32)
+        ccid = np.full((R * k_slab,), -1, np.int32)
+        for s in range(R):
+            cells = np.arange(s, self.k, R)
+            cslab[s * k_slab:s * k_slab + len(cells)] = cent[cells]
+            ccid[s * k_slab:s * k_slab + len(cells)] = cells
+        self.k_slab = k_slab
+        self.cslab = jax.device_put(jnp.asarray(cslab), row)
+        self.ccid = jax.device_put(jnp.asarray(ccid), row)
         self.parts = p._replace(
             vecs=jax.device_put(p.vecs, row),
             ids=jax.device_put(p.ids, row),
@@ -254,10 +343,11 @@ class ShardedIvf:
             assert self.codec is not None and self.codec.kind == codec, \
                 (codec, None if self.codec is None else self.codec.kind)
             prog = self._prog(topk, nprobe, qgroup, telemetry, codec, rerank)
-            return prog(Q, p.vecs, p.ids, p.starts, p.caps, self.centroids,
-                        p.codes, p.vnorm, self.codec)
+            return prog(Q, p.vecs, p.ids, p.starts, p.caps, self.cslab,
+                        self.ccid, p.codes, p.vnorm, self.codec)
         prog = self._prog(topk, nprobe, qgroup, telemetry, "f32", None)
-        return prog(Q, p.vecs, p.ids, p.starts, p.caps, self.centroids)
+        return prog(Q, p.vecs, p.ids, p.starts, p.caps, self.cslab,
+                    self.ccid)
 
     def _prog(self, topk: int, nprobe: int, qgroup, telemetry: bool,
               codec: str, rerank):
@@ -267,20 +357,45 @@ class ShardedIvf:
         from repro.index import quantize as _q
         from repro.index.probe import (_rerank_depth, build_group_map,
                                        build_tile_map, exact_rerank,
-                                       merge_shard_topk)
+                                       merge_probe_cells, merge_shard_topk)
         from repro.kernels import ops as kops
-        from repro.kernels.ref import finalize_d2
+        from repro.kernels.ref import finalize_d2, stable_topk
         from repro.obs import telemetry as obs_tel
         bl = self.block_rows
         max_tiles = self.max_list_tiles
         null_loc = self.parts.rows_loc // bl - 1    # last local tile: holes
         axes = self.data_axes
         R = self.shards
+        k_slab = self.k_slab
         cap = max(self.capacity_rows, 1)
         grouped = qgroup is not None and qgroup > 1
         depth = _rerank_depth(topk, rerank) if codec != "f32" else 0
         bpr = (4 * self.d if codec == "f32"
                else _q.bytes_per_row(self.codec, self.d))
+
+        def probe_cells(Q, cslab_l, ccid_l):
+            """Sharded coarse probe: rank owned cells, exchange, merge.
+
+            Each shard scores only its k_slab = ceil(k / R) slab centroids
+            on the RAW probe partials (bitwise equal to the full scan's
+            entries for those cells), the per-shard top-min(nprobe, k_slab)
+            lists ride
+            one (L, q)-layout all-gather, and ``merge_probe_cells`` keeps
+            the kernels' first-min tie-break — so the merged cell set (and,
+            for distinct partials, its order) matches the single-device
+            ``kops.probe_centroids`` exactly, without a (k, d) operand.
+            """
+            Qf = Q.astype(jnp.float32)
+            Cf = cslab_l.astype(jnp.float32)
+            csq = jnp.sum(Cf * Cf, axis=-1)
+            part = csq[None, :] - 2.0 * (Qf @ Cf.T)      # (q, k_slab)
+            part = jnp.where((ccid_l >= 0)[None, :], part, jnp.inf)
+            d_l, i_l = stable_topk(
+                part, jnp.broadcast_to(ccid_l, part.shape),
+                min(nprobe, k_slab))
+            gd = jax.lax.all_gather(d_l.T, axes, tiled=True)
+            gi = jax.lax.all_gather(i_l.T, axes, tiled=True)
+            return merge_probe_cells(gd, gi, nprobe)
 
         def tail(Q, scaps, cids, lid, lod):
             """All-gather local top-k -> stable merge -> finalize (+tel)."""
@@ -301,10 +416,10 @@ class ShardedIvf:
                 scanned_bytes=total.astype(jnp.float32) * bpr)
             return out + (tel,)
 
-        def body(Q, svecs, sids, sstarts, scaps, C):
+        def body(Q, svecs, sids, sstarts, scaps, cslab_l, ccid_l):
             q = Q.shape[0]
-            # replicated probe: every shard computes the same cell ids
-            cids, _ = kops.probe_centroids(Q, C, nprobe)
+            # sharded probe; the merged cids are replicated on every shard
+            cids = probe_cells(Q, cslab_l, ccid_l)
             tm = build_tile_map(cids, sstarts, scaps, max_tiles=max_tiles,
                                 block_rows=bl, null_tile=null_loc)
             if grouped:
@@ -326,9 +441,9 @@ class ShardedIvf:
                                          topk=topk, raw=True)
             return tail(Q, scaps, cids, lid, lod)
 
-        def body_codec(Q, svecs, sids, sstarts, scaps, C, scodes, svnorm,
-                       cdc):
-            cids, _ = kops.probe_centroids(Q, C, nprobe)
+        def body_codec(Q, svecs, sids, sstarts, scaps, cslab_l, ccid_l,
+                       scodes, svnorm, cdc):
+            cids = probe_cells(Q, cslab_l, ccid_l)
             tm = build_tile_map(cids, sstarts, scaps, max_tiles=max_tiles,
                                 block_rows=bl, null_tile=null_loc)
             # replicated LUT (small: q * M * W f32) — codes stay sharded
@@ -349,13 +464,13 @@ class ShardedIvf:
         if codec != "f32":
             prog = jax.jit(shard_map(
                 body_codec, mesh=self.mesh,
-                in_specs=(rep, row, row, row, row, rep, row, row, rep),
+                in_specs=(rep, row, row, row, row, row, row, row, row, rep),
                 out_specs=out_specs, check_rep=False))
         else:
             prog = jax.jit(shard_map(
                 body, mesh=self.mesh,
-                in_specs=(rep, row, row, row, row, rep), out_specs=out_specs,
-                check_rep=False))
+                in_specs=(rep, row, row, row, row, row, row),
+                out_specs=out_specs, check_rep=False))
         self._progs[key] = prog
         return prog
 

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 
 from repro.core import permute
 from repro.kernels import ops as kops
+from repro.kernels import ref as kref
 from repro.obs import telemetry as obs_tel
 
 
@@ -159,6 +160,45 @@ def _score_gathered(xb, u, cand, D, cnt, mode, eps, force):
     return moved, want_v
 
 
+def _score_from_rows(xb, u, cand, rows, cnt, mode, eps):
+    """Best move per sample from *materialised* candidate centroid rows.
+
+    ``cand`` is (B, C) candidate cluster ids whose LAST column is the
+    sample's own cluster u (so the u-terms of the bkm score come from
+    ``rows[:, -1]`` without a second exchange); ``rows`` is the matching
+    (B, C, d) slab of composite vectors.  This is the scoring path of the
+    sharded-centroid topology: the mesh fills ``rows`` via the candidate-row
+    exchange (`_exchange_rows`) and the single-device R-way emulation fills
+    it with a plain ``D[cand]`` gather — element-for-element the same
+    values, so the two topologies share every downstream flop bit-exactly.
+    """
+    dots = jnp.einsum("bd,bcd->bc", xb, rows)            # (B, C)
+    dsq = jnp.sum(rows * rows, axis=-1)                  # (B, C)
+    xsq = jnp.sum(xb * xb, axis=-1)                      # (B,)
+    nv = cnt[cand]                                       # (B, C)
+    is_self = cand == u[:, None]
+    if mode == "bkm":
+        gain_v = ((dsq + 2.0 * dots + xsq[:, None]) / (nv + 1.0)
+                  - jnp.where(nv > 0, dsq / jnp.maximum(nv, 1.0), 0.0))
+        du_sq = dsq[:, -1]
+        x_du = dots[:, -1]
+        nu = cnt[u]
+        num_u = du_sq - 2.0 * x_du + xsq
+        resid = jnp.where(nu > 1, num_u / jnp.maximum(nu - 1.0, 1.0), 0.0)
+        score = gain_v + (resid - du_sq / jnp.maximum(nu, 1.0))[:, None]
+        score = jnp.where(is_self, -jnp.inf, score)
+        best = jnp.argmax(score, axis=1)
+        moved = jnp.take_along_axis(score, best[:, None], 1)[:, 0] > eps
+    else:
+        csq_n = jnp.maximum(nv, 1.0)
+        d2 = dsq / (csq_n * csq_n) - 2.0 * dots / csq_n
+        d2 = jnp.where(nv > 0, d2, jnp.inf)
+        best = jnp.argmin(d2, axis=1)
+        moved = ~jnp.take_along_axis(is_self, best[:, None], 1)[:, 0]
+    want_v = jnp.take_along_axis(cand, best[:, None], 1)[:, 0]
+    return moved, want_v
+
+
 def _score_dense(xb, u, D, cnt, mode, eps):
     """Best move per sample over ALL k clusters, via one matmul (MXU path)."""
     k = D.shape[0]
@@ -224,7 +264,223 @@ def _scatter_moves(D, cnt, u, v, gx, gw):
     return Dc[:, :-1], Dc[:, -1]
 
 
-def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
+# ---------------------------------------------------------------------------
+# sharded-centroid helpers: D lives cluster-sharded as D_loc = D[coff:coff+k_loc]
+# ---------------------------------------------------------------------------
+
+def _gather_stacked(x, comm: _Comm):
+    """All-gather with a leading device axis: (B, ...) -> (R, B, ...)."""
+    nd = x.ndim
+    for ax in comm.data_axes:
+        x = jax.lax.all_gather(x, ax, tiled=False)
+    return x.reshape((-1,) + x.shape[x.ndim - nd:])
+
+
+def _gather_minor(x, comm: _Comm):
+    """All-gather concatenated along the LAST axis: (d, B) -> (d, R*B).
+
+    Used to replicate the per-shard batch rows for all-k scoring against
+    cluster-sharded centroids.  The transposed layout keeps the replicated
+    operand's leading dim at d, which the replication audit does not track
+    (a (R*B, d) gather would surface as a f32[n, d] finding in the dense
+    variant where R*B == n)."""
+    for ax in comm.data_axes:
+        x = jax.lax.all_gather(x, ax, axis=x.ndim - 1, tiled=True)
+    return x
+
+
+def _exchange_rows(ids, D_loc, coff, comm: _Comm):
+    """Candidate-row exchange: materialise D[ids] against a sharded D.
+
+    ``ids`` is this shard's (B, C) candidate cluster ids.  All shards gather
+    the union of candidate ids (s32, O(R·B·C) wire — no (k, d) operand), each
+    shard contributes the rows it owns (zeros elsewhere), and a psum
+    reconstitutes the full rows.  Every cluster has exactly ONE owner, so
+    each psum element reduces owner-value + zeros — bit-exact in any
+    reduction order, which is what lets the single-device emulation replace
+    the whole exchange with a plain ``D[ids]`` gather.  The gathered id
+    block keeps its minor dimension at C < d, so no replicated 2-D operand
+    with a tracked leading dim reappears in the audit.
+    """
+    B = ids.shape[0]
+    k_loc = D_loc.shape[0]
+    gids = _all_gather(ids, comm)                        # (R*B, C) s32
+    loc = gids - coff
+    own = (loc >= 0) & (loc < k_loc)
+    rows = jnp.where(own[..., None],
+                     D_loc[jnp.clip(loc, 0, k_loc - 1)], 0.0)
+    rows = _psum(rows, comm)                             # (R*B, C, d)
+    s = coff // k_loc
+    return jax.lax.dynamic_slice_in_dim(rows, s * B, B, axis=0)
+
+
+def _probe_sharded(xb, D_loc, cnt, coff, p, comm: _Comm):
+    """Top-p probe against cluster-sharded centroids.
+
+    Every shard only holds k_loc centroids, so the batch rows (not the
+    centroids) travel: one transposed (d, R*B) row gather, then each shard
+    ranks ALL gathered rows against its own cells on the RAW probe partials
+    (``||c||² - 2 x·c``), and the per-shard top-min(p, k_loc) partials are
+    exchanged in the (L, R*B) layout and merged with the same first-minimum
+    tie-break the probe kernels use.  Since every shard surfaces its
+    min(p, k_loc) best cells for every row, the union provably contains the
+    global top-p; blocks are disjoint, so no id appears twice.
+    """
+    k = cnt.shape[0]
+    B = xb.shape[0]
+    k_loc = D_loc.shape[0]
+    s = coff // k_loc
+    xa = _gather_minor(xb.T, comm).T                     # (R*B, d)
+    cnt_loc = jax.lax.dynamic_slice(cnt, (coff,), (k_loc,))
+    C_loc = D_loc / jnp.maximum(cnt_loc, 1.0)[:, None]
+    csq = jnp.sum(C_loc * C_loc, axis=-1)
+    part = csq[None, :] - 2.0 * (xa @ C_loc.T)           # (R*B, k_loc)
+    ids0 = jnp.broadcast_to(coff + jnp.arange(k_loc, dtype=jnp.int32),
+                            part.shape)
+    d_l, i_l = kref.stable_topk(part, ids0, min(p, k_loc))
+    gd = _all_gather(d_l.T, comm)                        # (R*p_loc, R*B)
+    gi = _all_gather(i_l.T, comm)
+    # first-min merge in the transposed layout (leading dim R*p_loc stays
+    # out of the audit's tracked roles); rank rows are shard-major just
+    # like a stable_topk over the concatenated candidate list would see
+    col = jnp.arange(gd.shape[1])
+    outs = []
+    for _ in range(min(p, k)):
+        j = jnp.argmin(gd, axis=0)                       # (R*B,) first-min
+        outs.append(gi[j, col])
+        gd = gd.at[j, col].set(jnp.inf)
+    sel_all = jnp.stack(outs, axis=1)                    # (R*B, min(p, k))
+    return jax.lax.dynamic_slice_in_dim(sel_all, s * B, B, axis=0)
+
+
+def _dense_block_scores(xa, ua, D_blk, cnt, coff_blk, mode):
+    """Per-block partial dense scores -> block-best (value, global id) rows.
+
+    Shared VERBATIM by the mesh (each shard scores the gathered rows
+    against its own block) and the single-device emulation (loop over the
+    R blocks), so the merged first-max/min over the stacked per-block bests
+    sees bitwise-identical operands in both topologies.
+    """
+    k_loc = D_blk.shape[0]
+    ids_loc = coff_blk + jnp.arange(k_loc, dtype=jnp.int32)
+    dsq = jnp.sum(D_blk * D_blk, axis=-1)                # (k_loc,)
+    dots = xa @ D_blk.T                                  # (R*B, k_loc)
+    xsq = jnp.sum(xa * xa, axis=-1)
+    nv = cnt[ids_loc][None, :]
+    is_self = ids_loc[None, :] == ua[:, None]
+    if mode == "bkm":
+        gain_v = ((dsq[None, :] + 2.0 * dots + xsq[:, None]) / (nv + 1.0)
+                  - jnp.where(nv > 0, dsq[None, :] / jnp.maximum(nv, 1.0),
+                              0.0))
+        part = jnp.where(is_self, -jnp.inf, gain_v)
+        bi = jnp.argmax(part, 1)
+    else:
+        csq_n = jnp.maximum(nv, 1.0)
+        d2 = dsq[None, :] / (csq_n * csq_n) - 2.0 * dots / csq_n
+        part = jnp.where(nv > 0, d2, jnp.inf)
+        bi = jnp.argmin(part, 1)
+    bv = jnp.take_along_axis(part, bi[:, None], 1)[:, 0]
+    return bv, ids_loc[bi].astype(jnp.int32)
+
+
+def _dense_moved_bkm(xb, u, Du, cnt, gain, eps):
+    """bkm acceptance test from the merged best gain + the row's own-cluster
+    terms (constant per row, hence argmax-invariant — only this eps test
+    needs them)."""
+    du_sq = jnp.sum(Du * Du, axis=-1)
+    x_du = jnp.sum(xb * Du, axis=-1)
+    xsq = jnp.sum(xb * xb, axis=-1)
+    nu = cnt[u]
+    num_u = du_sq - 2.0 * x_du + xsq
+    resid = jnp.where(nu > 1, num_u / jnp.maximum(nu - 1.0, 1.0), 0.0)
+    return (gain + resid - du_sq / jnp.maximum(nu, 1.0)) > eps
+
+
+def _score_dense_sharded(xb, u, D_loc, cnt, mode, eps, coff, comm: _Comm):
+    """Dense all-k scoring with cluster-sharded centroids.
+
+    The batch rows travel instead of the centroids: one transposed
+    (d, R*B) row gather, each shard scores EVERY gathered row against its
+    own k_loc block, and only the per-shard best (score, id) pairs are
+    exchanged — O(R²·B) wire instead of the (k, d) all-gather.  First-max
+    (min for lloyd) over the shard axis after a first-max within each block
+    reproduces the single-device lowest-index tie-break, because shards own
+    ascending contiguous cluster blocks.
+    """
+    B = xb.shape[0]
+    k_loc = D_loc.shape[0]
+    s = coff // k_loc
+    xa = _gather_minor(xb.T, comm).T                     # (R*B, d)
+    ua = _all_gather(u, comm)                            # (R*B,)
+    bv, bid = _dense_block_scores(xa, ua, D_loc, cnt, coff, mode)
+    gbv = _gather_stacked(bv, comm)                      # (R, R*B)
+    gbi = _gather_stacked(bid, comm)
+    pick = (jnp.argmax if mode == "bkm" else jnp.argmin)(gbv, axis=0)
+    best_all = jnp.take_along_axis(gbi, pick[None], 0)[0].astype(jnp.int32)
+    best = jax.lax.dynamic_slice_in_dim(best_all, s * B, B)
+    if mode == "bkm":
+        gain_all = jnp.take_along_axis(gbv, pick[None], 0)[0]
+        gain = jax.lax.dynamic_slice_in_dim(gain_all, s * B, B)
+        Du = _exchange_rows(u[:, None], D_loc, coff, comm)[:, 0]
+        moved = _dense_moved_bkm(xb, u, Du, cnt, gain, eps)
+    else:
+        moved = best != u
+    return moved, best
+
+
+def _score_dense_emulated(xb, u, D, cnt, mode, eps, R):
+    """Single-device mirror of ``_score_dense_sharded`` over the whole
+    concatenated batch: same per-block partial shapes, same stacked merge,
+    and the owned-row psum exchange collapses to a plain ``D[u]`` gather —
+    bitwise-equal decisions (the cross-topology parity contract)."""
+    k = cnt.shape[0]
+    assert k % R == 0
+    k_loc = k // R
+    outs = [_dense_block_scores(xb, u, D[t * k_loc:(t + 1) * k_loc], cnt,
+                                t * k_loc, mode) for t in range(R)]
+    gbv = jnp.stack([o[0] for o in outs])                # (R, R*B)
+    gbi = jnp.stack([o[1] for o in outs])
+    pick = (jnp.argmax if mode == "bkm" else jnp.argmin)(gbv, axis=0)
+    best = jnp.take_along_axis(gbi, pick[None], 0)[0].astype(jnp.int32)
+    if mode == "bkm":
+        gain = jnp.take_along_axis(gbv, pick[None], 0)[0]
+        moved = _dense_moved_bkm(xb, u, D[u], cnt, gain, eps)
+    else:
+        moved = best != u
+    return moved, best
+
+
+def _score_sharded(xb, u, idx, lookup, D_loc, cnt, source, cfg, comm, coff):
+    """Scoring inside the mesh: sharded D, candidate-row exchange."""
+    if source.kind == "dense":
+        return _score_dense_sharded(xb, u, D_loc, cnt, cfg.mode, cfg.eps,
+                                    coff, comm)
+    if source.kind == "graph":
+        cand = lookup[source.G[idx]]
+    else:
+        cand = _probe_sharded(xb, D_loc, cnt, coff, source.p, comm)
+    cand_u = jnp.concatenate([cand, u[:, None]], axis=1)
+    rows = _exchange_rows(cand_u, D_loc, coff, comm)
+    return _score_from_rows(xb, u, cand_u, rows, cnt, cfg.mode, cfg.eps)
+
+
+def _score_local(xb, u, idx, lookup, D, cnt, source, cfg):
+    """Scoring with the full (k, d) D on one device (incl. R-way emulation)."""
+    cand = _candidates(source, xb, u, idx, lookup, D, cnt, cfg.force)
+    if cand is None:
+        return _score_dense(xb, u, D, cnt, cfg.mode, cfg.eps)
+    if cfg.shards > 1 and source.kind == "graph":
+        # mirror the mesh's candidate-row-exchange scoring bit-exactly: the
+        # psum of owner-masked contributions reduces to this plain gather
+        cand_u = jnp.concatenate([cand, u[:, None]], axis=1)
+        return _score_from_rows(xb, u, cand_u, D[cand_u], cnt, cfg.mode,
+                                cfg.eps)
+    return _score_gathered(xb, u, cand, D, cnt, cfg.mode, cfg.eps,
+                           cfg.force)
+
+
+def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm,
+               coff=None, valid=None):
     """One batched candidate->score->move step (both topologies).
 
     idx indexes rows of the *local* X/assign; `lookup` is the (global)
@@ -232,31 +488,44 @@ def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
     shard_map collective hooks; None means single device, where
     ``cfg.sparse_updates`` / ``cfg.payload_bf16`` reproduce the sharded
     sparse path's arithmetic exactly (same scatter over the same row order).
+    Under ``comm`` the centroid statistics arrive cluster-sharded: ``D`` is
+    this shard's (k_loc, d) block of composite vectors (global rows
+    [coff, coff + k_loc)) while ``cnt`` stays the full replicated (k,) —
+    1-D, so it never re-enters the replication audit — which keeps the
+    leaver guard and every ``cnt[...]`` lookup topology-agnostic.  ``valid``
+    masks padded rows (rows >= n) out of proposals, stats and telemetry.
     """
-    k = D.shape[0]
+    k = cnt.shape[0]
     xb = X[idx].astype(jnp.float32)
     u = assign[idx]
 
-    def score(xb_s, u_s, idx_s):
-        cand = _candidates(source, xb_s, u_s, idx_s, lookup, D, cnt,
-                           cfg.force)
-        if cand is None:
-            return _score_dense(xb_s, u_s, D, cnt, cfg.mode, cfg.eps)
-        return _score_gathered(xb_s, u_s, cand, D, cnt, cfg.mode, cfg.eps,
-                               cfg.force)
-
-    if comm is None and cfg.shards > 1:
+    if comm is not None:
+        moved, want_v = _score_sharded(xb, u, idx, lookup, D, cnt, source,
+                                       cfg, comm, coff)
+    elif cfg.shards > 1 and source.kind == "dense":
+        # the mesh gathers all R shards' batch rows and block-merges, so the
+        # emulation scores the whole concatenated batch at once in the same
+        # (R*B, k_loc)-blocked shapes
+        moved, want_v = _score_dense_emulated(xb, u, D, cnt, cfg.mode,
+                                              cfg.eps, cfg.shards)
+    elif cfg.shards > 1:
         # score per emulated shard with the sharded program's exact (bs, C)
         # shapes: XLA reductions are only bitwise-reproducible at equal
         # shapes, and the all-or-nothing leaver guard amplifies a single
         # flipped borderline proposal into a whole-cluster divergence
         R, bs = cfg.shards, idx.shape[0] // cfg.shards
-        parts = [score(xb[s * bs:(s + 1) * bs], u[s * bs:(s + 1) * bs],
-                       idx[s * bs:(s + 1) * bs]) for s in range(R)]
+        parts = [_score_local(xb[s * bs:(s + 1) * bs],
+                              u[s * bs:(s + 1) * bs],
+                              idx[s * bs:(s + 1) * bs], lookup, D, cnt,
+                              source, cfg) for s in range(R)]
         moved = jnp.concatenate([p[0] for p in parts])
         want_v = jnp.concatenate([p[1] for p in parts])
     else:
-        moved, want_v = score(xb, u, idx)
+        moved, want_v = _score_local(xb, u, idx, lookup, D, cnt, source,
+                                     cfg)
+
+    if valid is not None:
+        moved = moved & valid[idx]
 
     # proposed moves BEFORE the leaver guard (telemetry: the guard's vetoes
     # are `proposed - moves`); None when disabled so it compiles away.
@@ -286,20 +555,39 @@ def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
         gv = jnp.where(ok[gu], gv, gu)                   # veto unsafe moves
         gx = gx * (gu != gv).astype(jnp.float32)[:, None]
         gw2 = (gu != gv).astype(jnp.float32)
-        D, cnt = _scatter_moves(D, cnt, gu, gv, gx, gw2)
+        # scatter only the rows this shard owns into its D block; cnt is
+        # replicated, so its pair of (k,) scatters runs identically
+        # everywhere.  Same adds in the same gathered-row order as the
+        # emulation's fused full-D scatter, hence bitwise-equal blocks.
+        # Non-owned rows route to the out-of-range sentinel k_loc (negative
+        # indices would WRAP before the drop-mode bounds check).
+        k_loc = D.shape[0]
+        iu, iv = gu - coff, gv - coff
+        iu = jnp.where((iu >= 0) & (iu < k_loc), iu, k_loc)
+        iv = jnp.where((iv >= 0) & (iv < k_loc), iv, k_loc)
+        D = D.at[iu].add(-gx, mode="drop").at[iv].add(gx, mode="drop")
+        cnt = cnt.at[gu].add(-gw2).at[gv].add(gw2)
         moved = moved & ok[u]
         v = jnp.where(moved, want_v, u)
     elif comm is not None:
-        # dense statistics sync: global leaver guard + (k, d) delta psum
+        # dense statistics sync: global leaver guard + delta psum in the
+        # transposed (d, k) layout — same adds in the same order as the
+        # (k, d) scatter (bitwise-equal transposed), but the replicated
+        # all-reduce operand leads with d, which the audit does not track
         leav = jax.ops.segment_sum(moved.astype(jnp.float32), u,
                                    num_segments=k)
         leav = _psum(leav, comm)
         moved = moved & ((cnt - leav) >= 1.0)[u]
         v = jnp.where(moved, want_v, u)
         w = moved.astype(jnp.float32)[:, None]
-        dD = jnp.zeros_like(D).at[u].add(-xb * w).at[v].add(xb * w)
+        k_loc = D.shape[0]
+        gxT = (xb * w).T                                 # (d, B)
+        dD_T = (jnp.zeros((D.shape[1], k), jnp.float32)
+                .at[:, u].add(-gxT).at[:, v].add(gxT))
+        dD_T = _psum(dD_T, comm)
         dc = jnp.zeros_like(cnt).at[u].add(-w[:, 0]).at[v].add(w[:, 0])
-        D = D + _psum(dD, comm)
+        D = D + jax.lax.dynamic_slice(dD_T, (0, coff),
+                                      (D.shape[1], k_loc)).T
         cnt = cnt + _psum(dc, comm)
     else:
         # single device.  The guard blocks all leavers of any cluster whose
@@ -343,9 +631,10 @@ def _move_step(X, assign, D, cnt, moves, idx, lookup, source, cfg, comm):
 # ---------------------------------------------------------------------------
 
 def _epoch_impl(X, state: BKMState, source: CandidateSource, key,
-                cfg: EngineConfig):
+                cfg: EngineConfig, valid=None):
     """One epoch; returns (BKMState, prop) where prop is the epoch's total
-    pre-guard proposed moves (None unless ``cfg.telemetry``)."""
+    pre-guard proposed moves (None unless ``cfg.telemetry``).  ``valid``
+    (optional (n,) bool) masks padded rows out of moves and stats."""
     n = X.shape[0]
     R = cfg.shards
     n_loc = n // R
@@ -365,7 +654,7 @@ def _epoch_impl(X, state: BKMState, source: CandidateSource, key,
         idx = jax.lax.dynamic_slice(orders, (0, i * bs), (R, bs)).reshape(-1)
         assign, D, cnt, moves, p = _move_step(
             X, st.assign, st.D, st.cnt, st.moves, idx, lookup, source, cfg,
-            None)
+            None, valid=valid)
         if prop is not None:
             prop = prop + p
         return BKMState(assign, D, cnt, moves), prop
@@ -375,7 +664,8 @@ def _epoch_impl(X, state: BKMState, source: CandidateSource, key,
 
 @functools.partial(jax.jit, static_argnums=(4,))
 def epoch(X: jax.Array, state: BKMState, source: CandidateSource,
-          key: jax.Array, cfg: EngineConfig = EngineConfig()) -> BKMState:
+          key: jax.Array, cfg: EngineConfig = EngineConfig(),
+          valid=None) -> BKMState:
     """One engine pass over (a shuffled view of) the data in mini-batches.
 
     Visits n // batch_size * batch_size samples (the remainder is covered by
@@ -383,18 +673,18 @@ def epoch(X: jax.Array, state: BKMState, source: CandidateSource,
     epoch-start assignment (refreshing it per batch is a HBM round-trip per
     step; staleness within one epoch matches the sharded semantics).
     """
-    return _epoch_impl(X, state, source, key, cfg)[0]
+    return _epoch_impl(X, state, source, key, cfg, valid)[0]
 
 
 def epoch_inline(X: jax.Array, state: BKMState, source: CandidateSource,
-                 key: jax.Array, cfg: EngineConfig = EngineConfig()
-                 ) -> BKMState:
+                 key: jax.Array, cfg: EngineConfig = EngineConfig(),
+                 valid=None) -> BKMState:
     """``epoch`` without the jit wrapper — for composition inside an outer
     trace.  The graph builder (``core.graph_build``) runs its guided pass
     through this inside the device-resident tau-round scan; semantics are
     identical to ``epoch`` (including the ``cfg.shards`` R-way emulation
     used by the topology-parity tests)."""
-    return _epoch_impl(X, state, source, key, cfg)[0]
+    return _epoch_impl(X, state, source, key, cfg, valid)[0]
 
 
 def stats_distortion(xsq_total, D, cnt, n) -> jax.Array:
@@ -402,6 +692,17 @@ def stats_distortion(xsq_total, D, cnt, n) -> jax.Array:
     dsq = jnp.sum(D * D, axis=-1)
     objective = jnp.sum(jnp.where(cnt > 0, dsq / jnp.maximum(cnt, 1.0), 0.0))
     return (xsq_total - objective) / n
+
+
+def _stats_distortion_sharded(xsq_total, D_loc, cnt, n, coff, comm: _Comm):
+    """``stats_distortion`` with cluster-sharded D: psum of the per-block
+    partial objective (O(k_loc·d) per shard, O(1) wire)."""
+    k_loc = D_loc.shape[0]
+    cnt_loc = jax.lax.dynamic_slice(cnt, (coff,), (k_loc,))
+    dsq = jnp.sum(D_loc * D_loc, axis=-1)
+    obj = jnp.sum(jnp.where(cnt_loc > 0, dsq / jnp.maximum(cnt_loc, 1.0),
+                            0.0))
+    return (xsq_total - _psum(obj, comm)) / n
 
 
 def _epoch_telemetry(tel, t, st, prop, dist):
@@ -416,9 +717,14 @@ def _epoch_telemetry(tel, t, st, prop, dist):
                           distortion=dist, hit_rate=hit)
 
 
-def _run_impl(X, state, source, key, cfg):
-    n = X.shape[0]
-    xsq_total = jnp.sum(jnp.square(X.astype(jnp.float32)))   # hoisted once
+def _run_impl(X, state, source, key, cfg, valid=None):
+    if valid is None:
+        n = X.shape[0]
+        xsq_total = jnp.sum(jnp.square(X.astype(jnp.float32)))  # hoisted once
+    else:
+        vf = valid.astype(jnp.float32)
+        n = jnp.sum(vf)
+        xsq_total = jnp.sum(jnp.square(X.astype(jnp.float32) * vf[:, None]))
     hist0 = jnp.full((cfg.iters,), jnp.nan, jnp.float32)
     mhist0 = jnp.zeros((cfg.iters,), jnp.int32)
     tel0 = obs_tel.init(cfg.iters) if cfg.telemetry else None
@@ -434,7 +740,7 @@ def _run_impl(X, state, source, key, cfg):
     def body(carry):
         t, st, hist, mhist, tel, _ = carry
         st, prop = _epoch_impl(X, st, source, jax.random.fold_in(key, t),
-                               cfg)
+                               cfg, valid)
         dist = stats_distortion(xsq_total, st.D, st.cnt, n)
         hist = hist.at[t].set(dist)
         mhist = mhist.at[t].set(st.moves)
@@ -455,7 +761,7 @@ _run_plain = jax.jit(_run_impl, static_argnums=(4,))
 
 
 def run(X: jax.Array, state: BKMState, source: CandidateSource,
-        key: jax.Array, cfg: EngineConfig
+        key: jax.Array, cfg: EngineConfig, valid=None
         ) -> Tuple[BKMState, jax.Array, jax.Array, jax.Array, jax.Array,
                    Optional[obs_tel.Telemetry]]:
     """Device-resident multi-epoch run (state buffers donated on accelerators).
@@ -472,11 +778,11 @@ def run(X: jax.Array, state: BKMState, source: CandidateSource,
     not one per epoch.
     """
     f = _run_plain if jax.default_backend() == "cpu" else _run_donate
-    return f(X, state, source, key, cfg)
+    return f(X, state, source, key, cfg, valid)
 
 
 def run_inline(X: jax.Array, state: BKMState, source: CandidateSource,
-               key: jax.Array, cfg: EngineConfig
+               key: jax.Array, cfg: EngineConfig, valid=None
                ) -> Tuple[BKMState, jax.Array, jax.Array, jax.Array,
                           jax.Array, Optional[obs_tel.Telemetry]]:
     """``run`` without buffer donation — safe under vmap / an outer trace.
@@ -485,7 +791,7 @@ def run_inline(X: jax.Array, state: BKMState, source: CandidateSource,
     itself mapped (e.g. ``kv_cluster`` vmaps a run per cache slice), where
     the donated-state variant would be inlined and its donation dropped.
     """
-    return _run_plain(X, state, source, key, cfg)
+    return _run_plain(X, state, source, key, cfg, valid)
 
 
 # ---------------------------------------------------------------------------
@@ -493,8 +799,16 @@ def run_inline(X: jax.Array, state: BKMState, source: CandidateSource,
 # ---------------------------------------------------------------------------
 
 def sharded_epoch_body(X, source: CandidateSource, assign, D, cnt, key, *,
-                       cfg: EngineConfig, data_axes: Tuple[str, ...]):
-    """One epoch inside shard_map: X/G/assign row-sharded, (D, cnt) replicated.
+                       cfg: EngineConfig, data_axes: Tuple[str, ...],
+                       coff, valid=None):
+    """One epoch inside shard_map: X/G/assign row-sharded, D cluster-sharded.
+
+    ``D`` is this shard's (k_loc, d) block of composite vectors — global
+    cluster rows [coff, coff + k_loc) — while ``cnt`` stays the replicated
+    (k,).  ``coff`` must be data-derived (e.g. the first element of a
+    sharded ``arange(k)``), never ``axis_index`` (XLA:CPU forced-host
+    partitioning hazard).  ``valid`` is the optional (n_loc,) padded-row
+    mask.
 
     Returns (assign, D, cnt, moves, prop) — ``moves``/``prop`` are psum'd
     global accepted/pre-guard-proposed counts (``prop`` is None unless
@@ -524,7 +838,8 @@ def sharded_epoch_body(X, source: CandidateSource, assign, D, cnt, key, *,
         assign_l, D, cnt, moves, prop = carry
         idx = jax.lax.dynamic_slice(order, (i * bs,), (bs,))
         assign_l, D, cnt, moves, p = _move_step(
-            X, assign_l, D, cnt, moves, idx, lookup, source, cfg, comm)
+            X, assign_l, D, cnt, moves, idx, lookup, source, cfg, comm,
+            coff=coff, valid=valid)
         if prop is not None:
             prop = prop + p
         return assign_l, D, cnt, moves, prop
@@ -536,13 +851,15 @@ def sharded_epoch_body(X, source: CandidateSource, assign, D, cnt, key, *,
 
 
 def sharded_run_body(X, source: CandidateSource, assign, D, cnt, key, *,
-                     cfg: EngineConfig, data_axes: Tuple[str, ...]):
+                     cfg: EngineConfig, data_axes: Tuple[str, ...],
+                     coff, valid=None):
     """The full multi-epoch run inside ONE shard_map trace over the mesh.
 
     The sharded twin of ``_run_impl``: a ``lax.while_loop`` over epochs with
-    ``sharded_epoch_body`` as the body, per-epoch distortion in O(k·d) from
-    the replicated running statistics (the global ``sum||x||²`` term psum'd
-    once and hoisted out of the loop), move history, and the
+    ``sharded_epoch_body`` as the body, per-epoch distortion in O(k_loc·d)
+    per shard from the cluster-sharded running statistics (the global
+    ``sum||x||²`` term psum'd once and hoisted out of the loop), move
+    history, and the
     ``min_move_frac`` early stop — all in-trace, so a run costs one host
     sync across the whole mesh instead of one per epoch.
 
@@ -557,15 +874,22 @@ def sharded_run_body(X, source: CandidateSource, assign, D, cnt, key, *,
     ``fold_in`` key schedule, same visit order, same scatter arithmetic).
     """
     comm = _Comm(tuple(data_axes))
-    n = _psum(jnp.asarray(X.shape[0], jnp.float32), comm)
-    xsq_total = _psum(jnp.sum(jnp.square(X.astype(jnp.float32))), comm)
+    if valid is None:
+        n = _psum(jnp.asarray(X.shape[0], jnp.float32), comm)
+        xsq_total = _psum(jnp.sum(jnp.square(X.astype(jnp.float32))), comm)
+    else:
+        vf = valid.astype(jnp.float32)
+        n = _psum(jnp.sum(vf), comm)
+        xsq_total = _psum(
+            jnp.sum(jnp.square(X.astype(jnp.float32) * vf[:, None])), comm)
     hist0 = jnp.full((cfg.iters,), jnp.nan, jnp.float32)
     mhist0 = jnp.zeros((cfg.iters,), jnp.int32)
     tel0 = obs_tel.init(cfg.iters) if cfg.telemetry else None
     thresh = cfg.min_move_frac * n
     if cfg.iters == 0:     # static: a 0-length hist cannot be .at[t]-traced
         return (assign, D, cnt, hist0, mhist0, jnp.zeros((), jnp.int32),
-                stats_distortion(xsq_total, D, cnt, n), tel0)
+                _stats_distortion_sharded(xsq_total, D, cnt, n, coff, comm),
+                tel0)
 
     def cond(carry):
         t, _, _, _, _, _, _, done = carry
@@ -575,8 +899,8 @@ def sharded_run_body(X, source: CandidateSource, assign, D, cnt, key, *,
         t, assign_l, D_, cnt_, hist, mhist, tel, _ = carry
         assign_l, D_, cnt_, moves, prop = sharded_epoch_body(
             X, source, assign_l, D_, cnt_, jax.random.fold_in(key, t),
-            cfg=cfg, data_axes=data_axes)
-        dist = stats_distortion(xsq_total, D_, cnt_, n)
+            cfg=cfg, data_axes=data_axes, coff=coff, valid=valid)
+        dist = _stats_distortion_sharded(xsq_total, D_, cnt_, n, coff, comm)
         hist = hist.at[t].set(dist)
         mhist = mhist.at[t].set(moves)
         if tel is not None:
@@ -589,5 +913,5 @@ def sharded_run_body(X, source: CandidateSource, assign, D, cnt, key, *,
         cond, body,
         (jnp.zeros((), jnp.int32), assign, D, cnt, hist0, mhist0, tel0,
          jnp.zeros((), bool)))
-    final = stats_distortion(xsq_total, D, cnt, n)
+    final = _stats_distortion_sharded(xsq_total, D, cnt, n, coff, comm)
     return assign, D, cnt, hist, mhist, t, final, tel

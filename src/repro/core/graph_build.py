@@ -23,15 +23,20 @@ Topology follows the ``ShardedEngine`` conventions (``core.distributed``):
 rows and their graph rows are sharded over the mesh's data axes and every
 merge is a local update of the owning shard's rows.  X is all-gathered ONCE
 per build (candidate vectors may live on any shard, so candidate distances
-are computed locally against the replicated copy); the 2M tree and the
-member table are computed replicated — they need global sorts, and every
-shard derives bit-identical results from the same replicated inputs — while
-the guided engine pass runs genuinely sharded through
-``engine.sharded_epoch_body`` (one assignment all-gather per round).  A
-sharded build therefore performs O(1) host syncs (transfer-guard-enforced)
-and matches the single-device build bit-exactly when the single-device
-config emulates the mesh's R-way visit order (``GraphBuildConfig.shards``),
-exactly like the engine's topology-parity contract.
+are computed locally against the replicated copy).  The 2M tree is the
+genuinely distributed ``two_means_dist`` bisection: each level psums
+per-shard (256, k)-digit projection histograms and splits at the weighted
+median, so rows stay sharded and the tree state is O(k) scalars per shard —
+no ``lax.sort`` over a replicated (n_pad,) array survives.  The member
+table is likewise shard-local (``members_table_local``): each shard tables
+its OWN rows' cluster slots plus a deterministic spill list, and the round
+exchanges only the transposed (cap_loc, k) slices and (spill,) lists.  The
+guided engine pass runs sharded through ``engine.sharded_epoch_body`` (one
+assignment all-gather per round).  A sharded build therefore performs O(1)
+host syncs (transfer-guard-enforced) and matches the single-device build
+bit-exactly when the single-device config emulates the mesh's R-way visit
+order (``GraphBuildConfig.shards``), exactly like the engine's
+topology-parity contract.
 
 Padding: the partition source pads n up to ``k0 * xi`` with phantom copies
 of random rows.  Phantom rows participate as candidate *providers* (mapped
@@ -39,7 +44,9 @@ to their real id and deduped) and maintain their own throwaway lists, which
 keeps every merge a conflict-free per-row update; rows beyond a cluster's
 fixed capacity are absent from the member table for that round (counted in
 ``BuildDiagnostics.overflow``) but still refine their own list against the
-members that are present.
+members that are present, and the first ``GraphBuildConfig.spill`` overflow
+rows per shard are re-offered to every row as extra candidates (the
+deterministic spill list), so capacity pressure degrades recall gracefully.
 """
 from __future__ import annotations
 
@@ -50,8 +57,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import engine
-from repro.core.knn_graph import KnnGraph, members_table, merge_topk
-from repro.core.two_means import two_means_scan
+from repro.core.knn_graph import KnnGraph, members_table_local, merge_topk
+from repro.core.two_means import _TreeTopo, two_means_dist
 from repro.kernels import ops as kops
 from repro.obs import telemetry as obs_tel
 
@@ -99,6 +106,7 @@ class GraphBuildConfig(NamedTuple):
     #                             KNN builders' random init; closure k-means
     #                             turns it off to keep pure leaf-mate lists)
     telemetry: bool = False     # per-round Telemetry in BuildDiagnostics
+    spill: int = 8              # per-shard deterministic overflow spill width
 
 
 def _next_pow2(v: int) -> int:
@@ -180,53 +188,100 @@ def _refine_rows(x_own, rows, cand_ids, g_ids, g_d, Xsrc, chunk, force):
     return ids[:B], d[:B]
 
 
+def _guided_stats(X, assign, k0, topo: _TreeTopo):
+    """Guided-pass cluster stats, both topologies: transposed (d, k0)
+    composite sums combined in FIXED shard order (all-gather + ordered sum
+    — bit-exact across topologies, unlike an unordered float psum) plus
+    order-invariant int counts.  Never materialises a replicated (k0, d)
+    operand in the sharded trace."""
+    Xf = X.astype(jnp.float32)
+    onehot = (assign[:, None] == jnp.arange(k0, dtype=jnp.int32)[None, :]
+              ).astype(jnp.float32)
+    D_T = topo.fsum_blocks(lambda xb, ob: xb.T @ ob, Xf, onehot)
+    cnt = topo.isum(jax.ops.segment_sum(jnp.ones(assign.shape, jnp.int32),
+                                        assign, num_segments=k0))
+    return D_T, cnt.astype(jnp.float32)
+
+
 def _partition_round(X_full, X_loc, row_ids, real_id, own_real, g_ids, g_d,
                      key, t, *, cfg, k0, comm, data_axes):
-    """One Alg. 3 round: 2M-tree partition (+ guided pass) -> member table
-    -> per-row refinement.  Tree and table replicated; refine local."""
+    """One Alg. 3 round: distributed 2M-tree partition (+ guided pass) ->
+    shard-local member table -> per-row refinement.
+
+    Rows stay sharded end to end: the tree is the histogram/radix-median
+    ``two_means_dist`` (O(k0) replicated state), the guided pass runs with
+    cluster-sharded centroid stats, and every shard contributes its own
+    (cap/R, k0) member-table slice.  The single-device emulation
+    (``cfg.shards=R``) blocks its rows the same way, so builds stay
+    bit-exact across topologies.
+    """
     k1, k2 = jax.random.split(key)
-    assign = two_means_scan(X_full, k0, k1)                # replicated
+    B = X_loc.shape[0]
+    R = X_full.shape[0] // B if comm is not None else cfg.shards
+    topo = _TreeTopo(R, data_axes if comm is not None else None)
+    assign = two_means_dist(X_loc, row_ids, k0, k1, shards=R,
+                            data_axes=topo.axes)
     moves = jnp.zeros((), jnp.int32)
     if cfg.guided:
         # the intertwined evolving step: one graph-guided engine pass.
         # Neighbour ids are real ids (< n), which are also valid padded rows.
         # Round 0 keeps the pure tree partition (the graph is still near
-        # random): single-device skips the pass outright (lax.cond); the
-        # sharded pass runs unconditionally and is select-discarded so the
-        # collective schedule is identical on every scan iteration — both
-        # topologies leave round 0 on the tree partition, preserving parity.
+        # random): BOTH topologies now skip the pass outright via lax.cond
+        # — the replicated round index selects the same branch on every
+        # shard, so the collective schedule stays SPMD-consistent and the
+        # round-0 "run + select-discard" phantom pass is gone.
+        source = engine.graph_source(g_ids)
         ecfg = engine.EngineConfig(
             batch_size=cfg.bkm_batch, sparse_updates=True,
             shards=cfg.shards if comm is None else 1, force=cfg.force)
-        source = engine.graph_source(g_ids)
         if comm is None:
             def _guided(a):
-                st = engine.init_state(X_full, a, k0)
+                D_T, cnt = _guided_stats(X_loc, a, k0, topo)
+                st = engine.BKMState(a.astype(jnp.int32), D_T.T, cnt,
+                                     jnp.zeros((), jnp.int32))
                 st = engine.epoch_inline(X_full, st, source, k2, ecfg)
                 return st.assign, st.moves
-            assign, moves = jax.lax.cond(
-                t > 0, _guided, lambda a: (a, jnp.zeros((), jnp.int32)),
-                assign)
         else:
-            from repro.core.objective import cluster_stats
-            stats = cluster_stats(X_full, assign, k0)      # replicated
-            local = assign[row_ids]
-            local, _, _, moves, _ = engine.sharded_epoch_body(
-                X_loc, source, local, stats.D, stats.cnt, k2, cfg=ecfg,
-                data_axes=data_axes)
-            guided_assign = engine._all_gather(local, comm)
-            assign = jnp.where(t > 0, guided_assign, assign)
-            moves = jnp.where(t > 0, moves, 0)
+            k0_loc = k0 // R
+            coff = (row_ids[0] // B) * k0_loc
+
+            def _guided(a):
+                D_T, cnt = _guided_stats(X_loc, a, k0, topo)
+                D_loc = jax.lax.dynamic_slice(
+                    D_T, (0, coff), (D_T.shape[0], k0_loc)).T
+                local, _, _, mv, _ = engine.sharded_epoch_body(
+                    X_loc, source, a, D_loc, cnt, k2, cfg=ecfg,
+                    data_axes=data_axes, coff=coff)
+                return local, mv
+        assign, moves = jax.lax.cond(t > 0, _guided,
+                                     lambda a: (a, moves), assign)
     cap = cfg.cap_factor * cfg.xi
-    table, overflow = members_table(assign, k0, cap)       # replicated
-    cand_rows = table[assign[row_ids]]                     # (B, cap)
+    spill = cfg.spill
+    if comm is not None:
+        tT, sp, ovf = members_table_local(assign, row_ids, k0, cap // R,
+                                          spill)
+        table_T = engine._all_gather(tT, comm)               # (cap, k0)
+        spill_ids = engine._all_gather(sp, comm)             # (R*spill,)
+        overflow = engine._psum(ovf, comm)
+    else:
+        bl = lambda x: x.reshape((R, -1) + x.shape[1:])
+        tT, sp, ovf = jax.vmap(
+            lambda a, p: members_table_local(a, p, k0, cap // R, spill)
+        )(bl(assign), bl(row_ids))
+        table_T = tT.reshape(cap, k0)
+        spill_ids = sp.reshape(R * spill)
+        overflow = jnp.sum(ovf, dtype=jnp.int32)
+    cand_rows = jnp.take(table_T, assign, axis=1).T          # (B, cap)
+    spill_b = jnp.broadcast_to(spill_ids[None, :],
+                               (B, spill_ids.shape[0]))
+    cand_rows = jnp.concatenate([cand_rows, spill_b], axis=1)
     cand_ids = jnp.where(cand_rows >= 0,
                          real_id[jnp.maximum(cand_rows, 0)], -1)
     # mask self and phantoms of self; phantom dupes dedupe in the merge
     cand_ids = jnp.where(cand_ids == own_real[:, None], -1, cand_ids)
     g_ids, g_d = _refine_rows(X_loc, jnp.maximum(cand_rows, 0), cand_ids,
                               g_ids, g_d, X_full, cfg.chunk, cfg.force)
-    return g_ids, g_d, overflow.astype(jnp.int32), moves
+    return g_ids, g_d, overflow, moves
 
 
 def _descent_round(X_full, X_loc, row_ids, own_real, g_ids, g_d, key, *,
@@ -357,6 +412,11 @@ def build_graph(X: jax.Array, key: jax.Array, cfg: GraphBuildConfig
     making the result bit-exact against a ``GraphBuilder`` build on an
     R-device mesh (the topology-parity contract of ``core.engine``).
     """
+    if cfg.source == "partition" and cfg.shards > 1:
+        k0, n_pad = _plan(X.shape[0], cfg)
+        assert n_pad % cfg.shards == 0
+        assert (cfg.cap_factor * cfg.xi) % cfg.shards == 0
+        assert not cfg.guided or k0 % cfg.shards == 0
     return _build_single(X, key, cfg)
 
 
@@ -395,6 +455,14 @@ class GraphBuilder:
         assert n_pad % self.shards == 0, (
             f"padded rows {n_pad} must divide the {self.shards}-way mesh "
             "(see distributed.usable_rows for the descent source)")
+        if cfg.source == "partition":
+            cap = cfg.cap_factor * cfg.xi
+            assert cap % self.shards == 0, (
+                f"member-table capacity {cap} must divide the "
+                f"{self.shards}-way mesh (per-shard table slices)")
+            assert not cfg.guided or k0 % self.shards == 0, (
+                f"k0={k0} must divide the {self.shards}-way mesh for the "
+                "cluster-sharded guided pass (raise xi or shrink the mesh)")
         from jax.sharding import PartitionSpec as P
         from jax.experimental.shard_map import shard_map
         row, rep = P(self.data_axes), P()

@@ -134,6 +134,50 @@ def members_table(assign: jax.Array, k: int, cap: int
     return flat[: k * cap].reshape(k, cap), overflow
 
 
+def members_table_local(assign_loc: jax.Array, pos: jax.Array, k: int,
+                        cap_loc: int, spill: int
+                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """One shard's slice of a distributed member table, transposed.
+
+    ``assign_loc``/``pos`` are the shard's local assignments and GLOBAL
+    padded row ids.  Each cluster keeps the shard's first ``cap_loc`` local
+    members in assignment-stable local order; the global table is the
+    shard-major concatenation of these slices (all-gather of the (cap_loc,
+    k) transposed layout — the leading dim stays off the replication
+    audit's tracked roles, unlike the old replicated (k, cap) table).
+
+    Returns (table_T (cap_loc, k) int32 global row ids with -1 padding,
+    spill (spill,) int32, overflow () int32).  The spill list is the
+    DETERMINISTIC overflow remedy: the shard's first ``spill`` overflow
+    rows in the same stable (cluster, local position) order — the builder
+    gathers all shards' spill lists and offers them to every row as
+    candidates, so capped-out members degrade recall gracefully instead of
+    vanishing for the round.  ``overflow`` counts ALL rows beyond the caps
+    (spilled rows included: they are still absent from the member table).
+    """
+    B = assign_loc.shape[0]
+    order = jnp.argsort(assign_loc, stable=True).astype(jnp.int32)
+    a_sorted = assign_loc[order]
+    cnt = jax.ops.segment_sum(jnp.ones((B,), jnp.int32), assign_loc,
+                              num_segments=k)
+    start = jnp.cumsum(cnt) - cnt
+    rank = jnp.arange(B, dtype=jnp.int32) - start[a_sorted]
+    valid = rank < cap_loc
+    gids = pos[order].astype(jnp.int32)
+    slot = jnp.where(valid, rank * k + a_sorted, cap_loc * k)
+    flat = jnp.full((cap_loc * k + 1,), -1, jnp.int32).at[slot].set(gids)
+    # stable overflow rank WITHOUT a (B,) cumsum (XLA tiles that as a 2D
+    # reduce_window whose shape collides with the replication audit's
+    # tracked dims): overflow rows of cluster c rank after the overflow of
+    # clusters < c, offset by their within-cluster position past the cap.
+    o_c = jnp.maximum(cnt - cap_loc, 0)
+    ovf_rank = (jnp.cumsum(o_c) - o_c)[a_sorted] + rank - cap_loc
+    sslot = jnp.where(~valid & (ovf_rank < spill), ovf_rank, spill)
+    sflat = jnp.full((spill + 1,), -1, jnp.int32).at[sslot].set(gids)
+    return (flat[: cap_loc * k].reshape(cap_loc, k), sflat[:spill],
+            jnp.sum(~valid, dtype=jnp.int32))
+
+
 # ---------------------------------------------------------------------------
 # Alg. 3 top level — thin adapter over core.graph_build
 # ---------------------------------------------------------------------------

@@ -121,3 +121,229 @@ def two_means_tree(X: jax.Array, k: int, key: jax.Array,
     Jitted wrapper of ``two_means_scan``.
     """
     return two_means_scan(X, k, key, refine_iters)
+
+
+# ---------------------------------------------------------------------------
+# distributed equal-size bisection — histogram medians, O(k) replicated state
+# ---------------------------------------------------------------------------
+#
+# ``two_means_scan`` realises the equal split with a stable global sort over
+# the full (n,) permutation, which a sharded build can only run replicated.
+# ``two_means_dist`` is the same level-synchronous bisection re-expressed so
+# rows stay sharded and the only replicated state is O(k):
+#
+#   seeds     two random members per cluster, picked by a per-level salted
+#             integer hash of the GLOBAL row id (min-hash with row-id
+#             tie-break — min reductions are order-invariant, so the psum
+#             combine is exact); their vectors are recovered with an
+#             owner-masked (d, k) matmul whose psum reduces owner + zeros.
+#   refine    plain 2-means Lloyd steps on the discriminant sign (the paper
+#             runs 2-means first and adjusts to equal size after); per-
+#             cluster sums travel transposed as (d, k) per-shard partials
+#             combined in FIXED shard order (all-gather + ordered sum), so
+#             both topologies add the same blocks in the same order.
+#   split     the paper's "adjust to equal size": an EXACT distributed
+#             median — 8-round radix select over the composite 64-bit key
+#             (monotone-u32(delta) ‖ row id) using (k, 256) int32 histogram
+#             psums.  The composite key is unique per row, so every cluster
+#             splits exactly in half, deterministically, with no sort.
+#
+# Every cross-shard combine is either order-invariant (int sums, mins) or
+# explicitly ordered (float block sums), so a single-device caller that
+# blocks its rows the same way (``shards=R, data_axes=None``) reproduces the
+# mesh result bit-exactly — the graph builder's topology-parity contract.
+
+_MASK8 = jnp.uint32(0xFF)
+_UMAX = jnp.uint32(0xFFFFFFFF)
+
+
+def _mix32(x):
+    """murmur3 fmix32 — a cheap per-row hash of (global row id ^ salt)."""
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x85EBCA6B)
+    x = x ^ (x >> 13)
+    x = x * jnp.uint32(0xC2B2AE35)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _monotone_u32(f):
+    """Order-preserving f32 -> u32 key (IEEE-754 total order trick)."""
+    b = jax.lax.bitcast_convert_type(f, jnp.uint32)
+    return jnp.where((b >> 31) == 0, b | jnp.uint32(0x80000000), ~b)
+
+
+class _TreeTopo:
+    """Cross-shard combines of the distributed tree, emulation-aware.
+
+    ``data_axes`` set -> real collectives inside shard_map; None -> the
+    single-device emulation of an R-way mesh (rows blocked contiguously the
+    way the row sharding would slice them).  Int sums and mins are
+    order-invariant, so the emulation computes them globally; float sums go
+    through ``fsum_blocks`` which materialises the SAME (R, d, k) stacked
+    partials in both topologies and reduces them in shard order.
+    """
+
+    def __init__(self, shards, data_axes):
+        self.R = shards
+        self.axes = tuple(data_axes) if data_axes else None
+
+    def isum(self, x):
+        if self.axes:
+            return jax.lax.psum(x, self.axes)
+        return x
+
+    def umin(self, x):
+        if self.axes:
+            return jax.lax.pmin(x, self.axes)
+        return x
+
+    def seg_min(self, vals, seg, k):
+        return self.umin(jax.ops.segment_min(vals, seg, num_segments=k))
+
+    def seg_isum(self, vals, seg, k):
+        return self.isum(jax.ops.segment_sum(vals, seg, num_segments=k))
+
+    def fsum_blocks(self, partial_fn, *rows):
+        """Ordered float combine of per-shard (d, k) partials."""
+        if self.axes:
+            g = p = partial_fn(*rows)
+            for ax in self.axes:
+                g = jax.lax.all_gather(g, ax, tiled=False)
+            g = g.reshape((-1,) + p.shape)
+            return jnp.sum(g, axis=0)
+        if self.R == 1:
+            return partial_fn(*rows)
+        blocked = [a.reshape((self.R, -1) + a.shape[1:]) for a in rows]
+        return jnp.sum(jax.vmap(partial_fn)(*blocked), axis=0)
+
+    def owner_fsum(self, x):
+        """psum whose every element is owner-value + zeros (exact)."""
+        if self.axes:
+            return jax.lax.psum(x, self.axes)
+        return x
+
+
+def _radix_left(ukey, pos_u, seg, k, r, active, topo: _TreeTopo):
+    """Exact per-cluster rank select: mark the r[c] smallest composite keys.
+
+    Composite key = (ukey ‖ pos_u), processed high byte first over 8 rounds
+    of (256, k) int32 histogram psums — digit-major, so the replicated
+    radix state never carries a (k, ·) leading dim.  Row ids are unique, so
+    the key is a total order and exactly r[c] rows of every cluster come
+    back True.
+    """
+    left = jnp.zeros(seg.shape, bool)
+    for rnd in range(8):
+        word = ukey if rnd < 4 else pos_u
+        shift = jnp.uint32(8 * (3 - (rnd % 4)))
+        digit = ((word >> shift) & _MASK8).astype(jnp.int32)
+        flat = digit * k + seg
+        hist = jnp.zeros((256 * k,), jnp.int32).at[flat].add(
+            active.astype(jnp.int32)).reshape(256, k)
+        hist = topo.isum(hist)
+        # running count via a lower-triangular dot, NOT jnp.cumsum: XLA
+        # lowers a major-axis cumsum through reduce_window in the (k, 256)
+        # orientation, rematerialising exactly the k-leading replicated
+        # shapes this layout avoids.  f32 accumulation is exact for counts
+        # below 2^24 (n_glob is asserted against that bound).
+        tri = jnp.tril(jnp.ones((256, 256), jnp.float32))
+        cum = (tri @ hist.astype(jnp.float32)).astype(jnp.int32)
+        dstar = jnp.argmax(cum > r[None, :], axis=0).astype(jnp.int32)
+        below = jnp.take_along_axis(cum - hist, dstar[None, :], 0)[0]
+        ds_row = dstar[seg]
+        left = left | (active & (digit < ds_row))
+        active = active & (digit == ds_row)
+        r = r - below
+    return left
+
+
+def _seed_pos(h, pos_u, seg, k, topo: _TreeTopo, exclude=None):
+    """Global row id of the min-hash member per cluster (row-id tie-break)."""
+    hx = h if exclude is None else jnp.where(pos_u == exclude[seg], _UMAX, h)
+    hmin = topo.seg_min(hx, seg, k)
+    cand = jnp.where(hx == hmin[seg], pos_u, _UMAX)
+    if exclude is not None:
+        cand = jnp.where(pos_u == exclude[seg], _UMAX, cand)
+    return topo.seg_min(cand, seg, k)
+
+
+def two_means_dist(X_loc: jax.Array, row_ids: jax.Array, k: int,
+                   key: jax.Array, *, shards: int = 1, data_axes=None,
+                   refine_iters: int = 4) -> jax.Array:
+    """Distributed equal-size 2M tree over row-sharded data.
+
+    X_loc (B, d) / row_ids (B,) are this shard's rows of the padded layout
+    (``data_axes`` set, inside shard_map) or the full array (``data_axes``
+    None; ``shards=R`` emulates the R-way mesh bit-exactly, ``shards=1`` is
+    the plain single-device tree).  Returns the local assign (B,) into k
+    equal-size clusters.  k must be a power of two and divide the GLOBAL
+    row count; every level's replicated state is O(k * 256) ints and
+    (d, k) floats — no global sort, no (n,) replicated array.
+    """
+    assert _is_pow2(k), f"k={k} must be a power of two (see pad_plan)"
+    topo = _TreeTopo(shards, data_axes)
+    n_glob = X_loc.shape[0] * (topo.R if data_axes else 1)
+    assert n_glob % k == 0, f"padded n={n_glob} must be divisible by k={k}"
+    assert n_glob < 2 ** 24, \
+        f"n={n_glob} overflows the radix select's f32-exact count range"
+    levels = k.bit_length() - 1
+    Xf = X_loc.astype(jnp.float32)
+    pos_u = row_ids.astype(jnp.uint32)
+    if levels == 0:
+        return jnp.zeros(row_ids.shape, jnp.int32)
+
+    def seed_vec_T(pos_c):
+        mask = (pos_u[:, None] == pos_c[None, :]).astype(jnp.float32)
+        return topo.owner_fsum(Xf.T @ mask)                  # (d, k)
+
+    def level(seg, lvl):
+        m = jnp.int32(n_glob) >> lvl
+        half = m >> 1
+        onehot = (seg[:, None] == jnp.arange(k, dtype=jnp.int32)[None, :]
+                  ).astype(jnp.float32)                      # (B, k)
+        tot_T = topo.fsum_blocks(lambda xb, ob: xb.T @ ob, Xf, onehot)
+        cntc = topo.seg_isum(jnp.ones(seg.shape, jnp.int32), seg, k)
+
+        kl = jax.random.fold_in(key, lvl)
+        salts = jax.random.bits(kl, (2,), dtype=jnp.uint32)
+        pos1 = _seed_pos(_mix32(pos_u ^ salts[0]), pos_u, seg, k, topo)
+        pos2 = _seed_pos(_mix32(pos_u ^ salts[1]), pos_u, seg, k, topo,
+                         exclude=pos1)
+        c1_T, c2_T = seed_vec_T(pos1), seed_vec_T(pos2)
+
+        def delta_of(c1_T, c2_T):
+            # ||x-c1||² - ||x-c2||² = 2 x.(c2-c1) + ||c1||² - ||c2||²;
+            # the direction stays in the untracked (d, k) layout and is
+            # gathered per row along its minor axis (never a (k, d) operand)
+            dir_rows = jnp.take(c2_T - c1_T, seg, axis=1).T  # (B, d)
+            off = jnp.sum(c1_T * c1_T, 0) - jnp.sum(c2_T * c2_T, 0)
+            return 2.0 * jnp.sum(Xf * dir_rows, -1) + off[seg]
+
+        r_half = jnp.broadcast_to(half, (k,)).astype(jnp.int32)
+        all_rows = jnp.ones(seg.shape, bool)
+
+        def refine(_, carry):
+            # the same equal-size median split as the final one (mirrors
+            # ``two_means_scan``'s refine, which re-splits at the median
+            # every iteration): new means of the exact halves
+            c1_T, c2_T = carry
+            ukey = _monotone_u32(delta_of(c1_T, c2_T))
+            w = _radix_left(ukey, pos_u, seg, k, r_half, all_rows, topo
+                            ).astype(jnp.float32)
+            s1_T = topo.fsum_blocks(
+                lambda xb, ob, wb: xb.T @ (ob * wb[:, None]), Xf, onehot, w)
+            n1 = topo.seg_isum(w.astype(jnp.int32), seg, k)
+            n1f = jnp.maximum(n1, 1).astype(jnp.float32)
+            n2f = jnp.maximum(cntc - n1, 1).astype(jnp.float32)
+            return s1_T / n1f[None, :], (tot_T - s1_T) / n2f[None, :]
+
+        c1_T, c2_T = jax.lax.fori_loop(0, refine_iters, refine,
+                                       (c1_T, c2_T))
+        ukey = _monotone_u32(delta_of(c1_T, c2_T))
+        left = _radix_left(ukey, pos_u, seg, k, r_half, all_rows, topo)
+        return seg * 2 + jnp.where(left, 0, 1), None
+
+    seg0 = jnp.zeros(row_ids.shape, jnp.int32)
+    seg, _ = jax.lax.scan(level, seg0, jnp.arange(levels, dtype=jnp.int32))
+    return seg

@@ -236,6 +236,29 @@ def merge_shard_topk(ids: jax.Array, part: jax.Array, topk: int):
     return i, d
 
 
+def merge_probe_cells(gd: jax.Array, gi: jax.Array, p: int):
+    """Merge per-shard coarse-probe partials into the global top-p cells.
+
+    gd/gi: (L, q) all-gathered per-shard top-min(p, k_slab) RAW probe
+    partials (``||c||² - 2 q·c``, +inf at slab holes) and global cell ids,
+    L = R * p_loc in shard-major order.  Stays in the transposed (L, q)
+    layout end-to-end — the merged working set never materialises a
+    replicated q-leading 2-D operand wider than p — and selects with the
+    same iterative first-minimum the scan kernels use (``jnp.argmin``
+    returns the first minimum), so for distinct partials the merged probe
+    order is identical to the single-device ``probe_centroids`` ranking.
+    Returns cids (q, p) int32.
+    """
+    q = gd.shape[1]
+    col = jnp.arange(q)
+    outs = []
+    for _ in range(p):
+        j = jnp.argmin(gd, axis=0)              # (q,) first-min over L
+        outs.append(gi[j, col])
+        gd = gd.at[j, col].set(jnp.inf)
+    return jnp.stack(outs, axis=1)
+
+
 def scan_fraction(index: IvfIndex, Q: jax.Array, *, nprobe: int = 8,
                   force: Optional[str] = None) -> float:
     """Mean fraction of packed database rows streamed per query."""

@@ -610,18 +610,158 @@ def test_sharded_ivf_codec_parity_and_single_sync_4dev():
 
 @pytest.mark.slow
 def test_cluster_large_example_indivisible_n_4dev():
-    """examples/cluster_large.py multi-device path: n % n_dev != 0 no longer
-    crashes — remainder rows are truncated from the sharded run (with a
-    warning) and assigned to their nearest centroid post-hoc, and the epoch
-    loop early-stops through ShardedEngine.run (one host sync)."""
+    """examples/cluster_large.py multi-device path: n % n_dev != 0 clusters
+    ALL rows in-engine through ShardedEngine.run's padded-row validity mask
+    (one host sync) — no truncation warning, no post-hoc nearest-centroid
+    remainder pass — and the final distortion matches the single-device run
+    (same data/init/epochs; only the visit order differs)."""
     root = os.path.join(os.path.dirname(__file__), "..")
-    env = dict(os.environ, PYTHONPATH=SRC,
-               XLA_FLAGS="--xla_force_host_platform_device_count=4")
-    r = subprocess.run(
-        [sys.executable, os.path.join(root, "examples", "cluster_large.py"),
-         "--n", "2050", "--k", "64", "--d", "16", "--iters", "3"],
-        capture_output=True, text=True, env=env, timeout=900)
-    assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
-    assert "[warn] n=2050 not divisible by lcm(k=64, 4 devices)" in r.stdout
-    assert "[remainder] 2 rows assigned" in r.stdout
-    assert "one host sync" in r.stdout
+    cmd = [sys.executable, os.path.join(root, "examples", "cluster_large.py"),
+           "--n", "2050", "--k", "64", "--d", "16", "--iters", "3"]
+
+    def run(devices):
+        env = dict(os.environ, PYTHONPATH=SRC,
+                   XLA_FLAGS=f"--xla_force_host_platform_device_count"
+                             f"={devices}")
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           timeout=900)
+        assert r.returncode == 0, (r.stdout[-2000:], r.stderr[-3000:])
+        return r.stdout
+
+    out4 = run(4)
+    assert "[warn]" not in out4 and "[remainder]" not in out4
+    assert "all 2050 rows assigned in-engine" in out4
+    assert "(4 devices, one host sync)" in out4
+    out1 = run(1)
+    assert "all 2050 rows assigned in-engine" in out1
+
+    def final(out):
+        line = [ln for ln in out.splitlines() if ln.startswith("[done]")][0]
+        return float(line.split("->")[1].split()[0])
+
+    d4, d1 = final(out4), final(out1)
+    assert abs(d4 - d1) / d1 < 0.05, (d4, d1)
+
+
+# ---------------------------------------------------------------------------
+# distributed 2M tree: the mesh bisection (histogram medians, O(k) replicated
+# state) is bit-exact vs its single-device shards=R emulation, produces
+# exactly equal-size clusters, and matches the replicated global-sort tree's
+# partition quality.
+# ---------------------------------------------------------------------------
+
+CODE_TREE_PARITY = r"""
+import jax, jax.numpy as jnp, numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+from repro.data import gmm_blobs
+from repro.core.two_means import two_means_dist, two_means_scan
+
+key = jax.random.PRNGKey(3)
+n, d, k, R = 2048, 16, 16, 4
+assert len(jax.devices()) == R
+X = gmm_blobs(key, n, d, 32)
+row_ids = jnp.arange(n, dtype=jnp.int32)
+mesh = jax.make_mesh((R,), ("data",))
+kt = jax.random.fold_in(key, 7)
+
+def body(Xl, rl):
+    return two_means_dist(Xl, rl, k, kt, shards=R, data_axes=("data",))
+
+mesh_fn = jax.jit(shard_map(body, mesh=mesh,
+                            in_specs=(P("data"), P("data")),
+                            out_specs=P("data"), check_rep=False))
+a_mesh = np.asarray(mesh_fn(X, row_ids))
+a_emu = np.asarray(two_means_dist(X, row_ids, k, kt, shards=R))
+np.testing.assert_array_equal(a_mesh, a_emu)   # bit-exact across topologies
+np.testing.assert_array_equal(np.bincount(a_mesh, minlength=k),
+                              np.full(k, n // k))    # exactly equal sizes
+
+def cost(a):
+    Xn = np.asarray(X, np.float32)
+    C = np.stack([Xn[a == c].mean(0) for c in range(k)])
+    return float(np.mean(np.sum((Xn - C[a]) ** 2, axis=1)))
+
+# partition quality in the replicated global-sort tree's ballpark (the
+# algorithms differ — exact equality is impossible; 1.5x covers seed noise)
+c_new = cost(a_mesh)
+c_old = cost(np.asarray(two_means_scan(X, k, kt)))
+assert c_new < 1.5 * c_old, (c_new, c_old)
+
+# shards=1 plain path: still equal-size, still a valid partition
+a1 = np.asarray(two_means_dist(X, row_ids, k, kt))
+np.testing.assert_array_equal(np.bincount(a1, minlength=k),
+                              np.full(k, n // k))
+print("TREE_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_distributed_tree_parity_4dev():
+    """Acceptance: two_means_dist on the mesh == its shards=R emulation
+    bit-exactly; exactly equal cluster sizes; quality matches the replicated
+    global-sort tree it displaced."""
+    r = _run(CODE_TREE_PARITY, devices=4)
+    assert "TREE_PARITY_OK" in r.stdout, r.stderr[-3000:]
+
+
+# ---------------------------------------------------------------------------
+# sharded-centroid assignment with padded rows: ShardedEngine on n % R != 0
+# is bit-exact vs the single-device emulation (zero-padded rows + validity
+# mask) for every candidate kind — the probe/dense candidate exchange and
+# the in-engine mask replace the old truncate-and-assign-remainder protocol.
+# ---------------------------------------------------------------------------
+
+CODE_ENGINE_PAD_PARITY = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.data import gmm_blobs
+from repro.core import two_means_tree, init_state, engine
+from repro.core.distributed import ShardedEngine
+
+key = jax.random.PRNGKey(0)
+n, d, k, R = 2050, 16, 32, 4            # n % R == 2
+assert len(jax.devices()) == R
+X = gmm_blobs(key, n, d, 32)
+n2 = -(-n // k) * k
+a0 = two_means_tree(jnp.concatenate([X, X[: n2 - n]]), k, key)[:n]
+st0 = init_state(X, a0, k)
+g = jax.random.randint(key, (n, 8), 0, n, dtype=jnp.int32)
+mesh = jax.make_mesh((R,), ("data",))
+iters = 3
+n_pad = -(-n // R) * R
+valid = jnp.arange(n_pad) < n
+Xp = jnp.concatenate([X, jnp.zeros((n_pad - n, d), X.dtype)])
+gp = jnp.concatenate([g, jnp.zeros((n_pad - n, 8), jnp.int32)])
+ap = jnp.concatenate([a0, jnp.zeros((n_pad - n,), jnp.int32)])
+
+for kind, src in (("graph", engine.graph_source(gp)),
+                  ("dense", engine.dense_source()),
+                  ("probe", engine.probe_source(8))):
+    cfg = engine.EngineConfig(batch_size=128, iters=iters,
+                              min_move_frac=-1.0, sparse_updates=True)
+    eng = ShardedEngine(mesh, cfg, kind=kind, probe_p=8)
+    assign, D, cnt, hist, mhist, epochs, final, _ = jax.device_get(
+        eng.run(X, g, st0.assign, st0.D, st0.cnt, key))
+    assert assign.shape == (n,), assign.shape
+    assert int(cnt.sum()) == n, kind    # every real row assigned, no ghosts
+
+    stp = engine.BKMState(ap, st0.D, st0.cnt, jnp.int32(0))
+    st1, hist1, mhist1, epochs1, final1, _ = jax.device_get(
+        engine.run_inline(Xp, stp, src, key, cfg._replace(shards=R),
+                          valid=valid))
+    np.testing.assert_array_equal(assign, st1.assign[:n], err_msg=kind)
+    np.testing.assert_array_equal(cnt, st1.cnt, err_msg=kind)
+    np.testing.assert_array_equal(D, st1.D, err_msg=kind)
+    np.testing.assert_array_equal(mhist, mhist1, err_msg=kind)
+    np.testing.assert_allclose(hist, hist1, rtol=1e-5, err_msg=kind)
+print("PAD_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_engine_padded_rows_parity_4dev():
+    """Acceptance: n % R != 0 through ShardedEngine.run == the zero-pad +
+    validity-mask emulation bit-exactly for graph/dense/probe kinds; padded
+    rows contribute nothing to counts, stats, or move histories."""
+    r = _run(CODE_ENGINE_PAD_PARITY, devices=4)
+    assert "PAD_PARITY_OK" in r.stdout, r.stderr[-3000:]
